@@ -1,0 +1,51 @@
+"""Paper Fig 6: bandwidth-capacity scaling curves at three input scales
+(1x / 2x / 4x tokens), per architecture. The derived column reports the
+traffic fraction captured by the hottest 25% of the footprint and whether
+the curve is scale-invariant (the paper's key observation for HPL/Hypre vs
+the shifting BFS curve; here: dense archs are invariant, MoE serve curves
+shift with token count because expert activation saturates)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import configs
+from repro.common.config import SHAPES
+from repro.core import access as acc
+from repro.runtime import serve as serve_rt
+from benchmarks.common import emit, timed
+
+
+def hot_frac(profile, x=0.25):
+    xs, ys = acc.bandwidth_capacity_curve(profile)
+    return float(np.interp(x, xs, ys))
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        cfg = configs.get(arch)
+        params, _ = serve_rt.abstract_params(cfg)
+        base = SHAPES["decode_32k"]
+
+        def curves():
+            out = []
+            for scale in (1, 2, 4):
+                shape = dataclasses.replace(
+                    base, global_batch=base.global_batch * scale
+                )
+                prof = acc.serve_profile(params, None, cfg, shape)
+                out.append(hot_frac(prof))
+            return out
+
+        (h1, h2, h4), us = timed(curves, repeats=1)
+        invariant = abs(h1 - h4) < 0.02
+        emit(
+            f"fig6_bwcap_{arch}", us,
+            f"hot25={h1:.3f}/{h2:.3f}/{h4:.3f} scale_invariant={invariant}",
+        )
+        rows.append({"arch": arch, "hot25": (h1, h2, h4),
+                     "invariant": invariant})
+    return rows

@@ -1,0 +1,56 @@
+"""Paper Table 1 analogue: memory configuration + estimated cost per arch on
+the production system (256 x v5e + host pool), HBM at 3-5x DDR unit price.
+"""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.common import hw
+from repro.core import tiers as tr
+from benchmarks.common import emit, timed
+
+DDR_PER_GB = 3.0          # $/GB (order-of-magnitude, as in the paper)
+HBM_MULT = (3.0, 5.0)
+
+
+def run():
+    topo = tr.v5e_topology()
+    n_chips = 256
+    rows = []
+
+    def table():
+        out = []
+        for arch in configs.list_archs():
+            cfg = configs.get(arch)
+            # training state: fp32 master + 2 moments (+bf16 compute copies
+            # are transient)
+            state_gb = cfg.param_count() * 12 / 2**30
+            hbm_total = n_chips * hw.V5E.hbm_bytes / 2**30
+            pool_total = (
+                n_chips / topo.chips_per_pool * hw.V5E_HOST.dram_bytes / 2**30
+            )
+            fits_hbm = state_gb <= hbm_total
+            hbm_cost = hbm_total * DDR_PER_GB * HBM_MULT[0], \
+                hbm_total * DDR_PER_GB * HBM_MULT[1]
+            pool_cost = pool_total * DDR_PER_GB
+            out.append({
+                "arch": arch,
+                "train_state_gb": round(state_gb, 1),
+                "hbm_gb": hbm_total,
+                "pool_gb": pool_total,
+                "fits_hbm_alone": fits_hbm,
+                "hbm_cost_usd": f"{hbm_cost[0]:.0f}-{hbm_cost[1]:.0f}",
+                "pool_cost_usd": round(pool_cost),
+            })
+        return out
+
+    out, us = timed(table, repeats=1)
+    for r in out:
+        emit(
+            f"table1_memcost_{r['arch']}", us / len(out),
+            f"state={r['train_state_gb']}GB "
+            f"fits_hbm={r['fits_hbm_alone']} "
+            f"hbm$={r['hbm_cost_usd']} pool$={r['pool_cost_usd']}",
+        )
+        rows.append(r)
+    return rows

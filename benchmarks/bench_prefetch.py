@@ -1,0 +1,48 @@
+"""Paper Fig 7/8: prefetching accuracy / coverage / excess traffic / gain.
+
+On TPU there is no hardware prefetcher; the analogue is the layer-ahead
+prefetch of pool-tier tensors inside the scan (runtime design). Because the
+access schedule of a training step is fully known, accuracy is structurally
+100% (everything fetched is used); coverage is the fraction of pool bytes
+whose transfer fits inside the previous layer's compute window; the gain is
+the step-time ratio no-prefetch vs prefetch. This reproduces the paper's
+qualitative finding — prefetch is NECESSARY for HPC-style workloads on a
+pooled tier (gain up to the full pool stall), with near-zero excess traffic
+(vs 37% excess for SuperLU's speculative HW prefetcher)."""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.common import hw
+from repro.core.quantify import analyze
+from benchmarks.common import emit, timed
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        cfg = configs.get(arch)
+
+        def one():
+            a = analyze(arch, "train_4k", policy="hotness",
+                        pool_fraction=0.5, use_dryrun=True)
+            layers = max(cfg.num_layers, 1)
+            t_layer_compute = a.profile.t_compute / layers
+            t_layer_pool = a.profile.t_pool / layers
+            coverage = min(1.0, t_layer_compute / max(t_layer_pool, 1e-12))
+            accuracy = 1.0  # schedule-exact: nothing speculative
+            excess = 0.0
+            t_no_pf = a.profile.t_compute + a.profile.t_pool
+            t_pf = max(a.profile.t_compute,
+                       a.profile.t_pool) + t_layer_pool
+            gain = t_no_pf / t_pf
+            return accuracy, coverage, excess, gain
+
+        (acc_, cov, exc, gain), us = timed(one, repeats=1)
+        emit(
+            f"fig8_prefetch_{arch}", us,
+            f"accuracy={acc_:.2f} coverage={cov:.2f} excess={exc:.2f} "
+            f"gain={gain:.2f}x",
+        )
+        rows.append({"arch": arch, "coverage": cov, "gain": gain})
+    return rows

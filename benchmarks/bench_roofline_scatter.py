@@ -1,0 +1,43 @@
+"""Paper Fig 5: place every (arch x shape) cell on the TPU roofline —
+arithmetic intensity vs attainable/achieved flops. Reads the dry-run JSONs
+when present (HLO-derived), else the analytic model."""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.common import hw
+from repro.core.quantify import analyze, load_dryrun_record
+from benchmarks.common import emit, timed
+
+
+def run():
+    rows = []
+    for arch, shape in configs.all_cells():
+        rec = load_dryrun_record(arch, shape)
+
+        def one():
+            a = analyze(arch, shape, dryrun_record=rec)
+            ai = a.level1["arithmetic_intensity"]
+            ridge = hw.V5E.peak_flops_bf16 / hw.V5E.hbm_bw
+            attain = min(hw.V5E.peak_flops_bf16, ai * hw.V5E.hbm_bw)
+            if rec and rec.get("status") == "ok":
+                achieved = (
+                    rec["roofline"]["model_flops"] / 256
+                    / rec["roofline"]["bound_overlap_s"]
+                )
+            else:
+                achieved = attain
+            return ai, attain, achieved, ridge
+
+        (ai, attain, achieved, ridge), us = timed(one, repeats=1)
+        bound = "compute" if ai > ridge else "memory"
+        emit(
+            f"fig5_roofline_{arch}_{shape}", us,
+            f"AI={ai:.1f} bound={bound} "
+            f"achieved={achieved / 1e12:.2f}Tflops "
+            f"attainable={attain / 1e12:.2f}Tflops "
+            f"frac={achieved / max(attain, 1):.3f}",
+        )
+        rows.append({"arch": arch, "shape": shape, "ai": ai,
+                     "achieved": achieved, "attainable": attain})
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Fig 13 / case study 2: 100 runs of each workload with co-located
+background whose LoI resamples every 60 steps — random scheduler (LoI
+0-50%) vs interference-aware (LoI 0-20%). Reports mean speedup and p75
+variability reduction, which must track each workload's sensitivity (the
+paper's Hypre-benefits-most / XSBench-flat result)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import configs
+from repro.core.quantify import analyze
+from repro.sched import Job, simulate_colocation
+from repro.sched.scheduler import five_number_summary
+from benchmarks.common import emit, timed
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        def case():
+            a = analyze(arch, "decode_32k", policy="hotness",
+                        pool_fraction="auto", use_dryrun=True)
+            job = Job(arch, a.profile, steps=240)
+            base = simulate_colocation(job, 100, loi_range=(0.0, 0.5),
+                                       seed=7)
+            aware = simulate_colocation(job, 100, loi_range=(0.0, 0.2),
+                                        seed=7)
+            return five_number_summary(base), five_number_summary(aware)
+
+        (sb, sa), us = timed(case, repeats=1)
+        mean_speedup = (sb["mean"] - sa["mean"]) / sb["mean"]
+        p75_cut = (sb["p75"] - sa["p75"]) / sb["p75"]
+        emit(
+            f"fig13_sched_{arch}", us,
+            f"mean_speedup={100 * mean_speedup:.1f}% "
+            f"p75_cut={100 * p75_cut:.1f}% "
+            f"iqr_base={sb['p75'] - sb['p25']:.2e} "
+            f"iqr_aware={sa['p75'] - sa['p25']:.2e}",
+        )
+        rows.append({"arch": arch, "mean_speedup": mean_speedup,
+                     "p75_cut": p75_cut})
+    return rows

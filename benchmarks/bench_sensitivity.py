@@ -1,0 +1,33 @@
+"""Paper Fig 10: per-arch sensitivity to pool interference, LoI 0..50%, at
+pool capacity ratios 25/50/75%."""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.core.quantify import analyze
+from benchmarks.common import emit, timed
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        shape = "decode_32k"
+
+        def sweep():
+            out = {}
+            for f in (0.25, 0.5, 0.75):
+                a = analyze(arch, shape, policy="hotness", pool_fraction=f,
+                            use_dryrun=True)
+                out[f] = [a.profile.sensitivity(l / 100)
+                          for l in (0, 10, 20, 30, 40, 50)]
+            return out
+
+        out, us = timed(sweep, repeats=1)
+        s50 = {f: v[-1] for f, v in out.items()}
+        emit(
+            f"fig10_sensitivity_{arch}", us,
+            f"rel_perf@LoI50 25%={s50[0.25]:.3f} 50%={s50[0.5]:.3f} "
+            f"75%={s50[0.75]:.3f}",
+        )
+        rows.append({"arch": arch, "sens": out})
+    return rows

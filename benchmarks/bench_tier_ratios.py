@@ -1,0 +1,36 @@
+"""Paper Fig 9: remote (pool) access ratio vs the R_cap / R_bw reference
+lines at 25 / 50 / 75% pool capacity, per arch, train + decode phases."""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.core.quantify import analyze
+from benchmarks.common import emit, timed
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        for shape in ("train_4k", "decode_32k"):
+            parts = []
+
+            def sweep():
+                out = []
+                for f in (0.25, 0.5, 0.75):
+                    a = analyze(arch, shape, policy="first_touch",
+                                pool_fraction=f, use_dryrun=True)
+                    out.append((f, a.level2["r_access_pool"],
+                                a.level2["r_cap_pool"],
+                                a.level2["r_bw_pool"],
+                                a.level2["in_corridor"]))
+                return out
+
+            out, us = timed(sweep, repeats=1)
+            for f, racc, rcap, rbw, ok in out:
+                parts.append(f"{int(f * 100)}%:Racc={racc:.2f}")
+            emit(
+                f"fig9_ratios_{arch}_{shape}", us,
+                " ".join(parts) + f" Rbw={out[0][3]:.3f}",
+            )
+            rows.append({"arch": arch, "shape": shape, "sweep": out})
+    return rows

@@ -1,0 +1,21 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Returns (result, mean_us)."""
+    fn(*args, **kwargs)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

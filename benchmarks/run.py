@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+MODULES = [
+    ("table1", "benchmarks.bench_memory_cost"),
+    ("fig5", "benchmarks.bench_roofline_scatter"),
+    ("fig6", "benchmarks.bench_bwcap_curve"),
+    ("fig8", "benchmarks.bench_prefetch"),
+    ("fig9", "benchmarks.bench_tier_ratios"),
+    ("fig10", "benchmarks.bench_sensitivity"),
+    ("fig11", "benchmarks.bench_lbench"),
+    ("fig12", "benchmarks.bench_placement_case"),
+    ("fig13", "benchmarks.bench_scheduler_case"),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated tags, e.g. fig11,fig13")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failures.append((tag, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {[t for t, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

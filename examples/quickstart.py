@@ -1,0 +1,45 @@
+"""Quickstart: the paper's three-level quantitative analysis on one arch.
+
+    PYTHONPATH=src:. python examples/quickstart.py [arch] [shape]
+
+Level 1 characterizes the workload's intrinsic memory behaviour, Level 2
+places its state across HBM/host-pool tiers and checks the R_cap <=
+R_access <= R_bw corridor, Level 3 predicts interference sensitivity and
+the interference coefficient a scheduler would use.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.quantify import analyze  # noqa: E402
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "kimi-k2-1t-a32b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+
+    print(f"=== {arch} x {shape} on 256x v5e + host pool ===\n")
+    for policy in ("first_touch", "hotness", "balanced_bw"):
+        a = analyze(arch, shape, policy=policy, pool_fraction=0.5)
+        l1, l2, l3 = a.level1, a.level2, a.level3
+        print(f"--- policy: {policy} ---")
+        print(f"  L1 footprint/chip : {l1['footprint_bytes_per_chip'] / 2**30:8.2f} GiB")
+        print(f"  L1 traffic/step   : {l1['traffic_bytes_per_step_per_chip'] / 2**30:8.2f} GiB")
+        print(f"  L1 arithmetic int.: {l1['arithmetic_intensity']:8.1f} flop/B")
+        print(f"  L1 hot-50% curve  : {l1['hot50'] * 100:8.1f} % of traffic")
+        print(f"  L2 R_cap  (pool)  : {l2['r_cap_pool']:8.3f}")
+        print(f"  L2 R_access(pool) : {l2['r_access_pool']:8.3f}")
+        print(f"  L2 R_bw   (pool)  : {l2['r_bw_pool']:8.3f}")
+        print(f"  L2 in corridor    : {l2['in_corridor']}")
+        print(f"  L2 mem slowdown   : {l2['slowdown_vs_all_hbm']:8.2f}x vs all-HBM")
+        print(f"  L3 sens @ LoI=50% : {l3['sensitivity']['loi_50']:8.3f}")
+        print(f"  L3 IC             : {l3['interference_coefficient']:8.3f}")
+        print()
+    print("reading: hotness should cut R_access vs first_touch; if "
+          "R_access >> R_bw the job is pool-link-bound and (per the paper) "
+          "should scale out instead of pooling deeper.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Serving example: batched prefill + autoregressive decode with KV caches
+(greedy), on the reduced paligemma VLM (exercises the frontend-stub path).
+
+    PYTHONPATH=src:. python examples/serve_batch.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+
+def main():
+    serve.main([
+        "--arch", "paligemma-3b", "--reduced",
+        "--batch", "4", "--prompt-len", "24", "--gen", "12",
+    ])
+    serve.main([
+        "--arch", "mamba2-780m", "--reduced",
+        "--batch", "2", "--prompt-len", "32", "--gen", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Dev driver: one loss_fn eval per reduced arch on CPU, no mesh."""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.common.parallel import ParallelCtx
+from repro.models import model as M
+from repro.models.frontends import synthetic_frontend_embeds
+
+ctx = ParallelCtx(remat="none")
+
+archs = sys.argv[1:] or configs.list_archs()
+for arch in archs:
+    cfg = configs.reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params, axes = M.init_model(cfg, key)
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size
+        )
+    }
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = synthetic_frontend_embeds(cfg, B, S)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = synthetic_frontend_embeds(cfg, B, 24)
+    loss, metrics = jax.jit(
+        lambda p, b: M.loss_fn(p, b, cfg, ctx)
+    )(params, batch)
+    ok = bool(jnp.isfinite(loss))
+    print(f"{arch:28s} loss={float(loss):9.4f} finite={ok}")
+    assert ok, arch
+print("ALL OK")

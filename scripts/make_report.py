@@ -1,0 +1,68 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
+results/dryrun JSONs.
+
+    PYTHONPATH=src python scripts/make_report.py [results/dryrun]
+"""
+
+import glob
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def load(outdir):
+    recs = {}
+    for f in glob.glob(f"{outdir}/*.json"):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"], r["mesh"],
+               r.get("tier_policy", "none"))
+        recs[key] = r
+    return recs
+
+
+def roofline_table(recs, mesh, tier="none"):
+    rows = []
+    for (arch, shape, m, t), r in sorted(recs.items()):
+        if m != mesh or t != tier or r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        ma = r["memory_analysis"]
+        hc = r["hlo_cost"]
+        rows.append(
+            f"| {arch} | {shape} | {ro['t_compute_s']:.4f} | "
+            f"{ro['t_memory_s']:.4f} | {ro['t_collective_s']:.4f} | "
+            f"**{ro['dominant']}** | {ro['model_flops']:.2e} | "
+            f"{ro['useful_ratio']:.3f} | {ro['roofline_fraction']:.3f} | "
+            f"{fmt_bytes(ma['temp_bytes'] + ma['argument_bytes'])} |"
+        )
+    header = (
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | "
+        "per-dev GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    return header + "\n".join(rows)
+
+
+def dryrun_summary(recs, mesh):
+    ok = sum(1 for (a, s, m, t), r in recs.items()
+             if m == mesh and t == "none" and r["status"] == "ok")
+    tot = sum(1 for (a, s, m, t), r in recs.items()
+              if m == mesh and t == "none")
+    return ok, tot
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(outdir)
+    for mesh in ("16x16", "2x16x16"):
+        ok, tot = dryrun_summary(recs, mesh)
+        print(f"\n## Mesh {mesh}: {ok}/{tot} cells compile\n")
+        print(roofline_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pytree helpers: named flattening, byte accounting, tree maps with paths."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import hw
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def named_leaves(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), v) for p, v in flat]
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree):
+    return jax.tree_util.tree_map_with_path(lambda p, v: fn(path_str(p), v), tree)
+
+
+def leaf_bytes(leaf) -> int:
+    shape = getattr(leaf, "shape", ())
+    dtype = getattr(leaf, "dtype", jnp.float32)
+    n = int(np.prod(shape)) if shape else 1
+    return n * hw.dtype_size(dtype)
+
+
+def tree_bytes(tree) -> int:
+    return sum(leaf_bytes(v) for v in jax.tree_util.tree_leaves(tree))
+
+
+def tree_num_params(tree) -> int:
+    return sum(
+        int(np.prod(getattr(v, "shape", ()) or (1,)))
+        for v in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def assert_finite(tree, where: str = "") -> None:
+    for name, leaf in named_leaves(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.isfinite(leaf).all()):
+                raise FloatingPointError(f"non-finite values in {where}:{name}")
+
+
+def tree_select(tree, pred: Callable[[str], bool]):
+    """Return {path: leaf} for leaves whose path satisfies pred."""
+    return {n: v for n, v in named_leaves(tree) if pred(n)}

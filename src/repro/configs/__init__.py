@@ -1,0 +1,65 @@
+"""Architecture config registry.
+
+Every assigned architecture is a module exposing `CONFIG` (the full,
+paper-exact config) and `reduced()` (a tiny same-family config for CPU smoke
+tests). `get(name)` / `list_archs()` are the public API; `shapes_for(name)`
+returns the shape cells that are *runnable* for that arch (sub-quadratic
+gating for long_500k per DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.common.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "granite_moe_1b_a400m",
+    "kimi_k2_1t_a32b",
+    "mamba2_780m",
+    "jamba_1_5_large_398b",
+    "mistral_nemo_12b",
+    "qwen2_5_32b",
+    "smollm_360m",
+    "granite_3_2b",
+    "seamless_m4t_large_v2",
+    "paligemma_3b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace(".", "_")
+    return _ALIASES.get(name, name.replace("-", "_"))
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{canonical(name)}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def shapes_for(name: str) -> list[ShapeConfig]:
+    cfg = get(name)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # pure full-attention arch: documented skip
+        out.append(s)
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every runnable (arch, shape) pair — the dry-run matrix."""
+    return [(a, s.name) for a in ARCH_IDS for s in shapes_for(a)]

@@ -1,0 +1,10 @@
+"""The paper's contribution: three-level quantitative memory methodology.
+
+  Level 1: core.access    — intrinsic characterization (bandwidth-capacity
+                            scaling curves, arithmetic intensity)
+  Level 2: core.tiers +
+           core.placement — multi-tier capacity/bandwidth/access ratios and
+                            placement policies
+           core.roofline  — standard + multi-tier memory roofline
+  Level 3: core.interference — LoI / IC / sensitivity on the pooled tier
+"""

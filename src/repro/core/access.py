@@ -1,0 +1,172 @@
+"""Level 1: per-tensor access profiles and bandwidth-capacity scaling curves.
+
+The paper measures page-grain access counts with PEBS; XLA host offload is
+tensor-grain, so the unit of placement here is the named tensor of the
+train/serve state. `touches_per_step` is derived from training/serving
+semantics (how many times each byte moves per step) — exact for this
+framework because the step program is fixed:
+
+  train:  param fwd read + bwd read (+1 reread under block remat)
+          grad write+read, moment read+write (x2), param write
+  serve:  param read per step; expert weights scaled by the expected
+          fraction of experts activated by the step's tokens
+          (1 - (1 - k/E)^T — the Fig 6 skew for MoE);
+          KV cache read per decode step, 1/S write share.
+
+The bandwidth-capacity curve (paper Fig 6) is the CDF of traffic over
+footprint with tensors sorted by traffic density.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.common.pytree import leaf_bytes, named_leaves
+
+
+@dataclasses.dataclass
+class TensorAccess:
+    name: str
+    bytes: int                 # global bytes
+    touches: float             # byte-touches per step / bytes (density)
+    category: str              # param|expert|moment|embed|cache|other
+
+    @property
+    def traffic(self) -> float:
+        return self.bytes * self.touches
+
+
+def _category(name: str) -> str:
+    if re.search(r"moe/(w_gate|w_up|w_down)", name):
+        return "expert"
+    if "/opt/" in name or name.startswith("opt/"):
+        return "moment"
+    if "embedding" in name or "lm_head" in name:
+        return "embed"
+    if re.search(r"(^|/)(k|v|cross_k|cross_v|state|tail_)", name):
+        return "cache"
+    return "param"
+
+
+def expected_expert_fraction(cfg: ModelConfig, tokens: int) -> float:
+    """Expected fraction of experts activated by `tokens` routed tokens."""
+    if not cfg.num_experts:
+        return 1.0
+    p_miss = (1.0 - cfg.experts_per_token / cfg.num_experts) ** max(tokens, 1)
+    return 1.0 - p_miss
+
+
+ZIPF_ALPHA = 1.0  # expert-popularity skew (observed MoE routing is Zipf-ish)
+
+
+def expert_activation_probs(cfg: ModelConfig, tokens: int) -> np.ndarray:
+    """Per-expert probability of being activated by a step's tokens under a
+    Zipf(ZIPF_ALPHA) routing popularity. This is the MoE realization of the
+    paper's Fig 6 skew: a minority of experts receives most traffic, so the
+    cold tail is pool-eligible at serving time."""
+    E, k = cfg.num_experts, cfg.experts_per_token
+    ranks = np.arange(1, E + 1, dtype=np.float64)
+    pop = ranks ** -ZIPF_ALPHA
+    pop /= pop.sum()
+    p_tok = np.minimum(1.0, k * pop)          # P(one token routes to e)
+    return 1.0 - (1.0 - p_tok) ** max(tokens, 1)
+
+
+def train_profile(state, cfg: ModelConfig, shape: ShapeConfig,
+                  remat: str = "block") -> list[TensorAccess]:
+    """Access profile for one optimizer step."""
+    out = []
+    fwd_reads = 2.0 if remat == "block" else 1.0  # fwd + recompute
+    tokens = shape.tokens
+    emb_frac = min(1.0, tokens / cfg.vocab_size)
+    for name, leaf in named_leaves(state):
+        b = leaf_bytes(leaf)
+        if b == 0 or name == "step" or name.endswith("count"):
+            continue
+        cat = _category(name)
+        if cat == "moment":
+            touches = 2.0                      # read + write in opt phase
+        elif cat == "embed" and "embedding" in name:
+            # gather rows fwd + scatter-add grads; unembed matmul reads all
+            touches = fwd_reads * emb_frac + 1.0 + 3.0
+        elif cat == "expert":
+            # all experts receive grads in train; dense traffic
+            touches = fwd_reads + 1.0 + 3.0   # fwd(+remat), bwd read, opt
+        else:
+            touches = fwd_reads + 1.0 + 3.0
+        out.append(TensorAccess(name, b, touches, cat))
+    return out
+
+
+def serve_profile(params, caches, cfg: ModelConfig, shape: ShapeConfig,
+                  expert_grain: bool = True) -> list[TensorAccess]:
+    """Access profile for one decode step (or prefill if caches is None).
+
+    With `expert_grain`, the stacked expert tensors are profiled per expert
+    (the analysis analogue of the paper's page-grain PEBS sampling): each
+    expert's activation probability follows the Zipf routing model, which is
+    what produces the Fig 6-style skewed bandwidth-capacity curve for MoE
+    archs at serving time.
+    """
+    out = []
+    tokens = shape.global_batch if shape.kind == "decode" else shape.tokens
+    emb_frac = min(1.0, tokens / cfg.vocab_size)
+    p_act = (
+        expert_activation_probs(cfg, tokens) if cfg.num_experts else None
+    )
+    for name, leaf in named_leaves(params):
+        b = leaf_bytes(leaf)
+        if b == 0:
+            continue
+        cat = _category(name)
+        if cat == "expert":
+            if expert_grain and cfg.num_experts:
+                be = b // cfg.num_experts
+                for e in range(cfg.num_experts):
+                    out.append(TensorAccess(
+                        f"{name}[e{e}]", be, float(p_act[e]), "expert"
+                    ))
+                continue
+            touches = expected_expert_fraction(cfg, tokens)
+        elif cat == "embed" and "embedding" in name:
+            touches = emb_frac + 1.0          # gather + unembed matmul
+        else:
+            touches = 1.0
+        out.append(TensorAccess(name, b, touches, cat))
+    if caches is not None:
+        for name, leaf in named_leaves(caches):
+            b = leaf_bytes(leaf)
+            if b == 0:
+                continue
+            # decode reads the valid prefix (~full cache) once per step and
+            # writes one token's worth
+            out.append(TensorAccess("cache/" + name, b, 1.0, "cache"))
+    return out
+
+
+# ------------------------------------------------- Fig 6 scaling curve
+def bandwidth_capacity_curve(profile: list[TensorAccess]):
+    """Returns (footprint_fraction, traffic_fraction) arrays — the CDF of
+    accesses vs footprint with tensors sorted by traffic density (hot
+    first). The paper's Fig 6, tensor-grain."""
+    items = sorted(profile, key=lambda a: a.touches, reverse=True)
+    total_b = sum(a.bytes for a in items) or 1
+    total_t = sum(a.traffic for a in items) or 1
+    xs, ys = [0.0], [0.0]
+    cb = ct = 0.0
+    for a in items:
+        cb += a.bytes
+        ct += a.traffic
+        xs.append(cb / total_b)
+        ys.append(ct / total_t)
+    return np.array(xs), np.array(ys)
+
+
+def arithmetic_intensity(flops: float, profile: list[TensorAccess],
+                         activation_bytes: float = 0.0) -> float:
+    traffic = sum(a.traffic for a in profile) + activation_bytes
+    return flops / traffic if traffic else 0.0

@@ -1,0 +1,149 @@
+"""Level 3: memory interference on the pooled tier (paper §3.2, §6).
+
+The pool link (PCIe to host DRAM here; UPI/CXL in the paper) is shared by
+`chips_per_pool` chips. Co-running jobs inject traffic; the victim sees an
+effective link bandwidth reduction plus queueing delay. We model the link as
+an M/D/1-style server, the same queueing-theory approach as Tudor et al.
+[45] that the paper builds on:
+
+    utilization rho = (victim + background) demand / link capacity
+    effective service time multiplier  ~ 1 + rho/(2(1-rho))  (capped)
+
+`LoI` (level of interference) is the background traffic as a fraction of
+peak link bandwidth, dialed by LBench's flops/element knob exactly as in the
+paper. Sensitivity and the interference coefficient (IC) are derived from a
+workload's tier access profile:
+
+  * sensitivity(LoI): relative step time when the pool link carries LoI
+    background traffic — HIGH pool access ratio + LOW arithmetic intensity
+    -> sensitive (the paper's Hypre/NekRS quadrant);
+  * IC: traffic the job itself injects relative to peak link bandwidth —
+    what a scheduler needs for co-location decisions (paper §6.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.placement import Placement
+from repro.core.tiers import TierTopology
+from repro.kernels.lbench import ref as lbench_ref
+
+
+# ------------------------------------------------------------ link model
+RHO_CAP = 0.95      # links time-slice: a victim is never fully starved
+LOI_SHARE_FLOOR = 0.1
+
+
+def queueing_slowdown(rho: float) -> float:
+    """M/D/1 mean service multiplier at utilization rho (capped at the
+    time-slicing limit — beyond ~95% the fabric arbiters round-robin)."""
+    rho = min(max(rho, 0.0), RHO_CAP)
+    return 1.0 + rho / (2.0 * (1.0 - rho))
+
+
+def lbench_loi(nflop: int, n_elements: int, topo: TierTopology,
+               t_compute_floor: float = 0.0) -> float:
+    """LoI produced by an LBench instance with `nflop` flops/element.
+
+    LBench streams its array over the pool link; its achievable traffic is
+    min(link bw, flops_capability-limited rate). Low nflop -> link-saturating
+    (LoI -> 100%); high nflop -> compute-bound, lower LoI. Mirrors paper
+    Fig 11-left (linear in configured intensity until saturation).
+    """
+    bytes_per_elem = 8.0  # f32 read + write
+    flops_per_elem = max(nflop, 1)
+    # time per element on the link vs in compute (1 core-ish probe)
+    t_link = bytes_per_elem / topo.pool.bandwidth
+    t_comp = flops_per_elem * 2e-10 + t_compute_floor
+    achieved_bw = bytes_per_elem / max(t_link, t_comp)
+    return min(1.0, achieved_bw / topo.pool.bandwidth)
+
+
+# --------------------------------------------------------- app metrics
+@dataclasses.dataclass
+class InterferenceProfile:
+    arch: str
+    shape: str
+    pool_traffic: float          # bytes per step per chip on the pool link
+    local_traffic: float         # bytes per step per chip in HBM
+    t_compute: float             # seconds of pure compute per step
+    topo: TierTopology
+
+    @property
+    def t_pool(self) -> float:
+        return self.pool_traffic / self.topo.pool.bandwidth
+
+    @property
+    def t_local(self) -> float:
+        return self.local_traffic / self.topo.local.bandwidth
+
+    def step_time(self, loi: float = 0.0, overlap: bool = True) -> float:
+        """Predicted step time at background interference level `loi`.
+
+        Background occupies `loi` of the shared link; the victim's own
+        transfers are pipelined (prefetch) so they do not queue against
+        themselves, but they both lose bandwidth share and queue behind the
+        background stream.
+        """
+        t_pool_eff = self.t_pool * queueing_slowdown(loi) / max(
+            1.0 - loi, LOI_SHARE_FLOOR
+        )
+        if overlap:
+            return max(self.t_compute, self.t_local, t_pool_eff)
+        return self.t_compute + self.t_local + t_pool_eff
+
+    def step_time_no_pool(self) -> float:
+        return max(self.t_compute, self.t_local)
+
+    def sensitivity(self, loi: float) -> float:
+        """Relative performance at LoI vs LoI=0 (paper Fig 10; 1.0 = no
+        degradation)."""
+        return self.step_time(0.0) / self.step_time(loi)
+
+    def _raw_base(self) -> float:
+        return max(self.t_compute, self.t_local, self.t_pool, 1e-12)
+
+    def interference_coefficient(self) -> float:
+        """IC: the slowdown this job inflicts on a 1-thread LBench probe
+        (paper §3.2) — driven by the job's pool-link utilization."""
+        util = self.t_pool / self._raw_base()
+        return queueing_slowdown(util)
+
+    def injected_loi(self) -> float:
+        return min(1.0, self.t_pool / self._raw_base())
+
+
+def profile_from_placement(arch: str, shape: str, placement: Placement,
+                           t_compute: float, topo: TierTopology
+                           ) -> InterferenceProfile:
+    return InterferenceProfile(
+        arch=arch,
+        shape=shape,
+        pool_traffic=placement.pool_traffic,
+        local_traffic=placement.local_traffic,
+        t_compute=t_compute,
+        topo=topo,
+    )
+
+
+# ------------------------------------------------------ LBench validation
+def lbench_intensity_sweep(topo: TierTopology, nflops=(1, 2, 4, 8, 16, 32,
+                                                       64, 128)):
+    """Paper Fig 11-middle: measured traffic saturates at link bw while
+    contention (IC) keeps rising below 8 flops/element."""
+    rows = []
+    for nf in nflops:
+        loi = lbench_loi(nf, 1 << 20, topo)
+        raw_bw = min(
+            topo.pool.bandwidth,
+            loi * topo.pool.bandwidth,
+        )
+        ic = queueing_slowdown(loi)
+        rows.append({
+            "nflop": nf,
+            "loi": loi,
+            "pcm_bw": raw_bw,          # what raw counters would show
+            "ic": ic,                  # what LBench can still distinguish
+        })
+    return rows

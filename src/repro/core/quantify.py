@@ -1,0 +1,173 @@
+"""The paper's end-to-end quantitative workflow (Fig 4) as one API.
+
+    analyze(arch, shape) ->
+      level1: intrinsic — footprint, per-step traffic, arithmetic
+              intensity, bandwidth-capacity curve
+      level2: multi-tier — placement under a policy/pool_fraction,
+              R_cap/R_access/R_bw corridor check, predicted memory time
+      level3: pooling — sensitivity(LoI) table, interference coefficient
+
+Byte counts come from the analytic access model (core.access) scaled
+per-chip by the production sharding; compute time comes from the dry-run's
+HLO flops when a dry-run record is supplied, else from the 6·N·D model at
+peak. Everything here is deterministic and cheap — it is the tool an HPC
+user would run before requesting a deployment configuration, which is the
+paper's intent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+
+from repro import configs
+from repro.common import hw
+from repro.common.config import SHAPES, MeshConfig, SINGLE_POD_MESH
+from repro.core import access as acc
+from repro.core import interference as itf
+from repro.core import placement as plc
+from repro.core import roofline as rl
+from repro.core import tiers as tr
+from repro.models.module import shape_mode
+from repro.runtime import serve as serve_rt
+from repro.runtime import train as train_rt
+
+
+@dataclasses.dataclass
+class Analysis:
+    arch: str
+    shape: str
+    level1: dict
+    level2: dict
+    level3: dict
+    placement: plc.Placement
+    profile: itf.InterferenceProfile
+
+
+def _abstract_state(cfg, shape):
+    if shape.kind == "train":
+        state, _ = train_rt.abstract_train_state(cfg)
+        return state
+    params, _ = serve_rt.abstract_params(cfg)
+    if shape.kind == "decode":
+        caches = serve_rt.abstract_caches(
+            cfg, shape.global_batch, shape.seq_len,
+            enc_len=shape.seq_len if cfg.frontend == "audio_stub" else 0,
+        )
+        return {"params": params, "caches": caches}
+    return {"params": params}
+
+
+def _profile(cfg, shape, state, remat="block"):
+    if shape.kind == "train":
+        return acc.train_profile(state, cfg, shape, remat)
+    return acc.serve_profile(
+        state["params"], state.get("caches"), cfg, shape
+    )
+
+
+def t_compute_for(cfg, shape, n_chips: int,
+                  dryrun_record: Optional[dict] = None) -> float:
+    if dryrun_record and dryrun_record.get("status") == "ok":
+        return dryrun_record["roofline"]["t_compute_s"]
+    if shape.kind == "train":
+        mf = rl.model_flops_train(cfg.active_param_count(), shape.tokens)
+    elif shape.kind == "prefill":
+        mf = rl.model_flops_decode(cfg.active_param_count(), shape.tokens)
+    else:
+        mf = rl.model_flops_decode(
+            cfg.active_param_count(), shape.global_batch
+        )
+    return mf / n_chips / hw.V5E.peak_flops_bf16
+
+
+def load_dryrun_record(arch: str, shape: str, mesh: str = "16x16",
+                       outdir: str = "results/dryrun") -> Optional[dict]:
+    p = os.path.join(outdir, f"{configs.canonical(arch)}_{shape}_{mesh}.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+HBM_STATE_BUDGET = 0.6  # fraction of HBM available for resident state
+
+
+def analyze(
+    arch: str,
+    shape_name: str,
+    *,
+    policy: str = "hotness",
+    pool_fraction="auto",
+    mesh_cfg: MeshConfig = SINGLE_POD_MESH,
+    dryrun_record: Optional[dict] = None,
+    use_dryrun: bool = True,
+) -> Analysis:
+    """pool_fraction: float = paper-style emulated R_cap stress test;
+    "auto" = pool-by-necessity (whatever exceeds the per-chip HBM budget
+    goes to the pool — the actual adoption scenario)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n_chips = mesh_cfg.num_devices
+    if dryrun_record is None and use_dryrun:
+        dryrun_record = load_dryrun_record(arch, shape_name)
+
+    state = _abstract_state(cfg, shape)
+    profile = _profile(cfg, shape, state)
+    # per-chip scaling: state is sharded across the mesh
+    profile = [
+        dataclasses.replace(a, bytes=max(a.bytes // n_chips, 1))
+        for a in profile
+    ]
+
+    total_bytes = sum(a.bytes for a in profile)
+    if pool_fraction == "auto":
+        budget = HBM_STATE_BUDGET * hw.V5E.hbm_bytes
+        pool_fraction = max(0.0, min(0.95, 1.0 - budget / total_bytes))
+        if pool_fraction == 0.0:
+            policy = "all_local"
+    total_traffic = sum(a.traffic for a in profile)
+    t_comp = t_compute_for(cfg, shape, n_chips, dryrun_record)
+    flops_per_chip = t_comp * hw.V5E.peak_flops_bf16
+    ai = flops_per_chip / max(total_traffic, 1)
+    xs, ys = acc.bandwidth_capacity_curve(profile)
+
+    level1 = {
+        "footprint_bytes_per_chip": total_bytes,
+        "traffic_bytes_per_step_per_chip": total_traffic,
+        "arithmetic_intensity": ai,
+        "bwcap_curve": (xs.tolist(), ys.tolist()),
+        "hot50": float(ys[min(range(len(xs)),
+                              key=lambda i: abs(xs[i] - 0.5))]),
+    }
+
+    topo = tr.emulated(pool_fraction, total_bytes)
+    placement = plc.place(profile, topo, policy, pool_fraction)
+    level2 = {
+        "policy": policy,
+        "pool_fraction": pool_fraction,
+        **plc.corridor_check(placement),
+        "t_memory_s": placement.t_memory,
+        "slowdown_vs_all_hbm": placement.slowdown,
+        "multi_tier_bw": rl.multi_tier_bandwidth(
+            [1 - placement.r_access_pool, placement.r_access_pool],
+            [topo.local.bandwidth, topo.pool.bandwidth],
+        ),
+    }
+
+    iprof = itf.profile_from_placement(arch, shape_name, placement, t_comp,
+                                       topo)
+    level3 = {
+        "sensitivity": {
+            f"loi_{int(100 * l)}": iprof.sensitivity(l)
+            for l in (0.0, 0.1, 0.2, 0.3, 0.4, 0.5)
+        },
+        "interference_coefficient": iprof.interference_coefficient(),
+        "injected_loi": iprof.injected_loi(),
+    }
+    return Analysis(arch, shape_name, level1, level2, level3, placement,
+                    iprof)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLM, make_batch_for  # noqa
+from repro.data.pipeline import PrefetchPipeline  # noqa

@@ -1,0 +1,31 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships three modules:
+  <name>.py  - the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py     - the jit'd public wrapper; dispatches pallas / interpret /
+               reference by backend (TPU -> pallas, CPU -> reference,
+               tests -> interpret)
+  ref.py     - the pure-jnp oracle the tests assert against
+
+Kernels: lbench (the paper's interference/roofline kernel), flash_attention
+(prefill), decode_attention (single-token vs long KV), ssd_scan (Mamba2 SSD).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_FORCED: str | None = None
+
+
+def force_backend(name: str | None) -> None:
+    """Force 'pallas' | 'interpret' | 'reference' | None (auto)."""
+    global _FORCED
+    _FORCED = name
+
+
+def backend() -> str:
+    if _FORCED is not None:
+        return _FORCED
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "reference"

@@ -1,0 +1,99 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+Grid (B, H, n_kv_blocks); the kv-block dimension is sequential ("arbitrary")
+so the online-softmax accumulators live in VMEM scratch across iterations.
+Out-of-length positions are masked with an iota test against `length`
+(supports ragged batches). Blocks are (block_k, D) — D is lane-padded by
+Mosaic; block_k rides the sublane dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
+            block_k: int, rep: int, scale: float, nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)            # (D,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = (k @ q) * scale                               # (bk,)
+    pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)                            # (bk,)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[0] = l_sc[0] * alpha + p.sum()
+    m_sc[0] = m_new
+    acc[...] = acc[...] * alpha + (p[:, None] * v).sum(axis=0)[None, :]
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0, :] = (
+            acc[0] / jnp.maximum(l_sc[0], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "block_k"))
+def flash_decode(q, k, v, length, *, scale=None, interpret: bool = False,
+                 block_k: int = 512):
+    B, H, D = q.shape
+    _, S, KV, _ = k.shape
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    while S % bk:
+        bk //= 2
+    bk = max(bk, 1)
+    nk = S // bk
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+
+    grid = (B, H, nk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_k=bk, rep=rep, scale=scale, nk=nk
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, D), lambda b, h, ki: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, ki, rep=rep: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, ki, rep=rep: (b, ki, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ki: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(length, q, k, v)
+    return out

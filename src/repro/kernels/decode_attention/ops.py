@@ -1,0 +1,32 @@
+"""Public decode-attention op (the serving hot loop)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro import kernels
+from repro.kernels.decode_attention import ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def decode_mha(
+    q,
+    k,
+    v,
+    length,
+    *,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """q (B,H,D) vs cache k/v (B,S,KV,D) with valid `length`."""
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        return ref.decode_mha(q, k, v, length, scale=scale)
+    from repro.kernels.decode_attention import decode_attention as da
+
+    return da.flash_decode(
+        q, k, v, length, scale=scale, interpret=(impl == "interpret")
+    )

@@ -1,0 +1,49 @@
+"""Public attention op. Dispatches pallas / interpret / reference."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro import kernels
+from repro.kernels.flash_attention import ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "kv_offset", "impl")
+)
+def mha(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_offset: int = 0,
+    impl: Optional[str] = None,
+):
+    """Multi-head (GQA) attention: q (B,Sq,H,D), k/v (B,Skv,KV,D)."""
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        if q.shape[1] * k.shape[1] <= 256 * 256:
+            return ref.mha(
+                q, k, v, causal=causal, scale=scale, kv_offset=kv_offset
+            )
+        from repro.kernels.flash_attention import chunked
+
+        return chunked.mha_chunked(
+            q, k, v, causal, scale, kv_offset
+        )
+    from repro.kernels.flash_attention import flash_attention as fa
+
+    return fa.flash_mha(
+        q,
+        k,
+        v,
+        causal=causal,
+        scale=scale,
+        kv_offset=kv_offset,
+        interpret=(impl == "interpret"),
+    )

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for blocked causal GQA attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Skv, KV, D)
+    v: jnp.ndarray,          # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_offset: int = 0,      # absolute position of q[0] relative to k[0]
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+
+    # broadcast kv heads to q heads (GQA)
+    kq = jnp.repeat(k, rep, axis=2)
+    vq = jnp.repeat(v, rep, axis=2)
+
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + kv_offset
+        kpos = jnp.arange(Skv)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.lbench.ops import lbench  # noqa: F401

@@ -1,0 +1,25 @@
+"""Public LBench op."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro import kernels
+from repro.kernels.lbench import ref
+
+
+@functools.partial(jax.jit, static_argnames=("nflop", "alpha", "impl"))
+def lbench(a, nflop: int, alpha: float = 0.5, *, impl: Optional[str] = None):
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        return ref.lbench(a, nflop, alpha)
+    from repro.kernels.lbench import lbench as kl
+
+    return kl.lbench_pallas(a, nflop, alpha, interpret=(impl == "interpret"))
+
+
+flops = ref.flops
+bytes_moved = ref.bytes_moved

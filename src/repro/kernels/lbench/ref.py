@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for LBench, the paper's interference kernel (Sec 3.2).
+
+Per element:
+    if NFLOP % 2 == 1: beta = A[i] + alpha
+    else:              beta = A[i]            (read, no flop consumed)
+    repeat NFLOP//2 times: beta = beta * A[i] + alpha
+    A[i] = beta
+
+NFLOP controls arithmetic intensity: flops/element = NFLOP (one add if odd,
+then 2 flops per FMA iteration), bytes/element = 8 (one read + one write of
+f32) so AI = NFLOP/8 flop/B — sweeping NFLOP sweeps the roofline x-axis,
+which is how the paper dials the Level-of-Interference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lbench(a: jnp.ndarray, nflop: int, alpha: float = 0.5) -> jnp.ndarray:
+    f32 = jnp.float32
+    a32 = a.astype(f32)
+    beta = a32 + alpha if (nflop % 2 == 1) else a32
+    for _ in range(nflop // 2):
+        beta = beta * a32 + alpha
+    return beta.astype(a.dtype)
+
+
+def flops(n_elements: int, nflop: int) -> int:
+    per = (nflop % 2) + 2 * (nflop // 2)
+    return n_elements * per
+
+
+def bytes_moved(n_elements: int, itemsize: int = 4) -> int:
+    return 2 * n_elements * itemsize

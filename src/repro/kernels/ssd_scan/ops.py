@@ -1,0 +1,45 @@
+"""Public SSD op (Mamba2 inner scan)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro import kernels
+from repro.kernels.ssd_scan import ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(
+    x,
+    dt,
+    A,
+    Bmat,
+    Cmat,
+    D=None,
+    init_state=None,
+    *,
+    chunk: int = 128,
+    impl: Optional[str] = None,
+):
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        if x.shape[1] <= 64:
+            return ref.ssd(x, dt, A, Bmat, Cmat, D, init_state)
+        from repro.kernels.ssd_scan import chunked
+
+        return chunked.ssd_chunked_jnp(
+            x, dt, A, Bmat, Cmat, D, init_state, chunk
+        )
+    from repro.kernels.ssd_scan import ssd_scan as ks
+
+    return ks.ssd_pallas(
+        x, dt, A, Bmat, Cmat, D, init_state,
+        chunk=chunk, interpret=(impl == "interpret"),
+    )
+
+
+ssd_decode = jax.jit(ref.ssd_decode)  # O(1)-per-token update; jnp is optimal

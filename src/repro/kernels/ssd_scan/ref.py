@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (exact sequential scan).
+
+State update (per batch b, head h):
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t . h_t + D_h * x_t
+Shapes: x (B,S,H,P), dt (B,S,H), A (H,) <= 0, B/C (B,S,G,N), state h (H,P,N).
+G groups share B/C across H//G heads.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd(
+    x: jnp.ndarray,        # (B,S,H,P)
+    dt: jnp.ndarray,       # (B,S,H) positive
+    A: jnp.ndarray,        # (H,) negative
+    Bmat: jnp.ndarray,     # (B,S,G,N)
+    Cmat: jnp.ndarray,     # (B,S,G,N)
+    D: Optional[jnp.ndarray] = None,   # (H,)
+    init_state: Optional[jnp.ndarray] = None,  # (B,H,P,N)
+):
+    Bsz, S, H, P = x.shape
+    _, _, G, N = Bmat.shape
+    rep = H // G
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    B32, C32 = Bmat.astype(f32), Cmat.astype(f32)
+    A32 = A.astype(f32)
+
+    h0 = (
+        jnp.zeros((Bsz, H, P, N), f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+
+    def step(h, inputs):
+        xt, dtt, Bt, Ct = inputs             # (B,H,P), (B,H), (B,G,N), (B,G,N)
+        Bh = jnp.repeat(Bt, rep, axis=1)     # (B,H,N)
+        Ch = jnp.repeat(Ct, rep, axis=1)
+        decay = jnp.exp(A32[None, :] * dtt)  # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * Bh[:, :, None, :]  # (B,H,P,N)
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+        return h, y
+
+    xs = (
+        x32.transpose(1, 0, 2, 3),
+        dt32.transpose(1, 0, 2),
+        B32.transpose(1, 0, 2, 3),
+        C32.transpose(1, 0, 2, 3),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)             # (B,S,H,P)
+    if D is not None:
+        y = y + D.astype(f32)[None, None, :, None] * x32
+    return y.astype(x.dtype), hT.astype(f32)
+
+
+def ssd_decode(x, dt, A, Bt, Ct, D, state):
+    """One decode step. x (B,H,P), dt (B,H), Bt/Ct (B,G,N), state (B,H,P,N)."""
+    B, H, P = x.shape
+    G = Bt.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bt.astype(f32), rep, axis=1)
+    Ch = jnp.repeat(Ct.astype(f32), rep, axis=1)
+    decay = jnp.exp(A.astype(f32)[None, :] * dt.astype(f32))
+    upd = (dt.astype(f32)[..., None] * x.astype(f32))[..., None] * Bh[:, :, None, :]
+    new_state = decay[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    if D is not None:
+        y = y + D.astype(f32)[None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,167 @@
+"""Chunked SSD as a Pallas TPU kernel.
+
+Grid (B, H, n_chunks) with the chunk dimension sequential; the recurrent
+state (P x N) persists in VMEM scratch across chunk iterations. Each chunk
+does three MXU matmuls — the C.B^T quadratic form, the (L o S) @ dX intra
+term, and the dX^T @ (w o B) state update — so the sequential component is
+only the O(n_chunks) scalar-decay recurrence, exactly the SSD decomposition
+(arXiv:2405.21060) mapped onto the TPU memory hierarchy.
+
+Backward: custom_vjp differentiates the (numerically identical) chunked-jnp
+implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ssd_scan import chunked as cj
+
+
+def _kernel(A_ref, D_ref, x_ref, dt_ref, B_ref, C_ref, h0_ref,
+            y_ref, hT_ref, state, *, Q: int, nc: int, has_D: bool):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # (Q,)
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    A = A_ref[0]
+
+    a = A * dt                                          # (Q,) <= 0
+    cum = jnp.cumsum(a)                                 # (Q,)
+    total = cum[-1]
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # (Q, Q)  i x j
+    decay = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(decay), 0.0)
+    dx = dt[:, None] * x                                # (Q, P)
+    y = jax.lax.dot_general(
+        scores * L, dx, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # intra (Q, P)
+
+    # inter-chunk: y += exp(cum) * C @ state^T
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if has_D:
+        y = y + D_ref[0] * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(total) h + dx^T @ (w o B)
+    w = jnp.exp(total - cum)                            # (Q,)
+    hc = jax.lax.dot_general(
+        dx, w[:, None] * Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # (P, N)
+    state[...] = jnp.exp(total) * state[...] + hc
+
+    @pl.when(c == nc - 1)
+    def _done():
+        hT_ref[0, 0] = state[...]
+
+
+def _ssd_fwd_pallas(x, dt, A, Bmat, Cmat, D, init_state, chunk, interpret):
+    B, S, H, P = x.shape
+    _, _, G, N = Bmat.shape
+    rep = H // G
+    Q = cj._pick_chunk(S, chunk)
+    nc = S // Q
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    has_D = D is not None
+    D_arr = D.astype(jnp.float32) if has_D else jnp.zeros((H,), jnp.float32)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+    y, hT = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, nc=nc, has_D=has_D),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, c: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h, c: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, 1, N),
+                         lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N),
+                         lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(A.astype(jnp.float32), D_arr, x, dt, Bmat, Cmat, init_state)
+    return y, hT
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def ssd_pallas(x, dt, A, Bmat, Cmat, D=None, init_state=None,
+               chunk: int = 128, interpret: bool = False):
+    return _ssd_fwd_pallas(x, dt, A, Bmat, Cmat, D, init_state, chunk,
+                           interpret)
+
+
+def _ssd_fwd(x, dt, A, Bmat, Cmat, D, init_state, chunk, interpret):
+    y, hT = _ssd_fwd_pallas(x, dt, A, Bmat, Cmat, D, init_state, chunk,
+                            interpret)
+    return (y, hT), (x, dt, A, Bmat, Cmat, D, init_state)
+
+
+def _ssd_bwd(chunk, interpret, res, cts):
+    x, dt, A, Bmat, Cmat, D, init_state = res
+    has_D = D is not None
+    has_init = init_state is not None
+
+    def f(x, dt, A, Bmat, Cmat, D, init_state):
+        return cj.ssd_chunked_jnp(
+            x, dt, A, Bmat, Cmat,
+            D if has_D else None,
+            init_state if has_init else None,
+            chunk,
+        )
+
+    D_in = D if has_D else jnp.zeros((x.shape[2],), jnp.float32)
+    init_in = (
+        init_state if has_init
+        else jnp.zeros(
+            (x.shape[0], x.shape[2], x.shape[3], Bmat.shape[3]), jnp.float32
+        )
+    )
+    _, vjp = jax.vjp(f, x, dt, A, Bmat, Cmat, D_in, init_in)
+    dx, ddt, dA, dB, dC, dD, dh0 = vjp(cts)
+    return (dx, ddt, dA, dB, dC,
+            dD if has_D else None,
+            dh0 if has_init else None)
+
+
+ssd_pallas.defvjp(_ssd_fwd, _ssd_bwd)

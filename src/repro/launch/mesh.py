@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. The production target is a TPU v5e pod of 16x16=256 chips;
+multi-pod doubles it with a leading "pod" axis over DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.common.parallel import ParallelCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for CPU smoke tests (1 device)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def ctx_for_mesh(mesh, *, fsdp: bool = True, remat: str = "block",
+                 shard_seq_moe: bool = True) -> ParallelCtx:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return ParallelCtx(
+        mesh=mesh,
+        dp_axes=dp,
+        fsdp_axis="data" if (fsdp and "data" in names
+                             and mesh.shape["data"] > 1) else None,
+        tp_axis="model" if "model" in names else None,
+        shard_seq_moe=shard_seq_moe,
+        remat=remat,
+    )

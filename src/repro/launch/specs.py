@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs(arch, shape)` returns the abstract inputs the dry-run lowers
+with — weak-type-correct, shardable, zero allocation. Frontend stubs supply
+precomputed frame/patch embedding SDS per the brief.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.common.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.frontends import frontend_embed_shape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out = {}
+    shape = frontend_embed_shape(cfg, batch, seq)
+    if cfg.frontend == "vision_stub":
+        out["patches"] = SDS(shape, jnp.dtype(cfg.dtype))
+    elif cfg.frontend == "audio_stub":
+        out["frames"] = SDS(shape, jnp.dtype(cfg.dtype))
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    n_text = S - cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else S
+    batch = {"tokens": SDS((B, n_text + 1), jnp.int32)}
+    batch.update(_frontend_specs(cfg, B, S))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_stub":
+        # encoder consumes S frames; decoder prompt is a BOS token
+        return {
+            "tokens": SDS((B, 1), jnp.int32),
+            **_frontend_specs(cfg, B, S),
+        }
+    n_text = S - cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else S
+    batch = {"tokens": SDS((B, n_text), jnp.int32)}
+    batch.update(_frontend_specs(cfg, B, S))
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return SDS((shape.global_batch,), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Abstract inputs for the cell's step function (see launch.dryrun)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    return {
+        "token": decode_token_specs(cfg, shape),
+        "t": SDS((), jnp.int32),
+    }

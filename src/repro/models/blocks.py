@@ -1,0 +1,272 @@
+"""Layer-pattern derivation and super-block scan assembly.
+
+Heterogeneous layer stacks (Jamba's 1:7 attn:mamba with period-2 MoE) are
+handled by scanning over *super-blocks*: the layer pattern repeats with
+period = lcm(moe_period, attn_period); params for each position-in-period are
+stacked over the num_layers/period blocks, and `lax.scan` runs over blocks.
+HLO size is therefore independent of depth while the layer pattern is exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.parallel import ParallelCtx
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.models.module import Initializer, stack_inits
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    kind: str            # "attn" | "ssm"
+    moe: bool
+    cross: bool = False  # enc-dec decoder layer with cross-attention
+    causal: bool = True
+
+
+def super_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.num_experts:
+        p = math.lcm(p, cfg.moe_layer_period)
+    if cfg.family == "hybrid" and cfg.attn_layer_period:
+        p = math.lcm(p, cfg.attn_layer_period)
+    return p
+
+
+def pattern(cfg: ModelConfig, cross: bool = False, causal: bool = True):
+    per = super_period(cfg)
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return [
+        LayerDesc(
+            kind="attn" if cfg.is_attn_layer(j) else "ssm",
+            moe=cfg.is_moe_layer(j),
+            cross=cross,
+            causal=causal,
+        )
+        for j in range(per)
+    ]
+
+
+# ------------------------------------------------------------------ init
+def layer_init(key, cfg: ModelConfig, desc: LayerDesc):
+    init = Initializer(key, jnp.dtype(cfg.param_dtype))
+    rmsnorm_init(init.child("pre_norm"), cfg.d_model)
+    if desc.kind == "attn":
+        attn.attn_init(init.child("attn"), cfg)
+    else:
+        ssm_mod.ssm_init(init.child("ssm"), cfg)
+    if desc.cross:
+        rmsnorm_init(init.child("cross_norm"), cfg.d_model)
+        attn.attn_init(init.child("cross"), cfg, cross=True)
+    rmsnorm_init(init.child("ffn_norm"), cfg.d_model)
+    if desc.moe:
+        moe_mod.moe_init(init.child("moe"), cfg)
+    elif cfg.d_ff:
+        mlp_init(init.child("mlp"), cfg)
+    return init.collect()
+
+
+def stack_init(key, cfg: ModelConfig, cross: bool = False,
+               causal: bool = True, n_layers: Optional[int] = None):
+    """Init all layers, stacked by position-in-period. Returns (params, axes)."""
+    descs = pattern(cfg, cross, causal)
+    n_layers = n_layers if n_layers is not None else cfg.num_layers
+    nb = n_layers // len(descs)
+    params, axes = {}, {}
+    keys = jax.random.split(key, len(descs))
+    for j, desc in enumerate(descs):
+        pj, aj = stack_inits(
+            lambda k, d=desc: layer_init(k, cfg, d), keys[j], nb
+        )
+        params[f"pos{j}"] = pj
+        axes[f"pos{j}"] = aj
+    return params, axes
+
+
+# ------------------------------------------------------------------ apply
+def _apply_layer_train(p, x, cfg: ModelConfig, desc: LayerDesc,
+                       ctx: ParallelCtx, enc_out=None):
+    """One layer, full-sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    if desc.kind == "attn":
+        h = attn.self_attention(p["attn"], h, cfg, causal=desc.causal,
+                                ctx=ctx)
+    else:
+        h = ssm_mod.ssm_block(p["ssm"], h, cfg)
+    x = x + h
+    if desc.cross:
+        h = rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        enc_kv = attn.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(p["cross"], h, enc_kv, cfg)
+    h = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if desc.moe:
+        h, a = moe_mod.moe_ep(p["moe"], h, cfg, ctx)
+        aux = aux + a
+    elif cfg.d_ff:
+        h = mlp(p["mlp"], h, cfg)
+    else:
+        h = jnp.zeros_like(x)
+    return x + h, aux
+
+
+def stack_apply(params, x, cfg: ModelConfig, ctx: ParallelCtx,
+                cross: bool = False, causal: bool = True, enc_out=None):
+    """Full-sequence stack (training / prefill without cache)."""
+    descs = pattern(cfg, cross, causal)
+
+    def body(carry, blk):
+        x, aux = carry
+        for j, desc in enumerate(descs):
+            x, a = _apply_layer_train(blk[f"pos{j}"], x, cfg, desc, ctx,
+                                      enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    if ctx.remat == "block":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+    return x, aux
+
+
+# --------------------------------------------------------------- caches
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                cross: bool = False, enc_len: int = 0):
+    """Decode caches, mirroring the stacked-params structure."""
+    descs = pattern(cfg, cross)
+    nb = cfg.num_layers // len(descs)
+    dtype = jnp.dtype(cfg.dtype)
+    caches = {}
+    for j, desc in enumerate(descs):
+        c = {}
+        if desc.kind == "attn":
+            shape = (nb, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            c["k"] = jnp.zeros(shape, dtype)
+            c["v"] = jnp.zeros(shape, dtype)
+        else:
+            H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            gn = ssm_mod.NGROUPS * N
+            W = cfg.conv_width
+            c["state"] = jnp.zeros((nb, batch, H, Pd, N), jnp.float32)
+            c["tail_x"] = jnp.zeros((nb, batch, W - 1, cfg.d_inner), dtype)
+            c["tail_B"] = jnp.zeros((nb, batch, W - 1, gn), dtype)
+            c["tail_C"] = jnp.zeros((nb, batch, W - 1, gn), dtype)
+        if desc.cross:
+            shape = (nb, batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+            c["cross_k"] = jnp.zeros(shape, dtype)
+            c["cross_v"] = jnp.zeros(shape, dtype)
+        caches[f"pos{j}"] = c
+    return caches
+
+
+def _apply_layer_decode(p, c, x, t, cfg: ModelConfig, desc: LayerDesc,
+                        ctx: ParallelCtx):
+    """One layer, one token. Returns (x, new_cache)."""
+    nc = dict(c)
+    h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    if desc.kind == "attn":
+        h, (nc["k"], nc["v"]) = attn.decode_self_attention(
+            p["attn"], h, cfg, c["k"], c["v"], t
+        )
+    else:
+        h, (nc["state"], (nc["tail_x"], nc["tail_B"], nc["tail_C"])) = (
+            ssm_mod.ssm_decode_step(
+                p["ssm"], h, cfg, c["state"],
+                (c["tail_x"], c["tail_B"], c["tail_C"]),
+            )
+        )
+    x = x + h
+    if desc.cross:
+        h = rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        x = x + attn.decode_cross_attention(
+            p["cross"], h, (c["cross_k"], c["cross_v"]), cfg
+        )
+    h = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if desc.moe:
+        h, _ = moe_mod.moe_ep(p["moe"], h, cfg, ctx)
+    elif cfg.d_ff:
+        h = mlp(p["mlp"], h, cfg)
+    else:
+        h = jnp.zeros_like(x)
+    return x + h, nc
+
+
+def stack_decode(params, caches, x, t, cfg: ModelConfig, ctx: ParallelCtx,
+                 cross: bool = False):
+    """One decode step through the whole stack. x: (B, 1, d)."""
+    descs = pattern(cfg, cross)
+
+    def body(x, inp):
+        blk, cache = inp
+        new_cache = {}
+        for j, desc in enumerate(descs):
+            x, new_cache[f"pos{j}"] = _apply_layer_decode(
+                blk[f"pos{j}"], cache[f"pos{j}"], x, t, cfg, desc, ctx
+            )
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
+def stack_prefill(params, x, t0, cfg: ModelConfig, ctx: ParallelCtx,
+                  max_seq: int, cross: bool = False, enc_out=None):
+    """Prefill: full-sequence forward that also materializes decode caches."""
+    descs = pattern(cfg, cross)
+    B, S, _ = x.shape
+    dtype = jnp.dtype(cfg.dtype)
+
+    def body(carry, blk):
+        x, aux = carry
+        cache = {}
+        for j, desc in enumerate(descs):
+            p = blk[f"pos{j}"]
+            c = {}
+            h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+            if desc.kind == "attn":
+                h, (k, v) = attn.self_attention(
+                    p["attn"], h, cfg, causal=desc.causal, return_kv=True,
+                    ctx=ctx,
+                )
+                pad = max_seq - S
+                c["k"] = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                c["v"] = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            else:
+                h, (state, tails) = ssm_mod.ssm_block(
+                    p["ssm"], h, cfg, return_state=True
+                )
+                c["state"] = state
+                c["tail_x"], c["tail_B"], c["tail_C"] = tails
+            x = x + h
+            if desc.cross:
+                hh = rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+                ck, cv = attn.encode_cross_kv(p["cross"], enc_out, cfg)
+                c["cross_k"], c["cross_v"] = ck, cv
+                x = x + attn.cross_attention(p["cross"], hh, (ck, cv), cfg)
+            h = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+            if desc.moe:
+                h, a = moe_mod.moe_ep(p["moe"], h, cfg, ctx)
+                aux = aux + a
+            elif cfg.d_ff:
+                h = mlp(p["mlp"], h, cfg)
+            else:
+                h = jnp.zeros_like(x)
+            x = x + h
+            cache[f"pos{j}"] = c
+        return (x, aux), cache
+
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params
+    )
+    return x, caches

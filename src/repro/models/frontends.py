@@ -1,0 +1,34 @@
+"""Modality frontend STUBS (per the brief): the transformer backbone is built
+in full; the SigLIP vision tower / speech feature extractor are replaced by
+precomputed patch/frame embeddings supplied as model inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int, seq_len: int):
+    """Shape of the precomputed frontend embeddings for a workload cell.
+
+    vision_stub: fixed num_prefix_tokens patch embeddings per example.
+    audio_stub : seq_len encoder frames per example (the encoder consumes
+                 the frames; the decoder length is the text side).
+    """
+    if cfg.frontend == "vision_stub":
+        return (batch, cfg.num_prefix_tokens, cfg.d_model)
+    if cfg.frontend == "audio_stub":
+        return (batch, seq_len, cfg.d_model)
+    return None
+
+
+def synthetic_frontend_embeds(cfg: ModelConfig, batch: int, seq_len: int,
+                              key=None):
+    shape = frontend_embed_shape(cfg, batch, seq_len)
+    if shape is None:
+        return None
+    key = key if key is not None else jax.random.PRNGKey(17)
+    return jax.random.normal(key, shape, jnp.dtype(cfg.dtype)) * 0.02

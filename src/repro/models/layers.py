@@ -1,0 +1,98 @@
+"""Shared layers: RMSNorm, embedding, RoPE, dense MLP."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.module import Initializer
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(init: Initializer, d: int, name: str = "scale"):
+    init.param(name, (d,), ("embed",), init="ones")
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(init: Initializer, cfg: ModelConfig):
+    init.param(
+        "embedding", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+        init="embedding",
+    )
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    out = jnp.take(params["embedding"], tokens, axis=0)
+    return out.astype(jnp.dtype(cfg.dtype)) * jnp.sqrt(
+        jnp.asarray(cfg.d_model, jnp.dtype(cfg.dtype))
+    )
+
+
+def unembed(params, x, cfg: ModelConfig, head_params=None):
+    """Project to vocab logits. Uses tied embedding when configured."""
+    if cfg.tie_embeddings:
+        w = params["embedding"]  # (V, d)
+        return jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    w = head_params["lm_head"]   # (d, V)
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def lm_head_init(init: Initializer, cfg: ModelConfig):
+    if not cfg.tie_embeddings:
+        init.param(
+            "lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+            init="normal",
+        )
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, D) with positions (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                        # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (...,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense MLP
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def mlp_init(init: Initializer, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act in GATED_ACTS:
+        init.param("w_gate", (d, ff), ("embed", "ff"))
+    init.param("w_up", (d, ff), ("embed", "ff"))
+    init.param("w_down", (ff, d), ("ff", "embed"))
+
+
+def mlp(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    if cfg.act in GATED_ACTS:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        nl = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = nl(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))

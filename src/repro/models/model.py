@@ -1,0 +1,164 @@
+"""Top-level model API used by the runtime, launcher, tests and benchmarks.
+
+Families:
+  dense/moe/ssm/hybrid/vlm -> decoder-only LM (vlm prepends patch embeddings)
+  audio (enc-dec)          -> encoder over frame embeddings + causal decoder
+                              with per-layer cross-attention
+
+Public surface:
+  init_model(cfg, key)                        -> (params, axes)
+  forward(params, batch, cfg, ctx)            -> (logits, aux)
+  loss_fn(params, batch, cfg, ctx)            -> (loss, metrics)
+  prefill(params, batch, cfg, ctx, max_seq)   -> (caches, logits_last)
+  decode_step(params, token, caches, t, ...)  -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.parallel import ParallelCtx
+from repro.models import blocks
+from repro.models.layers import (
+    embed,
+    embed_init,
+    lm_head_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from repro.models.module import Initializer
+
+MOE_AUX_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+
+# ------------------------------------------------------------------ init
+def init_model(cfg: ModelConfig, key):
+    init = Initializer(key, jnp.dtype(cfg.param_dtype))
+    embed_init(init.child("embed"), cfg)
+    lm_head_init(init.child("head"), cfg)
+    rmsnorm_init(init.child("final_norm"), cfg.d_model)
+    params, axes = init.collect()
+    bp, ba = blocks.stack_init(key, cfg)
+    params["blocks"], axes["blocks"] = bp, ba
+    if cfg.num_encoder_layers:
+        ep, ea = blocks.stack_init(
+            jax.random.fold_in(key, 1),
+            cfg,
+            causal=False,
+            n_layers=cfg.num_encoder_layers,
+        )
+        enc_norm = Initializer(jax.random.fold_in(key, 2),
+                               jnp.dtype(cfg.param_dtype))
+        rmsnorm_init(enc_norm.child("final_norm"), cfg.d_model)
+        np_, na_ = enc_norm.collect()
+        params["encoder"] = {"blocks": ep, **np_}
+        axes["encoder"] = {"blocks": ea, **na_}
+        # decoder blocks get cross-attention
+        bp, ba = blocks.stack_init(jax.random.fold_in(key, 3), cfg, cross=True)
+        params["blocks"], axes["blocks"] = bp, ba
+    return params, axes
+
+
+def _encode(params, frames, cfg: ModelConfig, ctx: ParallelCtx):
+    x, _ = blocks.stack_apply(
+        params["encoder"]["blocks"], frames, cfg, ctx, causal=False
+    )
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _decoder_inputs(params, batch, cfg: ModelConfig):
+    """Token embeddings (+ vision prefix). Returns (x, n_prefix)."""
+    x = embed(params["embed"], batch["tokens"], cfg)
+    n_prefix = 0
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        pfx = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([pfx, x], axis=1)
+        n_prefix = pfx.shape[1]
+    return x, n_prefix
+
+
+# --------------------------------------------------------------- forward
+def forward(params, batch, cfg: ModelConfig, ctx: ParallelCtx):
+    """Teacher-forced forward. batch: tokens (B,S) [+ patches | frames]."""
+    x, n_prefix = _decoder_inputs(params, batch, cfg)
+    x = ctx.constrain(x, jax.sharding.PartitionSpec(ctx.dp_axes or None))
+    enc_out = None
+    cross = bool(cfg.num_encoder_layers)
+    if cross:
+        enc_out = _encode(params, batch["frames"].astype(x.dtype), cfg, ctx)
+    x, aux = blocks.stack_apply(
+        params["blocks"], x, cfg, ctx, cross=cross, enc_out=enc_out
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:, :]
+    logits = unembed(params["embed"], x, cfg, params.get("head"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ParallelCtx):
+    """Next-token cross-entropy (+ z-loss + MoE aux). tokens: (B, S+1)."""
+    tokens = batch["tokens"]
+    inputs = dict(batch, tokens=tokens[:, :-1])
+    labels = tokens[:, 1:]
+    logits, aux = forward(params, inputs, cfg, ctx)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - label_logit).mean()
+    z_loss = Z_LOSS_COEF * (logz**2).mean()
+    loss = nll + z_loss + MOE_AUX_COEF * aux
+    metrics = {
+        "loss": loss,
+        "nll": nll,
+        "z_loss": z_loss,
+        "moe_aux": aux,
+        "accuracy": (logits.argmax(-1) == labels).mean(),
+    }
+    return loss, metrics
+
+
+# ----------------------------------------------------------------- serve
+def prefill(params, batch, cfg: ModelConfig, ctx: ParallelCtx, max_seq: int):
+    """Process the prompt, build decode caches, return last-token logits."""
+    x, n_prefix = _decoder_inputs(params, batch, cfg)
+    enc_out = None
+    cross = bool(cfg.num_encoder_layers)
+    if cross:
+        enc_out = _encode(params, batch["frames"].astype(x.dtype), cfg, ctx)
+    x, caches = blocks.stack_prefill(
+        params["blocks"], x, 0, cfg, ctx, max_seq + n_prefix,
+        cross=cross, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, params.get("head"))
+    return caches, logits[:, 0, :]
+
+
+def decode_step(params, token, caches, t, cfg: ModelConfig,
+                ctx: ParallelCtx):
+    """One decode step. token: (B,) int32; t: scalar position."""
+    x = embed(params["embed"], token[:, None], cfg)
+    cross = bool(cfg.num_encoder_layers)
+    x, caches = blocks.stack_decode(
+        params["blocks"], caches, x, t, cfg, ctx, cross=cross
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, params.get("head"))
+    return logits[:, 0, :], caches
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                       enc_len: int = 0):
+    return blocks.init_caches(
+        cfg, batch, max_seq,
+        cross=bool(cfg.num_encoder_layers), enc_len=enc_len,
+    )

@@ -1,0 +1,136 @@
+"""Minimal functional module system.
+
+Params are plain pytrees of `jax.Array`. Alongside every params tree the init
+functions build a *matching* tree of logical-axis tuples (one string-or-None
+per array dim) which the sharding rules (runtime/sharding.py) and the tier
+engine (core/placement.py) consume. Keeping metadata out of the value tree
+keeps jit/scan/optimizer code trivial.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SHAPE_ONLY = contextvars.ContextVar("shape_only", default=False)
+
+
+@contextlib.contextmanager
+def shape_mode():
+    """Initializers produce ShapeDtypeStructs — allocation-free abstract init
+    (the dry-run path)."""
+    tok = _SHAPE_ONLY.set(True)
+    try:
+        yield
+    finally:
+        _SHAPE_ONLY.reset(tok)
+
+
+def shape_mode_active() -> bool:
+    return _SHAPE_ONLY.get()
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Logical description of one parameter tensor."""
+
+    axes: tuple[Optional[str], ...]
+
+    def __repr__(self):
+        return f"ParamSpec{self.axes}"
+
+
+class Initializer:
+    """Collects (value, axes) pairs during init.
+
+    Usage:
+        init = Initializer(key, dtype)
+        w = init.param("wq", (d, h, hd), ("embed", "qheads", "head_dim"))
+        ...
+        params, axes = init.collect()
+    """
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self._dtype = dtype
+        self._values: dict = {}
+        self._axes: dict = {}
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if shape_mode_active():
+            v = jax.ShapeDtypeStruct(shape, self._dtype)
+            self._values[name] = v
+            self._axes[name] = ParamSpec(tuple(axes))
+            return v
+        if init == "zeros":
+            v = jnp.zeros(shape, self._dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self._dtype)
+        elif init == "normal":
+            fan_in = shape[0] if shape else 1
+            s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            v = jax.random.normal(self._next_key(), shape, self._dtype) * s
+        elif init == "embedding":
+            v = jax.random.normal(self._next_key(), shape, self._dtype) * (
+                scale if scale is not None else 0.02
+            )
+        else:
+            raise ValueError(f"unknown init {init}")
+        self._values[name] = v
+        self._axes[name] = ParamSpec(tuple(axes))
+        return v
+
+    def child(self, name: str):
+        sub = Initializer(self._next_key(), self._dtype)
+        self._values[name] = sub._values
+        self._axes[name] = sub._axes
+        return sub
+
+    def collect(self):
+        return self._values, self._axes
+
+
+def stack_inits(init_fn: Callable, key: jax.Array, n: int):
+    """vmap an init over a leading 'layers' dim; axes get 'layers' prepended."""
+    if shape_mode_active():
+        values, axes = init_fn(key)
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), values
+        )
+    else:
+        keys = jax.random.split(key, n)
+        params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+        with shape_mode():
+            _, axes = init_fn(key)
+    axes = jax.tree.map(
+        lambda s: ParamSpec(("layers",) + s.axes),
+        axes,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return params, axes
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def axes_tree_map(fn, axes_tree):
+    return jax.tree.map(fn, axes_tree, is_leaf=is_spec)

@@ -1,0 +1,232 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths with identical math (up to capacity dropping):
+
+* `moe_dense` — computes every expert for every token and combines with the
+  top-k gate weights. Exact; O(E) compute; used as the oracle and for tiny
+  reduced configs.
+* `moe_ep` — production path: shard_map over the EP axis. Tokens are routed
+  with a capacity-bounded sort-based dispatch, exchanged with all_to_all,
+  processed by the local expert shard (optionally FSDP-gathering the expert
+  weights over the fsdp axis), and combined back. This is the DeepSeek-style
+  EP schedule expressed in jax.lax collectives.
+
+The router runs in fp32; gates are renormalized over the top-k.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.common.parallel import ParallelCtx
+from repro.models.module import Initializer
+
+
+def moe_init(init: Initializer, cfg: ModelConfig):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    init.param("router", (d, e), ("embed", "experts"))
+    if cfg.act in ("swiglu", "geglu"):
+        init.param("w_gate", (e, d, ff), ("experts", "embed", "moe_ff"))
+    init.param("w_up", (e, d, ff), ("experts", "embed", "moe_ff"))
+    init.param("w_down", (e, ff, d), ("experts", "moe_ff", "embed"))
+
+
+def _route(params, x32, cfg: ModelConfig):
+    """Router logits -> (gates (T,k) f32, expert ids (T,k) i32, probs (T,E))."""
+    logits = x32 @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _expert_ffn(w, h, cfg: ModelConfig):
+    """Batched expert FFN: h (E, C, d) -> (E, C, d)."""
+    dt = h.dtype
+    up = jnp.einsum("ecd,edf->ecf", h, w["w_up"].astype(dt))
+    if cfg.act in ("swiglu", "geglu"):
+        gate = jnp.einsum("ecd,edf->ecf", h, w["w_gate"].astype(dt))
+        nl = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        a = nl(gate) * up
+    else:
+        a = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", a, w["w_down"].astype(dt))
+
+
+def _aux_loss(probs, idx, cfg: ModelConfig):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    E = cfg.num_experts
+    f = jnp.mean(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / cfg.experts_per_token
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)
+
+
+# ------------------------------------------------------------------ dense
+def moe_dense(params, x, cfg: ModelConfig):
+    """Oracle path: every expert computed for every token."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, idx, probs = _route(params, xf.astype(jnp.float32), cfg)
+    combine = jnp.zeros((xf.shape[0], cfg.num_experts), jnp.float32)
+    combine = jax.vmap(lambda c, i, g: c.at[i].add(g))(combine, idx, gates)
+    # y_t = sum_e combine[t,e] * f_e(x_t): every expert applied to every token
+    out = _expert_ffn(
+        params,
+        jnp.broadcast_to(xf[None], (cfg.num_experts,) + xf.shape),
+        cfg,
+    )                                                           # (E,T,d)
+    y = jnp.einsum("etd,te->td", out.astype(jnp.float32),
+                   combine).astype(x.dtype)
+    aux = _aux_loss(probs, idx, cfg)
+    return y.reshape(B, S, d), aux
+
+
+# ------------------------------------------------------------------ EP
+def _capacity(tokens_local: int, cfg: ModelConfig) -> int:
+    c = math.ceil(
+        tokens_local * cfg.experts_per_token * cfg.capacity_factor
+        / cfg.num_experts
+    )
+    return max(int(c), 4)
+
+
+def _moe_local(params, x, cfg: ModelConfig, ep_axis: Optional[str],
+               fsdp_axis: Optional[str], ep_size: int, all_axes,
+               fsdp_mode: str = "rowcol"):
+    """Per-shard body (runs under shard_map). x: (T_loc, d).
+
+    fsdp_mode controls how the fsdp-sharded expert ff dim is handled:
+      "gather" — all-gather the weights per layer (classic FSDP). Wire cost
+                 scales with WEIGHT bytes x microbatches.
+      "rowcol" — column/row-parallel compute on the ff shard + one psum of
+                 the expert OUTPUT over the fsdp axis. Wire cost scales
+                 with TOKEN bytes — for MoE layers (huge weights, modest
+                 per-expert token counts) this is the winning schedule
+                 (kimi train_4k: 43.7s -> measured below in §Perf).
+    """
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    E_loc = E // ep_size
+    C = _capacity(T, cfg)
+
+    w = params
+    rowcol = fsdp_axis is not None and fsdp_mode == "rowcol"
+    if fsdp_axis is not None and not rowcol:
+        w = dict(params)
+        for name in ("w_gate", "w_up", "w_down"):
+            if name in params:
+                # FSDP: weights arrive sharded on their ff dim; gather/layer
+                # (cast to compute dtype FIRST: gather bf16, not fp32)
+                dim = 2 if name != "w_down" else 1
+                w[name] = jax.lax.all_gather(
+                    params[name].astype(jnp.dtype(cfg.dtype)),
+                    fsdp_axis, axis=dim, tiled=True,
+                )
+
+    gates, idx, probs = _route(w, x.astype(jnp.float32), cfg)
+
+    flat_e = idx.reshape(-1)                          # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    first = jnp.searchsorted(se, jnp.arange(E))
+    pos = jnp.arange(T * k) - first[se]
+    keep = pos < C
+    slot = se * C + jnp.where(keep, pos, 0)
+
+    send = jnp.zeros((E * C, d), x.dtype)
+    send = send.at[slot].add(jnp.where(keep[:, None], x[st], 0))
+    send = send.reshape(ep_size, E_loc, C, d)
+
+    if ep_axis is not None and ep_size > 1:
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0)
+    else:
+        recv = send
+    h = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep_size * C, d)
+
+    out = _expert_ffn(w, h, cfg)                      # (E_loc, M*C, d)
+    if rowcol:
+        # row-parallel epilogue: partial sums over the sharded ff dim
+        out = jax.lax.psum(out, fsdp_axis)
+
+    out = out.reshape(E_loc, ep_size, C, d).transpose(1, 0, 2, 3)
+    if ep_axis is not None and ep_size > 1:
+        back = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0)
+    else:
+        back = out
+    flat_back = back.reshape(E * C, d)
+
+    contrib = flat_back[slot].astype(jnp.float32) * sg[:, None]
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    y = jnp.zeros((T, d), jnp.float32).at[st].add(contrib)
+
+    # load-balance aux over the GLOBAL token set: psum the sufficient
+    # statistics (dispatch counts, router prob sums, token count) — the loss
+    # is not linear over token partitions, so pmean of per-shard losses
+    # would NOT match the dense oracle
+    counts = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=(0, 1))
+    p_sum = probs.sum(axis=0)
+    t_cnt = jnp.asarray(T, jnp.float32)
+    if all_axes:
+        counts = jax.lax.psum(counts, all_axes)
+        p_sum = jax.lax.psum(p_sum, all_axes)
+        t_cnt = jax.lax.psum(t_cnt, all_axes)
+    f = counts / (t_cnt * k)
+    p = p_sum / t_cnt
+    aux = E * jnp.sum(f * p)
+    return y.astype(x.dtype), aux
+
+
+def moe_ep(params, x, cfg: ModelConfig, ctx: ParallelCtx):
+    """Expert-parallel MoE. x: (B, S, d). Returns (y, aux_loss)."""
+    if ctx.mesh is None:
+        return moe_dense(params, x, cfg)
+    B, S, d = x.shape
+    ep_axis = ctx.tp_axis
+    ep_size = ctx.axis_size(ep_axis)
+    assert cfg.num_experts % max(ep_size, 1) == 0, (cfg.num_experts, ep_size)
+
+    seq_axis = (
+        ep_axis
+        if (ctx.shard_seq_moe and ep_axis and S % ep_size == 0 and S >= ep_size)
+        else None
+    )
+    dp = (
+        ctx.dp_axes
+        if (ctx.dp_axes and B % max(ctx.dp_size, 1) == 0 and ctx.dp_size > 1)
+        else None
+    )
+    x_spec = P(dp, seq_axis, None)
+    w_specs = {
+        "router": P(None, None),
+        "w_up": P(ep_axis, None, ctx.fsdp_axis),
+        "w_down": P(ep_axis, ctx.fsdp_axis, None),
+    }
+    if "w_gate" in params:
+        w_specs["w_gate"] = P(ep_axis, None, ctx.fsdp_axis)
+
+    def body(w, xs):
+        bs, ss = xs.shape[0], xs.shape[1]
+        y, aux = _moe_local(
+            w, xs.reshape(-1, d), cfg, ep_axis, ctx.fsdp_axis, ep_size,
+            ctx.all_axes, fsdp_mode=ctx.moe_fsdp_mode,
+        )
+        return y.reshape(bs, ss, d), aux
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=({k: w_specs[k] for k in params}, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(params, x)
+    return y, aux

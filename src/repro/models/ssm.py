@@ -1,0 +1,158 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> selective SSM ->
+gated RMSNorm -> out_proj.
+
+The scan itself is kernels/ssd_scan (chunked Pallas on TPU, exact jnp scan
+elsewhere). Decode keeps two small states per layer: the SSM state
+(B, H, P, N) and the conv tail (B, W-1, channels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models.module import Initializer
+
+NGROUPS = 1  # B/C groups (mamba2 default)
+
+
+def ssm_init(init: Initializer, cfg: ModelConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, w = cfg.ssm_heads, cfg.conv_width
+    gn = NGROUPS * n
+    init.param("w_in_x", (d, di), ("embed", "ssm_inner"))
+    init.param("w_in_z", (d, di), ("embed", "ssm_inner"))
+    init.param("w_in_B", (d, gn), ("embed", None))
+    init.param("w_in_C", (d, gn), ("embed", None))
+    init.param("w_in_dt", (d, h), ("embed", "ssm_heads"))
+    init.param("conv_x", (w, di), (None, "ssm_inner"), scale=0.5)
+    init.param("conv_B", (w, gn), (None, None), scale=0.5)
+    init.param("conv_C", (w, gn), (None, None), scale=0.5)
+    init.param("A_log", (h,), ("ssm_heads",), init="zeros")
+    init.param("D", (h,), ("ssm_heads",), init="ones")
+    init.param("dt_bias", (h,), ("ssm_heads",), init="zeros")
+    init.param("norm_scale", (di,), ("ssm_inner",), init="ones")
+    init.param("w_out", (di, d), ("ssm_inner", "embed"))
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x (B,S,C), w (W,C), tail (B,W-1,C) or None.
+
+    Returns (y (B,S,C), new_tail (B,W-1,C)).
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    new_tail = xp[:, -(W - 1) :, :] if W > 1 else tail
+    return y, new_tail
+
+
+def _project(params, x, cfg: ModelConfig):
+    dt_ = x.dtype
+    xs = jnp.einsum("bsd,di->bsi", x, params["w_in_x"].astype(dt_))
+    z = jnp.einsum("bsd,di->bsi", x, params["w_in_z"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["w_in_B"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["w_in_C"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_in_dt"].astype(dt_))
+    return xs, z, Bm, Cm, dt
+
+
+def _gated_norm(params, y, z, eps: float):
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(g32 * g32, axis=-1, keepdims=True)
+    return (
+        g32 * jax.lax.rsqrt(var + eps) * params["norm_scale"].astype(jnp.float32)
+    ).astype(y.dtype)
+
+
+def ssm_block(params, x, cfg: ModelConfig, return_state: bool = False,
+              init_state=None, conv_tail=None):
+    """Full-sequence SSD block. x: (B, S, d)."""
+    B, S, d = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs, z, Bm, Cm, dt = _project(params, x, cfg)
+
+    xs, tail_x = _causal_conv(xs, params["conv_x"].astype(x.dtype),
+                              conv_tail[0] if conv_tail else None)
+    Bm, tail_B = _causal_conv(Bm, params["conv_B"].astype(x.dtype),
+                              conv_tail[1] if conv_tail else None)
+    Cm, tail_C = _causal_conv(Cm, params["conv_C"].astype(x.dtype),
+                              conv_tail[2] if conv_tail else None)
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dtp = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, state = ssd_ops.ssd(
+        xs.reshape(B, S, H, Pd),
+        dtp,
+        A,
+        Bm.reshape(B, S, NGROUPS, N),
+        Cm.reshape(B, S, NGROUPS, N),
+        params["D"],
+        init_state,
+    )
+    y = _gated_norm(params, y.reshape(B, S, cfg.d_inner), z, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"].astype(x.dtype))
+    if return_state:
+        return out, (state, (tail_x, tail_B, tail_C))
+    return out
+
+
+def ssm_decode_step(params, x, cfg: ModelConfig, state, conv_tail):
+    """One-token decode. x (B,1,d); state (B,H,P,N); conv_tail 3-tuple."""
+    B, _, d = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs, z, Bm, Cm, dt = _project(params, x, cfg)
+
+    def step_conv(xt, w, tail):
+        # tail (B, W-1, C), xt (B,1,C)
+        xp = jnp.concatenate([tail, xt], axis=1)        # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", xp, w)[:, None, :]
+        return y, xp[:, 1:, :]
+
+    xs, tail_x = step_conv(xs, params["conv_x"].astype(x.dtype), conv_tail[0])
+    Bm, tail_B = step_conv(Bm, params["conv_B"].astype(x.dtype), conv_tail[1])
+    Cm, tail_C = step_conv(Cm, params["conv_C"].astype(x.dtype), conv_tail[2])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dtp = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )[:, 0]                                             # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_ops.ssd_decode(
+        xs[:, 0].reshape(B, H, Pd),
+        dtp,
+        A,
+        Bm[:, 0].reshape(B, NGROUPS, N),
+        Cm[:, 0].reshape(B, NGROUPS, N),
+        params["D"],
+        state,
+    )
+    y = _gated_norm(params, y.reshape(B, 1, cfg.d_inner), z, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"].astype(x.dtype))
+    return out, (new_state, (tail_x, tail_B, tail_C))
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, n_layers: int, dtype=None):
+    dtype = jnp.float32  # SSM state kept in fp32 for recurrence stability
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    gn = NGROUPS * cfg.ssm_state
+    state = jnp.zeros((n_layers, batch, H, Pd, N), dtype)
+    cdt = jnp.dtype(cfg.dtype)
+    W = cfg.conv_width
+    tails = (
+        jnp.zeros((n_layers, batch, W - 1, cfg.d_inner), cdt),
+        jnp.zeros((n_layers, batch, W - 1, gn), cdt),
+        jnp.zeros((n_layers, batch, W - 1, gn), cdt),
+    )
+    return state, tails

@@ -1,0 +1,70 @@
+"""AdamW in pure JAX, structured so the moment tensors are first-class
+tier-placement candidates: they are the coldest large state in training
+(touched once per step, never by forward/backward), which makes them the
+prime pool-tier residents under the paper's hotness ordering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig):
+    count = opt_state["count"] + 1
+    c = count.astype(jnp.float32)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,16 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    # warm from step 1 so the first optimizer step is never a no-op
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,1 @@
+from repro.profiler.hlo import HloCostModel, analyze_hlo  # noqa

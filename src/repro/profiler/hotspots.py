@@ -1,0 +1,112 @@
+"""Hotspot attribution: aggregate dot-flops / HBM bytes / collective wire
+bytes by source scope (jax op_name path), with while-loop trip multipliers.
+The dry-run profiler's equivalent of a wall-clock profile."""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.profiler.hlo import (
+    COLLECTIVES,
+    _cond_trip_count,
+    _dot_flops,
+    _group_size,
+    _parse_computations,
+    _shape_bytes_elems,
+)
+
+
+def _scope_key(scope: str, depth: int) -> str:
+    parts = [p for p in scope.split("/") if p and not p.startswith("jit(")]
+    # drop while/body noise, keep semantic names
+    parts = [p for p in parts if p not in
+             ("while", "body", "cond", "closed_call", "jvp()", )]
+    return "/".join(parts[:depth]) if parts else "(unscoped)"
+
+
+def hotspots(hlo: str, depth: int = 3, default_group: int = 1):
+    comps = _parse_computations(hlo)
+    shape_of = {}
+    for c in comps.values():
+        for op in c.ops:
+            shape_of[op.name] = op.out_type
+
+    # computation -> trip multiplier (product over enclosing whiles)
+    mult = defaultdict(lambda: 1.0)
+    # build call graph with multipliers, starting from entry
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for m in re.finditer(
+                r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)", op.attrs
+            ):
+                called.add(m.group(1))
+    entries = [c for c in comps if c not in called]
+    entry = max(entries, key=lambda c: len(comps[c].ops), default=None)
+    if entry is None:
+        return {}
+
+    seen = set()
+
+    def walk(name, factor):
+        if name not in comps or (name, factor) in seen:
+            return
+        seen.add((name, factor))
+        mult[name] = max(mult[name], factor) if name in mult else factor
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                trip = 1
+                if mc and mc.group(1) in comps:
+                    trip = _cond_trip_count(comps[mc.group(1)]) or 1
+                if mb:
+                    walk(mb.group(1), factor * trip)
+            else:
+                for m in re.finditer(
+                    r"(?:calls|to_apply|true_computation|false_computation)=%?([\w\.\-]+)",
+                    op.attrs,
+                ):
+                    walk(m.group(1), factor)
+
+    mult[entry] = 1.0
+    walk(entry, 1.0)
+
+    agg = defaultdict(lambda: {"flops": 0.0, "wire": 0.0, "count": 0})
+    for cname, c in comps.items():
+        f = mult.get(cname, 1.0)
+        for op in c.ops:
+            key = _scope_key(op.scope, depth)
+            if op.opcode == "dot":
+                agg[key]["flops"] += f * _dot_flops(op, shape_of)
+                agg[key]["count"] += 1
+            for ck in COLLECTIVES:
+                if op.opcode.startswith(ck):
+                    in_b = sum(
+                        _shape_bytes_elems(shape_of.get(o, ""))[0]
+                        for o in op.operands
+                    )
+                    g = _group_size(op, default_group)
+                    w = in_b * (g - 1) / max(g, 1)
+                    if ck == "all-reduce":
+                        w *= 2
+                    elif ck == "all-gather":
+                        w = op.out_bytes * (g - 1) / max(g, 1)
+                    agg[key]["wire"] += f * w
+                    agg[key]["count"] += 1
+    return dict(agg)
+
+
+def print_hotspots(hlo: str, depth: int = 4, top: int = 15):
+    agg = hotspots(hlo, depth)
+    rows = sorted(agg.items(), key=lambda kv: -kv[1]["flops"])
+    print(f"{'scope':70s} {'Tflops':>10s} {'wireGB':>8s}")
+    for k, v in rows[:top]:
+        print(f"{k[:70]:70s} {v['flops'] / 1e12:10.2f} "
+              f"{v['wire'] / 1e9:8.2f}")
+    rows = sorted(agg.items(), key=lambda kv: -kv[1]["wire"])
+    print("--- by wire ---")
+    for k, v in rows[:top // 2]:
+        print(f"{k[:70]:70s} {v['flops'] / 1e12:10.2f} "
+              f"{v['wire'] / 1e9:8.2f}")

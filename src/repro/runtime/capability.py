@@ -1,0 +1,59 @@
+"""Backend capability probes for memory-kind (tier) annotations.
+
+XLA:TPU supports pinned_host placement on inputs, outputs and internal
+transfers; XLA:CPU (this container) accepts pinned_host *inputs* but hits
+UNIMPLEMENTED on output placement annotations. The tier engine degrades
+gracefully: placements are always tracked logically; physical annotations are
+applied per capability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@functools.cache
+def supports_host_input() -> bool:
+    try:
+        mesh = jax.sharding.Mesh(jax.devices()[:1], ("x",))
+        s = NamedSharding(mesh, P(), memory_kind="pinned_host")
+        x = jax.ShapeDtypeStruct((8,), jnp.float32)
+        jax.jit(lambda a: a * 2, in_shardings=s).lower(x).compile()
+        return True
+    except Exception:
+        return False
+
+
+@functools.cache
+def supports_host_output() -> bool:
+    try:
+        mesh = jax.sharding.Mesh(jax.devices()[:1], ("x",))
+        s = NamedSharding(mesh, P(), memory_kind="pinned_host")
+        x = jax.ShapeDtypeStruct((8,), jnp.float32)
+        jax.jit(lambda a: a * 2, out_shardings=s).lower(x).compile()
+        return True
+    except Exception:
+        return False
+
+
+@functools.cache
+def supports_internal_transfer() -> bool:
+    try:
+        x = jnp.ones((8,))
+
+        def f(a):
+            b = jax.device_put(
+                a, jax.memory.TransferToMemoryKind("pinned_host")
+            )
+            return jax.device_put(
+                b, jax.memory.TransferToMemoryKind("device")
+            ) * 2
+
+        jax.jit(f).lower(x).compile()
+        return True
+    except Exception:
+        return False

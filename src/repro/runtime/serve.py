@@ -1,0 +1,103 @@
+"""Serve-step builders: prefill (prompt -> caches) and decode (one token vs
+the KV cache / SSM state). `decode_32k` and `long_500k` cells lower the
+decode step; `prefill_32k` lowers prefill — per the brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.common.parallel import ParallelCtx
+from repro.models import model as M
+from repro.models.module import shape_mode
+from repro.runtime import sharding as shd
+
+
+def abstract_params(cfg: ModelConfig, serve_dtype: bool = True):
+    """Abstract param tree; serving uses inference dtype (bf16) weights."""
+    with shape_mode():
+        params, axes = M.init_model(cfg, jax.random.PRNGKey(0))
+    if serve_dtype:
+        dt = jnp.dtype(cfg.dtype)
+
+        def cast(p):
+            if jnp.issubdtype(p.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(p.shape, dt)
+            return p
+
+        params = jax.tree.map(cast, params)
+    return params, axes
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                    enc_len: int = 0):
+    caches = jax.eval_shape(
+        lambda: M.make_decode_caches(cfg, batch, max_seq, enc_len)
+    )
+    return caches
+
+
+def build_prefill(cfg: ModelConfig, ctx: ParallelCtx, max_seq: int):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, ctx, max_seq)
+
+    return prefill_step
+
+
+def build_decode(cfg: ModelConfig, ctx: ParallelCtx):
+    def decode_step(params, token, caches, t):
+        return M.decode_step(params, token, caches, t, cfg, ctx)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeBundle:
+    prefill_fn: Any
+    decode_fn: Any
+    param_shardings: Any
+    cache_shardings: Any
+    abstract_params: Any
+    abstract_caches: Any
+
+
+def make_bundle(cfg: ModelConfig, ctx: ParallelCtx,
+                rules: shd.ShardingRules, mesh,
+                batch: int, max_seq: int, enc_len: int = 0,
+                param_shardings_override=None) -> ServeBundle:
+    aparams, axes = abstract_params(cfg)
+    param_sh = param_shardings_override or shd.shardings_for_tree(
+        aparams, axes, rules, mesh
+    )
+    acaches = abstract_caches(cfg, batch, max_seq, enc_len)
+    cache_sh = shd.named(
+        mesh, shd.cache_pspec(acaches, ctx.dp_axes, ctx.tp_axis, mesh)
+    )
+    batch_shardable = (
+        ctx.dp_axes and batch % max(ctx.dp_size, 1) == 0 and ctx.dp_size > 1
+    )
+    tok_sh = shd.named(
+        mesh, P(ctx.dp_axes) if batch_shardable else P()
+    )
+    # prompt batch: dim0 (requests) over dp axes — a prefix sharding covers
+    # every leaf of the batch dict (tokens / patches / frames)
+    prompt_sh = shd.named(
+        mesh, P(ctx.dp_axes) if batch_shardable else P()
+    )
+    prefill = jax.jit(
+        build_prefill(cfg, ctx, max_seq),
+        in_shardings=(param_sh, prompt_sh),
+    )
+    decode = jax.jit(
+        build_decode(cfg, ctx),
+        in_shardings=(param_sh, tok_sh, cache_sh, None),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    return ServeBundle(prefill, decode, param_sh, cache_sh, aparams, acaches)

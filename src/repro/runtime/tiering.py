@@ -1,0 +1,107 @@
+"""Glue: paper's placement engine -> jit sharding annotations.
+
+Takes a built TrainBundle, derives the per-device access profile of the
+training state, runs the placement policy against the emulated tier topology
+(paper-style pool_fraction), and re-jits the step with pinned_host memory
+kinds on the pool-tier leaves. Degrades per backend capability (XLA:CPU only
+supports host placement on inputs — see runtime/capability.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.common.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.common.parallel import ParallelCtx
+from repro.common.pytree import leaf_bytes, named_leaves
+from repro.core import access as acc
+from repro.core import placement as plc
+from repro.core import tiers as tr
+from repro.runtime import capability
+from repro.runtime import sharding as shd
+from repro.runtime import train as train_rt
+
+
+def shard_counts(pspec_tree, mesh) -> dict:
+    out = {}
+    for name, spec in named_leaves(pspec_tree):
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                n *= mesh.shape[a]
+        out[name] = n
+    return out
+
+
+def per_device_profile(state, pspecs, mesh, cfg: ModelConfig,
+                       shape: ShapeConfig, remat: str):
+    profile = acc.train_profile(state, cfg, shape, remat)
+    counts = shard_counts(pspecs, mesh)
+    out = []
+    for a in profile:
+        n = counts.get(a.name, 1)
+        out.append(dataclasses.replace(a, bytes=a.bytes // max(n, 1)))
+    return out
+
+
+def apply_tier_shardings(cfg: ModelConfig, ctx: ParallelCtx,
+                         tcfg: TrainConfig, rules: shd.ShardingRules,
+                         mesh, batch_specs, bundle: train_rt.TrainBundle,
+                         shape: ShapeConfig, *, policy: str,
+                         pool_fraction: float):
+    """Returns (abstract_state, new bundle, tier_info dict)."""
+    astate = bundle.abstract_state
+    pspecs = train_rt.state_pspecs(astate, bundle.axes, rules, mesh)
+    profile = per_device_profile(astate, pspecs, mesh, cfg, shape, ctx.remat)
+
+    working_set = sum(a.bytes for a in profile)
+    topo = tr.emulated(pool_fraction, working_set)
+    placement = plc.place(profile, topo, policy, pool_fraction)
+
+    host_ok = capability.supports_host_input()
+    out_ok = capability.supports_host_output()
+
+    def retier(path_sh):
+        name, sh = path_sh
+        if host_ok and placement.tier_of(name) == "host":
+            return NamedSharding(
+                sh.mesh, sh.spec, memory_kind="pinned_host"
+            )
+        return sh
+
+    flat = named_leaves(bundle.state_shardings)
+    new_flat = [retier(p) for p in flat]
+    treedef = jax.tree_util.tree_structure(bundle.state_shardings)
+    state_sh = jax.tree_util.tree_unflatten(treedef, new_flat)
+
+    step = train_rt.build_train_step(cfg, ctx, tcfg)
+    jit_kwargs = dict(in_shardings=(state_sh, bundle.batch_shardings))
+    if out_ok:
+        jit_kwargs["out_shardings"] = (state_sh, None)
+        jit_kwargs["donate_argnums"] = (0,)
+    jitted = jax.jit(step, **jit_kwargs)
+
+    new_bundle = train_rt.TrainBundle(
+        jitted, state_sh, bundle.batch_shardings, astate, bundle.axes
+    )
+    info = {
+        "policy": policy,
+        "pool_fraction": pool_fraction,
+        "corridor": plc.corridor_check(placement),
+        "pool_bytes_per_dev": placement.pool_bytes,
+        "local_bytes_per_dev": placement.local_bytes,
+        "predicted_t_memory_s": placement.t_memory,
+        "predicted_slowdown_vs_all_hbm": placement.slowdown,
+        "host_annotation": "inputs" if host_ok and not out_ok else (
+            "inputs+outputs" if out_ok else "logical-only"),
+        "n_pool_tensors": sum(
+            1 for v in placement.assignment.values() if v == "host"
+        ),
+    }
+    return astate, new_bundle, info

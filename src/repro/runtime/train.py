@@ -1,0 +1,172 @@
+"""Train-step builder: microbatched grad accumulation, clipping, AdamW,
+sharding-annotated jit. The returned bundle carries everything the launcher
+and the dry-run need (abstract state, shardings, the jittable step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.common.parallel import ParallelCtx
+from repro.models import model as M
+from repro.models.module import shape_mode
+from repro.optim import adamw, schedule
+from repro.runtime import sharding as shd
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params, axes = M.init_model(cfg, key)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "opt": adamw.adamw_init(params),
+    }
+    return state, axes
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """Allocation-free state skeleton (ShapeDtypeStructs) + axes tree."""
+    with shape_mode():
+        params, axes = M.init_model(cfg, jax.random.PRNGKey(0))
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "params": params,
+        "opt": {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+    return state, axes
+
+
+def state_pspecs(state, axes, rules: shd.ShardingRules, mesh):
+    p = shd.pspecs_for_tree(state["params"], axes, rules, mesh)
+    return {
+        "step": P(),
+        "params": p,
+        "opt": {
+            "m": p,
+            "v": p,
+            "count": P(),
+        },
+    }
+
+
+def _microbatch(batch, k: int):
+    def split(x):
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(cfg: ModelConfig, ctx: ParallelCtx, tcfg: TrainConfig,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(weight_decay=tcfg.weight_decay)
+
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def train_step(state, batch):
+        params = state["params"]
+        lr = schedule.warmup_cosine(
+            state["step"],
+            peak_lr=tcfg.learning_rate,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+
+        def cast(p):
+            if jnp.issubdtype(p.dtype, jnp.floating):
+                return p.astype(compute_dtype)
+            return p
+
+        def loss_of(p, mb):
+            # cast master->compute INSIDE the differentiated function: the
+            # FSDP all-gathers then move bf16 tensors and the backward's
+            # data-parallel reductions psum bf16 partials (the fp32 convert
+            # lands after the collective) — halves the two dominant wire
+            # terms on jamba/kimi train
+            return M.loss_fn(jax.tree.map(cast, p), mb, cfg, ctx)
+
+        if tcfg.microbatches > 1:
+            mbs = _microbatch(batch, tcfg.microbatches)
+
+            def acc(carry, mb):
+                g_acc, metric_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_of, has_aux=True
+                )(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                metric_acc = jax.tree.map(jnp.add, metric_acc, metrics)
+                return (g_acc, metric_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            zero_m = {
+                k: jnp.zeros((), jnp.float32)
+                for k in ("loss", "nll", "z_loss", "moe_aux", "accuracy")
+            }
+            (grads, metrics), _ = jax.lax.scan(
+                acc, (zero_g, zero_m), mbs
+            )
+            grads = jax.tree.map(
+                lambda g: g / tcfg.microbatches, grads
+            )
+            metrics = jax.tree.map(
+                lambda m: m / tcfg.microbatches, metrics
+            )
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True
+            )(params, batch)
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        new_params, new_opt = adamw.adamw_update(
+            grads, state["opt"], params, lr, opt_cfg
+        )
+        new_state = {
+            "step": state["step"] + 1,
+            "params": new_params,
+            "opt": new_opt,
+        }
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainBundle:
+    step_fn: Any
+    state_shardings: Any
+    batch_shardings: Any
+    abstract_state: Any
+    axes: Any
+
+
+def make_bundle(cfg: ModelConfig, ctx: ParallelCtx, tcfg: TrainConfig,
+                rules: shd.ShardingRules, mesh, batch_example,
+                state_shardings_override=None,
+                donate: bool = True) -> TrainBundle:
+    """Everything needed to lower/run a training step on `mesh`."""
+    astate, axes = abstract_train_state(cfg)
+    pspecs = state_pspecs(astate, axes, rules, mesh)
+    state_sh = state_shardings_override or shd.named(mesh, pspecs)
+    batch_sh = shd.named(
+        mesh, shd.batch_pspec(batch_example, ctx.dp_axes, mesh)
+    )
+    step = build_train_step(cfg, ctx, tcfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        donate_argnums=(0,) if donate else (),
+    )
+    return TrainBundle(jitted, state_sh, batch_sh, astate, axes)

@@ -1,0 +1,6 @@
+from repro.sched.scheduler import (  # noqa
+    Job,
+    InterferenceAwareScheduler,
+    RandomScheduler,
+    simulate_colocation,
+)

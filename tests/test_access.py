@@ -1,0 +1,89 @@
+"""Level-1 access profiles and bandwidth-capacity curves."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import configs
+from repro.common.config import SHAPES
+from repro.core import access as acc
+from repro.core.access import TensorAccess
+from repro.runtime import serve as serve_rt
+from repro.runtime import train as train_rt
+
+
+def test_expected_expert_fraction():
+    cfg = configs.get("kimi_k2_1t_a32b")
+    assert acc.expected_expert_fraction(cfg, 1) == pytest.approx(
+        8 / 384, rel=1e-6
+    )
+    big = acc.expected_expert_fraction(cfg, 10**6)
+    assert big > 0.999
+    dense = configs.get("smollm_360m")
+    assert acc.expected_expert_fraction(dense, 5) == 1.0
+
+
+def test_train_profile_moments_cold():
+    cfg = configs.reduced("smollm_360m")
+    state, _ = train_rt.abstract_train_state(cfg)
+    prof = acc.train_profile(state, cfg, SHAPES["train_4k"])
+    cats = {a.category for a in prof}
+    assert "moment" in cats and "param" in cats
+    m = [a for a in prof if a.category == "moment"]
+    p = [a for a in prof if a.category == "param"]
+    assert max(a.touches for a in m) < min(a.touches for a in p)
+
+
+def test_serve_profile_moe_skew():
+    """Kimi decode: expert tensors must be far colder than attention — the
+    Fig 6 skew that makes the 1T MoE pool-friendly."""
+    cfg = configs.get("kimi_k2_1t_a32b")
+    params, _ = serve_rt.abstract_params(cfg)
+    prof = acc.serve_profile(params, None, cfg, SHAPES["decode_32k"])
+    exp = [a for a in prof if a.category == "expert"]
+    att = [a for a in prof if a.category == "param"]
+    assert exp and att
+    # the Zipf cold tail must be colder than any always-touched param;
+    # the hottest experts may saturate at 1.0 with 128 tokens/step
+    assert min(a.touches for a in exp) < 0.5
+    mean_exp = sum(a.touches for a in exp) / len(exp)
+    assert mean_exp < min(a.touches for a in att)
+
+
+curve_profiles = st.lists(
+    st.tuples(st.integers(1, 10**8), st.floats(0.01, 50.0)),
+    min_size=1, max_size=30,
+)
+
+
+@given(curve_profiles)
+@settings(max_examples=100, deadline=None)
+def test_bwcap_curve_properties(entries):
+    prof = [TensorAccess(f"t{i}", b, t, "param")
+            for i, (b, t) in enumerate(entries)]
+    xs, ys = acc.bandwidth_capacity_curve(prof)
+    assert xs[0] == 0 and ys[0] == 0
+    assert xs[-1] == pytest.approx(1.0)
+    assert ys[-1] == pytest.approx(1.0)
+    assert np.all(np.diff(xs) >= -1e-12)
+    assert np.all(np.diff(ys) >= -1e-12)
+    # hot-first ordering makes the curve concave-ish: y >= x everywhere
+    assert np.all(ys >= xs - 1e-9)
+
+
+def test_curve_skew_detects_moe():
+    """MoE serve curve must be more skewed than dense serve curve."""
+    kimi = configs.get("kimi_k2_1t_a32b")
+    dense = configs.get("qwen2_5_32b")
+    pk, _ = serve_rt.abstract_params(kimi)
+    pd, _ = serve_rt.abstract_params(dense)
+    sk = acc.serve_profile(pk, None, kimi, SHAPES["long_500k"])
+    sd = acc.serve_profile(pd, None, dense, SHAPES["long_500k"])
+
+    def hot20(prof):
+        xs, ys = acc.bandwidth_capacity_curve(prof)
+        i = np.searchsorted(xs, 0.2)
+        return ys[min(i, len(ys) - 1)]
+
+    assert hot20(sk) > hot20(sd)

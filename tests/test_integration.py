@@ -1,0 +1,86 @@
+"""End-to-end fault-tolerance integration: checkpoint/restart must continue
+bit-compatibly (deterministic data keyed by step), straggler watchdog flags
+outliers, quantify pipeline runs for every runnable cell."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.common.config import TrainConfig
+from repro.data.synthetic import make_batch_for
+from repro.launch.mesh import ctx_for_mesh
+from repro.runtime import sharding as shd
+from repro.runtime import train as train_rt
+from repro.runtime.fault import StragglerWatchdog
+
+
+def _train(cfg, mesh, steps, start_state, start=0):
+    ctx = ctx_for_mesh(mesh, fsdp=False, remat="none")
+    rules = shd.ShardingRules.for_training(None, ctx.tp_axis)
+    tcfg = TrainConfig(total_steps=20, warmup_steps=2)
+    batch = make_batch_for(cfg, 16, 4, 0)
+    bundle = train_rt.make_bundle(cfg, ctx, tcfg, rules, mesh, batch,
+                                  donate=False)
+    state = start_state
+    for step in range(start, steps):
+        b = make_batch_for(cfg, 16, 4, step)
+        state, metrics = bundle.step_fn(state, b)
+    return state, metrics
+
+
+def test_restart_continues_exactly(tmp_path, smoke_mesh):
+    cfg = configs.reduced("granite_3_2b")
+    init, _ = train_rt.init_train_state(cfg, jax.random.PRNGKey(0))
+
+    # straight 8-step run
+    final_a, _ = _train(cfg, smoke_mesh, 8, init)
+
+    # 4 steps -> checkpoint -> restore -> 4 more
+    mid, _ = _train(cfg, smoke_mesh, 4, init)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, mid, blocking=True)
+    restored = mgr.restore(4, jax.tree.map(jnp.zeros_like, mid))
+    final_b, _ = _train(cfg, smoke_mesh, 8, restored, start=4)
+
+    for a, b in zip(jax.tree.leaves(final_a["params"]),
+                    jax.tree.leaves(final_b["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_watchdog_flags():
+    dog = StragglerWatchdog(threshold=2.0, warmup_steps=0)
+    for s in range(8):
+        dog.observe(s, 0.1)
+    rep = dog.observe(8, 0.5)
+    assert rep is not None and rep.ratio > 2
+    assert dog.observe(9, 0.1) is None
+    # ewma uncontaminated by the outlier
+    assert abs(dog.ewma - 0.1) < 0.02
+    assert len(dog.flagged) == 1
+
+
+def test_restart_policy_backoff():
+    from repro.runtime.fault import RestartPolicy
+
+    pol = RestartPolicy(max_restarts=2, backoff_s=0.0)
+    assert pol.should_restart(RuntimeError("x"))
+    assert pol.should_restart(RuntimeError("x"))
+    assert not pol.should_restart(RuntimeError("x"))
+
+
+@pytest.mark.parametrize("arch,shape", configs.all_cells())
+def test_quantify_every_cell(arch, shape):
+    """The paper's 3-level analysis must run for every runnable cell."""
+    from repro.core.quantify import analyze
+
+    a = analyze(arch, shape, policy="hotness", pool_fraction="auto",
+                use_dryrun=False)
+    assert a.level1["footprint_bytes_per_chip"] > 0
+    assert 0 <= a.level2["r_access_pool"] <= 1
+    s = a.level3["sensitivity"]
+    assert s["loi_0"] == pytest.approx(1.0)
+    assert s["loi_50"] <= 1.0 + 1e-9
+    assert a.level3["interference_coefficient"] >= 1.0

@@ -1,0 +1,148 @@
+"""Level-3 interference model + interference-aware scheduler."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import interference as itf
+from repro.core import tiers as tr
+from repro.sched import (
+    InterferenceAwareScheduler,
+    Job,
+    RandomScheduler,
+    simulate_colocation,
+)
+from repro.sched.scheduler import five_number_summary
+
+
+def mk_profile(pool_frac_traffic=0.3, ai_seconds=0.01, traffic=1e9):
+    topo = tr.emulated(0.5, traffic)
+    return itf.InterferenceProfile(
+        arch="x", shape="y",
+        pool_traffic=traffic * pool_frac_traffic,
+        local_traffic=traffic * (1 - pool_frac_traffic),
+        t_compute=ai_seconds,
+        topo=topo,
+    )
+
+
+def test_queueing_monotone():
+    xs = [itf.queueing_slowdown(r) for r in (0.0, 0.3, 0.6, 0.9, 0.99)]
+    assert xs[0] == 1.0
+    assert all(a < b for a, b in zip(xs, xs[1:]))
+
+
+@given(
+    st.floats(0.0, 0.9),         # pool traffic share
+    st.floats(1e-4, 1.0),        # compute seconds
+    st.floats(0.0, 0.5),         # LoI
+)
+@settings(max_examples=200, deadline=None)
+def test_sensitivity_bounded_and_monotone(pool_share, t_comp, loi):
+    p = mk_profile(pool_share, t_comp)
+    s = p.sensitivity(loi)
+    assert 0.0 < s <= 1.0 + 1e-9
+    # more interference never helps
+    assert p.sensitivity(min(loi + 0.2, 0.9)) <= s + 1e-9
+
+
+def test_compute_bound_insensitive():
+    """Paper Fig 10 HPL quadrant: compute-bound -> ~no degradation."""
+    p = mk_profile(pool_frac_traffic=0.3, ai_seconds=10.0, traffic=1e6)
+    assert p.sensitivity(0.5) > 0.99
+
+
+def test_pool_bound_sensitive():
+    """Paper Hypre/NekRS quadrant: pool-bound + low AI -> sensitive."""
+    p = mk_profile(pool_frac_traffic=0.9, ai_seconds=1e-4, traffic=1e12)
+    assert p.sensitivity(0.5) < 0.7
+
+
+def test_ic_reflects_injection():
+    loud = mk_profile(0.9, 1e-4, 1e12)
+    quiet = mk_profile(0.01, 1.0, 1e6)
+    assert loud.interference_coefficient() > quiet.interference_coefficient()
+    assert quiet.interference_coefficient() >= 1.0
+
+
+def test_lbench_loi_monotone_in_nflop():
+    topo = tr.v5e_topology()
+    lois = [itf.lbench_loi(nf, 1 << 20, topo) for nf in (1, 8, 64, 512)]
+    assert all(a >= b - 1e-12 for a, b in zip(lois, lois[1:]))
+    assert lois[0] == pytest.approx(1.0)  # 1 flop/elem saturates the link
+
+
+def test_lbench_beyond_saturation():
+    """Paper Fig 11-middle: PCM saturates at link bw; IC keeps rising."""
+    topo = tr.v5e_topology()
+    rows = itf.lbench_intensity_sweep(topo, nflops=(1, 2, 4, 8))
+    bw = [r["pcm_bw"] for r in rows]
+    ic = [r["ic"] for r in rows]
+    assert bw[0] == bw[1] == pytest.approx(topo.pool.bandwidth)
+    assert ic[0] >= ic[1] >= ic[2]
+
+
+# --------------------------------------------------------- scheduler
+def _jobs():
+    """Realistic mix: a few link-heavy jobs, many compute-bound ones — the
+    co-location decision only matters when pools are not all saturated."""
+    rng = np.random.default_rng(0)
+    jobs = []
+    for i in range(16):
+        pool_share = rng.uniform(0.05, 0.6)
+        traffic = 10 ** rng.uniform(7.5, 9.5)
+        t_comp = 10 ** rng.uniform(-2.5, -1.0)
+        jobs.append(
+            Job(f"job{i}", mk_profile(pool_share, t_comp, traffic), steps=50)
+        )
+    return jobs
+
+
+def _total_slowdown(pools):
+    total = 0.0
+    for p in pools:
+        for j in p.jobs:
+            bg = p.background_loi_for(j)
+            total += 1.0 / max(j.sensitivity(bg), 1e-6)
+    return total
+
+
+def test_aware_beats_random():
+    jobs = _jobs()
+    slow_rand = []
+    for seed in range(5):
+        rs = RandomScheduler(4, 4, seed=seed)
+        for j in jobs:
+            assert rs.place(j) is not None
+        slow_rand.append(_total_slowdown(rs.pools))
+    aw = InterferenceAwareScheduler(4, 4)
+    assert aw.place_all(jobs)
+    # batch-aware vs random baseline: must beat the random MEAN (greedy is
+    # not an offline optimum, so single lucky seeds may tie it)
+    assert _total_slowdown(aw.pools) <= np.mean(slow_rand) + 1e-9
+
+
+def test_colocation_simulation_fig13():
+    """Interference-aware (LoI capped 0-20%) cuts mean AND p75 vs random
+    (0-50%) for a sensitive workload — the paper's Fig 13."""
+    sensitive = Job("hypre-like", mk_profile(0.8, 1e-4, 1e12), steps=120)
+    base = simulate_colocation(sensitive, 100, loi_range=(0.0, 0.5), seed=1)
+    aware = simulate_colocation(sensitive, 100, loi_range=(0.0, 0.2), seed=1)
+    sb, sa = five_number_summary(base), five_number_summary(aware)
+    assert sa["mean"] < sb["mean"]
+    assert sa["p75"] < sb["p75"]
+    assert sa["max"] <= sb["max"]
+    # insensitive workload sees ~no benefit (paper: XSBench/HPL)
+    stoic = Job("hpl-like", mk_profile(0.3, 10.0, 1e6), steps=120)
+    b2 = simulate_colocation(stoic, 50, loi_range=(0.0, 0.5), seed=2)
+    a2 = simulate_colocation(stoic, 50, loi_range=(0.0, 0.2), seed=2)
+    assert np.mean(a2) == pytest.approx(np.mean(b2), rel=0.01)
+
+
+def test_pool_capacity_respected():
+    aw = InterferenceAwareScheduler(2, 1)
+    jobs = _jobs()[:3]
+    assert aw.place(jobs[0]) is not None
+    assert aw.place(jobs[1]) is not None
+    assert aw.place(jobs[2]) is None  # full

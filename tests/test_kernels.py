@@ -1,0 +1,206 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs the pure-jnp oracle
+(deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ref as dref
+from repro.kernels.decode_attention.decode_attention import flash_decode
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.flash_attention.chunked import mha_chunked
+from repro.kernels.flash_attention.flash_attention import flash_mha
+from repro.kernels.lbench import ref as lref
+from repro.kernels.lbench.lbench import lbench_pallas
+from repro.kernels.ssd_scan import ref as sref
+from repro.kernels.ssd_scan.chunked import ssd_chunked_jnp
+from repro.kernels.ssd_scan.ssd_scan import ssd_pallas
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------------- lbench
+@pytest.mark.parametrize("nflop", [1, 2, 5, 16, 32])
+@pytest.mark.parametrize("n", [512, 4096])
+def test_lbench_sweep(nflop, n):
+    a = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32)
+    r = lref.lbench(a, nflop)
+    p = lbench_pallas(a, nflop, interpret=True)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_lbench_flops_model():
+    assert lref.flops(100, 1) == 100
+    assert lref.flops(100, 2) == 200
+    assert lref.flops(100, 5) == 500
+    assert lref.bytes_moved(100) == 800
+
+
+# ----------------------------------------------------- flash attention
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,KV,D,causal,dtype",
+    [
+        (2, 256, 256, 4, 2, 64, True, jnp.float32),
+        (1, 512, 512, 4, 1, 128, True, jnp.float32),
+        (2, 128, 512, 4, 4, 64, True, jnp.float32),   # decode-window offset
+        (2, 256, 256, 4, 2, 64, False, jnp.float32),
+        (2, 256, 256, 8, 2, 64, True, jnp.bfloat16),
+    ],
+)
+def test_flash_pallas_sweep(B, Sq, Skv, H, KV, D, causal, dtype):
+    off = Skv - Sq if Skv != Sq else 0
+    ks = jax.random.split(jax.random.PRNGKey(Sq + H), 3)
+    q = _rand(ks[0], (B, Sq, H, D), dtype)
+    k = _rand(ks[1], (B, Skv, KV, D), dtype)
+    v = _rand(ks[2], (B, Skv, KV, D), dtype)
+    r = fref.mha(q, k, v, causal=causal, kv_offset=off)
+    p = flash_mha(q, k, v, causal, None, off, 128, 128, True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(p, np.float32), np.asarray(r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_chunked_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = _rand(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (2, 256, 2, 64), jnp.float32)
+    g1 = jax.grad(lambda *a: (mha_chunked(*a, True, None, 0, 64, 64) ** 2)
+                  .sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: (fref.mha(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_flash_pallas_bwd_pairing():
+    """Pallas fwd (interpret) + chunked bwd == oracle grads."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    g1 = jax.grad(
+        lambda *a: (flash_mha(*a, True, None, 0, 128, 128, True) ** 2).sum(),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    g2 = jax.grad(lambda *a: (fref.mha(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+# ----------------------------------------------------- decode attention
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,dtype",
+    [
+        (2, 512, 8, 2, 64, jnp.float32),
+        (1, 1024, 4, 4, 128, jnp.float32),
+        (3, 256, 6, 2, 32, jnp.float32),
+        (2, 512, 8, 2, 64, jnp.bfloat16),
+    ],
+)
+def test_decode_pallas_sweep(B, S, H, KV, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + D), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    k = _rand(ks[1], (B, S, KV, D), dtype)
+    v = _rand(ks[2], (B, S, KV, D), dtype)
+    length = jnp.array([(S // 2 + 7 * i) % S + 1 for i in range(B)],
+                       jnp.int32)
+    r = dref.decode_mha(q, k, v, length)
+    p = flash_decode(q, k, v, length, interpret=True, block_k=128)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(p, np.float32), np.asarray(r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_decode_ragged_lengths():
+    B, S, H, KV, D = 4, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    length = jnp.array([1, 17, 100, 256], jnp.int32)
+    r = dref.decode_mha(q, k, v, length)
+    p = flash_decode(q, k, v, length, interpret=True, block_k=64)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+# -------------------------------------------------------------- SSD
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,Q",
+    [
+        (2, 256, 4, 16, 1, 32, 64),
+        (1, 128, 4, 32, 2, 16, 32),
+        (2, 128, 8, 16, 1, 64, 128),
+        (1, 192, 2, 8, 1, 8, 64),    # non-pow2 S
+    ],
+)
+def test_ssd_pallas_sweep(B, S, H, P, G, N, Q):
+    ks = jax.random.split(jax.random.PRNGKey(S + N + P), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    yr, hr = sref.ssd(x, dt, A, Bm, Cm, D)
+    yp, hp = ssd_pallas(x, dt, A, Bm, Cm, D, None, Q, True)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunked_initial_state_and_grads():
+    B, S, H, P, G, N = 1, 128, 4, 16, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 7)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    h0 = jax.random.normal(ks[6], (B, H, P, N)) * 0.1
+    yr, hr = sref.ssd(x, dt, A, Bm, Cm, D, h0)
+    yc, hc = ssd_chunked_jnp(x, dt, A, Bm, Cm, D, h0, 32)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    g1 = jax.grad(lambda x: (ssd_chunked_jnp(x, dt, A, Bm, Cm, D, h0, 32)[0]
+                             ** 2).sum())(x)
+    g2 = jax.grad(lambda x: (sref.ssd(x, dt, A, Bm, Cm, D, h0)[0]
+                             ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_decode_matches_scan():
+    B, H, P, G, N = 2, 4, 16, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    state = jax.random.normal(ks[5], (B, H, P, N)) * 0.3
+    x = jax.random.normal(ks[0], (B, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bt = jax.random.normal(ks[3], (B, G, N))
+    Ct = jax.random.normal(ks[4], (B, G, N))
+    D = jnp.ones((H,))
+    y1, s1 = sref.ssd_decode(x, dt, A, Bt, Ct, D, state)
+    # one-step full scan from the same initial state
+    y2, s2 = sref.ssd(x[:, None], dt[:, None], A, Bt[:, None], Ct[:, None],
+                      D, state)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,137 @@
+"""Level-2 placement: policy semantics + hypothesis property tests on the
+system's invariants."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import placement as plc
+from repro.core import tiers as tr
+from repro.core.access import TensorAccess
+
+
+def mk_profile(entries):
+    return [TensorAccess(f"t{i}", b, t, "param")
+            for i, (b, t) in enumerate(entries)]
+
+
+@pytest.fixture
+def topo():
+    return tr.emulated(0.5, 4000)
+
+
+def test_all_local(topo):
+    p = plc.place(mk_profile([(1000, 5), (3000, 1)]), topo, "all_local")
+    assert p.pool_bytes == 0
+    assert p.r_access_pool == 0
+    assert p.slowdown == 1.0
+
+
+def test_first_touch_spills_in_order(topo):
+    # local cap = 0.5 * 4000 = 2000 -> first two fit, rest spill
+    prof = mk_profile([(1000, 1), (1000, 1), (1000, 9), (1000, 9)])
+    p = plc.place(prof, topo, "first_touch", 0.5)
+    assert p.assignment["t0"] == "hbm" and p.assignment["t1"] == "hbm"
+    assert p.assignment["t2"] == "host" and p.assignment["t3"] == "host"
+    assert p.r_access_pool == 0.9
+
+
+def test_hotness_keeps_hot_local(topo):
+    prof = mk_profile([(1000, 1), (1000, 1), (1000, 9), (1000, 9)])
+    p = plc.place(prof, topo, "hotness", 0.5)
+    assert p.assignment["t2"] == "hbm" and p.assignment["t3"] == "hbm"
+    assert p.r_access_pool == 0.1
+    # the paper's BFS case study: hotness strictly beats first-touch
+    ft = plc.place(prof, topo, "first_touch", 0.5)
+    assert p.t_memory < ft.t_memory
+
+
+def test_corridor_check(topo):
+    prof = mk_profile([(1000, 9), (1000, 1)])
+    p = plc.place(prof, topo, "hotness", 0.5)
+    c = plc.corridor_check(p)
+    assert c["r_cap_pool"] == 0.5
+    assert 0 <= c["r_access_pool"] <= 1
+
+
+profiles = st.lists(
+    st.tuples(
+        st.integers(min_value=1, max_value=10**9),   # bytes
+        st.floats(min_value=0.01, max_value=100.0),  # touches
+    ),
+    min_size=1,
+    max_size=40,
+)
+fractions = st.floats(min_value=0.05, max_value=0.95)
+
+
+@given(profiles, fractions)
+@settings(max_examples=150, deadline=None)
+def test_capacity_invariant(entries, f):
+    """No policy may overfill the emulated local tier."""
+    prof = mk_profile(entries)
+    total = sum(a.bytes for a in prof)
+    topo = tr.emulated(f, total)
+    for policy in ("first_touch", "hotness", "balanced_bw", "capacity"):
+        p = plc.place(prof, topo, policy, f)
+        assert p.local_bytes <= (1 - f) * total + 1e-6
+        assert p.local_bytes + p.pool_bytes == total
+        assert 0.0 <= p.r_access_pool <= 1.0
+
+
+equal_byte_profiles = st.tuples(
+    st.integers(min_value=1, max_value=10**7),
+    st.lists(st.floats(min_value=0.01, max_value=100.0), min_size=1,
+             max_size=40),
+)
+
+
+@given(equal_byte_profiles, fractions)
+@settings(max_examples=150, deadline=None)
+def test_hotness_optimal_equal_sizes(sizes_touches, f):
+    """With equal tensor sizes the greedy hotness order IS the knapsack
+    optimum, so it must beat (or tie) first-touch. (With unequal sizes the
+    problem is the paper's NP-complete knapsack and greedy is a heuristic.)
+    """
+    b, touches = sizes_touches
+    prof = mk_profile([(b, t) for t in touches])
+    total = sum(a.bytes for a in prof)
+    topo = tr.emulated(f, total)
+    hot = plc.place(prof, topo, "hotness", f)
+    ft = plc.place(prof, topo, "first_touch", f)
+    assert hot.pool_traffic <= ft.pool_traffic + 1e-6
+
+
+@given(profiles, fractions)
+@settings(max_examples=100, deadline=None)
+def test_placement_deterministic(entries, f):
+    prof = mk_profile(entries)
+    total = sum(a.bytes for a in prof)
+    topo = tr.emulated(f, total)
+    p1 = plc.place(prof, topo, "hotness", f)
+    p2 = plc.place(prof, topo, "hotness", f)
+    assert p1.assignment == p2.assignment
+
+
+def test_balanced_bw_leaves_traffic_on_pool():
+    """When hotness would park ~all traffic in HBM, balanced_bw keeps the
+    pool link fed at >= R_bw (the paper's tiers-ADD-bandwidth point)."""
+    prof = mk_profile([(100, 10)] * 10 + [(10**6, 0.01)] * 2)
+    total = sum(a.bytes for a in prof)
+    topo = tr.emulated(0.4, total)
+    bal = plc.place(prof, topo, "balanced_bw", 0.4)
+    assert bal.r_access_pool >= bal.r_bw_pool - 1e-9
+
+
+def test_multi_tier_roofline_math():
+    from repro.core import roofline as rl
+
+    # balanced access attains the sum of bandwidths
+    b = rl.multi_tier_bandwidth([0.98, 0.02], [98.0, 2.0])
+    assert abs(b - 100.0) < 1e-9
+    # all-local attains only the local tier
+    assert abs(rl.multi_tier_bandwidth([1.0, 0.0], [98.0, 2.0]) - 98.0) < 1e-9
+    # pool-heavy collapses towards the pool link
+    assert rl.multi_tier_bandwidth([0.5, 0.5], [98.0, 2.0]) == pytest.approx(
+        4.0
+    )

@@ -1,0 +1,225 @@
+"""Optimizer, schedules, gradient compression, data pipeline, checkpoint."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import PrefetchPipeline
+from repro.data.synthetic import SyntheticLM
+from repro.optim import adamw as aw
+from repro.optim import compress
+from repro.optim.schedule import warmup_cosine
+
+
+# ---------------------------------------------------------------- adamw
+def test_adamw_step_math():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 0.5)}
+    cfg = aw.AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    st = aw.adamw_init(params)
+    new_p, st = aw.adamw_update(grads, st, params, 0.1, cfg)
+    # first step: mhat = g, vhat = g^2 -> step = g/|g| = 1
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.ones(4) - 0.1, rtol=1e-5)
+    assert int(st["count"]) == 1
+
+
+def test_adamw_weight_decay():
+    params = {"w": jnp.full((2,), 2.0)}
+    grads = {"w": jnp.zeros((2,))}
+    cfg = aw.AdamWConfig(weight_decay=0.1)
+    st = aw.adamw_init(params)
+    new_p, _ = aw.adamw_update(grads, st, params, 0.5, cfg)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 2.0 - 0.5 * 0.1 * 2.0,
+                               rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    clipped, norm = aw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(3 * 16 + 4 * 9))
+    cn = aw.global_norm(clipped)
+    assert float(cn) == pytest.approx(1.0, rel=1e-5)
+    # under the limit: untouched
+    clipped2, _ = aw.clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), np.asarray(g["a"]))
+
+
+def test_warmup_cosine():
+    lr0 = float(warmup_cosine(0, peak_lr=1.0, warmup_steps=10,
+                              total_steps=100))
+    lr10 = float(warmup_cosine(10, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100))
+    lr100 = float(warmup_cosine(100, peak_lr=1.0, warmup_steps=10,
+                                total_steps=100))
+    assert lr0 == pytest.approx(0.1)  # warms from step 1: never a no-op
+    assert lr10 == pytest.approx(1.0)
+    assert lr100 == pytest.approx(0.1)  # floor
+    assert float(warmup_cosine(55, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) < lr10
+
+
+# ----------------------------------------------------------- compression
+def test_quantize_roundtrip_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    q, s = compress.quantize(g)
+    err = jnp.abs(compress.dequantize(q, s) - g).max()
+    assert float(err) <= float(s) / 2 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the long-run mean of compressed grads converges
+    to the true mean (unbiased in the time-average)."""
+    g = jnp.full((256,), 1e-3)  # small, heavily quantized
+    e = jnp.zeros((256,))
+    total = jnp.zeros((256,))
+    for _ in range(50):
+        gi = g + e
+        q, s = compress.quantize(gi)
+        deq = compress.dequantize(q, s)
+        e = gi - deq
+        total = total + deq
+    mean = total / 50
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g), rtol=0.05)
+
+
+# ------------------------------------------------------------------ data
+def test_synthetic_deterministic():
+    ds = SyntheticLM(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    b1 = ds.batch_at(7)
+    b2 = ds.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = ds.batch_at(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (4, 33)
+    assert int(b1["tokens"].max()) < 128
+
+
+def test_pipeline_order_and_skip():
+    ds = SyntheticLM(vocab_size=64, seq_len=8, global_batch=2, seed=0)
+    pipe = PrefetchPipeline(ds.batch_at, start_step=5, depth=2)
+    try:
+        s, b = pipe.get()
+        assert s == 5
+        s, _ = pipe.get()
+        assert s == 6
+        pipe.skip_to(100)
+        # drain whatever was in flight, then see 100+
+        seen = [pipe.get()[0] for _ in range(4)]
+        assert max(seen) >= 100
+        assert sorted(seen)[-2:] == list(range(sorted(seen)[-2],
+                                               sorted(seen)[-2] + 2))
+    finally:
+        pipe.close()
+
+
+# ------------------------------------------------------------ checkpoint
+@pytest.fixture
+def ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _state(x=1.0):
+    return {
+        "step": jnp.asarray(3),
+        "params": {"w": jnp.full((4, 4), x), "b": jnp.arange(4.0)},
+        "opt": {"m": {"w": jnp.zeros((4, 4)), "b": jnp.zeros(4)}},
+    }
+
+
+def test_checkpoint_roundtrip(ckpt_dir):
+    mgr = CheckpointManager(ckpt_dir)
+    st = _state(2.5)
+    mgr.save(10, st, blocking=True)
+    assert mgr.latest_step() == 10
+    restored = mgr.restore(10, jax.tree.map(jnp.zeros_like, st))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_rotation(ckpt_dir):
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(float(s)), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_corruption_detected(ckpt_dir):
+    mgr = CheckpointManager(ckpt_dir)
+    st = _state()
+    mgr.save(5, st, blocking=True)
+    # corrupt the arrays file
+    path = os.path.join(ckpt_dir, "step_00000005", "arrays.npz")
+    data = dict(np.load(path))
+    data["a0"] = data["a0"] + 1
+    np.savez(path, **data)
+    with pytest.raises(IOError, match="checksum"):
+        mgr.restore(5, st)
+
+
+def test_checkpoint_async_then_wait(ckpt_dir):
+    mgr = CheckpointManager(ckpt_dir)
+    mgr.save(1, _state())          # non-blocking
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_elastic_restore_structure_check(ckpt_dir):
+    mgr = CheckpointManager(ckpt_dir)
+    mgr.save(2, _state(), blocking=True)
+    # leaf names absent from the checkpoint must raise
+    bad = {"params": {"not_a_param": jnp.zeros((4, 4))}}
+    with pytest.raises(KeyError):
+        mgr.restore(2, bad)
+    # partial restore (a subtree) is allowed — elastic re-shard relies on it
+    sub = {"params": {"w": jnp.zeros((4, 4)), "b": jnp.zeros(4)}}
+    out = mgr.restore(2, sub)
+    np.testing.assert_array_equal(np.asarray(out["params"]["b"]),
+                                  np.arange(4.0))
+
+
+# ------------------------------------------------------------ prefetch
+def test_scan_with_prefetch_matches_plain_scan():
+    from repro.runtime.prefetch import scan_with_prefetch
+
+    L, d = 6, 16
+    ws = jax.random.normal(jax.random.PRNGKey(0), (L, d, d))
+    bs = jax.random.normal(jax.random.PRNGKey(1), (L, d))
+    x0 = jnp.ones((d,))
+
+    def body(x, layer):
+        w, b = layer["w"], layer["b"]
+        y = jnp.tanh(x @ w + b)
+        return y, y.sum()
+
+    stacked = {"w": ws, "b": bs}
+    mask = {"w": True, "b": False}
+    y1, outs1 = scan_with_prefetch(body, x0, stacked, mask, L)
+    y2, outs2 = jax.lax.scan(body, x0, stacked)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs1), np.asarray(outs2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_scan_with_prefetch_jits():
+    from repro.runtime.prefetch import scan_with_prefetch
+
+    L, d = 4, 8
+    stacked = {"w": jnp.ones((L, d, d))}
+
+    def body(x, layer):
+        return x @ layer["w"], None
+
+    f = jax.jit(lambda x: scan_with_prefetch(
+        body, x, stacked, {"w": True}, L)[0])
+    out = f(jnp.ones((d,)))
+    assert bool(jnp.isfinite(out).all())
