@@ -1,8 +1,16 @@
-"""Paper Fig 13 / case study 2: 100 runs of each workload with co-located
-background whose LoI resamples every 60 steps — random scheduler (LoI
-0-50%) vs interference-aware (LoI 0-20%). Reports mean speedup and p75
-variability reduction, which must track each workload's sensitivity (the
-paper's Hypre-benefits-most / XSBench-flat result)."""
+"""Scheduler case study (paper §7.2), two scenarios.
+
+1. `fig13_sched_*` — the paper's Fig 13 per-workload Monte-Carlo: 100 runs
+   against a background whose LoI resamples every 60 steps, random (0-50%)
+   vs interference-aware (0-20%). Mean speedup / p75 cut must track each
+   workload's sensitivity (Hypre-benefits-most / XSBench-flat).
+
+2. `rack_trace_*` — the rack-scale event-driven simulator: a 1,000-job
+   synthetic trace over a 2x2x4 cluster (4 pools, 16 slots), FCFS /
+   random / aware / corridor-binpack. The aware policy must show strictly
+   lower slowdown variance than the random baseline (`aware_var_lower=True`
+   in the comparison row), and the whole trace must simulate in seconds.
+"""
 
 from __future__ import annotations
 
@@ -10,12 +18,20 @@ import numpy as np
 
 from repro import configs
 from repro.core.quantify import analyze
-from repro.sched import Job, simulate_colocation
+from repro.sched import (
+    ClusterSpec,
+    Job,
+    make_policy,
+    simulate,
+    simulate_colocation,
+    synthetic_stream,
+)
+from repro.sched.cluster import Cluster
 from repro.sched.scheduler import five_number_summary
 from benchmarks.common import emit, timed
 
 
-def run():
+def run_fig13():
     rows = []
     for arch in configs.list_archs():
         def case():
@@ -41,3 +57,42 @@ def run():
         rows.append({"arch": arch, "mean_speedup": mean_speedup,
                      "p75_cut": p75_cut})
     return rows
+
+
+def run_rack_trace(n_jobs: int = 1000, seed: int = 3):
+    jobs = synthetic_stream(n_jobs, seed=seed)
+    spec = ClusterSpec(n_racks=2, pools_per_rack=2, nodes_per_pool=4)
+    rows = []
+    summaries = {}
+    for name in ("fcfs", "random", "aware", "binpack"):
+        def case():
+            return simulate(jobs, Cluster.build(spec),
+                            make_policy(name, seed=11))
+
+        result, us = timed(case, repeats=1)
+        s = result.summary()
+        summaries[name] = s
+        emit(
+            f"rack_trace_{name}", us,
+            f"n_jobs={n_jobs} pools={spec.n_pools} "
+            f"mean_slowdown={s['mean_slowdown']:.3f} "
+            f"var_slowdown={s['var_slowdown']:.4f} "
+            f"p95_slowdown={s['p95_slowdown']:.3f} "
+            f"mean_wait_s={s['mean_wait_s']:.1f} "
+            f"makespan_s={s['makespan_s']:.0f}",
+        )
+        rows.append({"policy": name, **s})
+
+    var_aware = summaries["aware"]["var_slowdown"]
+    var_random = summaries["random"]["var_slowdown"]
+    emit(
+        "rack_trace_aware_vs_random", 0.0,
+        f"var_aware={var_aware:.4f} var_random={var_random:.4f} "
+        f"aware_var_lower={var_aware < var_random} "
+        f"var_cut={100 * (var_random - var_aware) / var_random:.1f}%",
+    )
+    return rows
+
+
+def run():
+    return run_fig13() + run_rack_trace()

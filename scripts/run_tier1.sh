@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test lane.
+#
+#   scripts/run_tier1.sh            # full tier-1 (the ROADMAP command)
+#   scripts/run_tier1.sh --fast     # fast lane: skips @pytest.mark.slow
+#   scripts/run_tier1.sh [pytest args...]   # extra args pass through
+set -euo pipefail
+cd "$(dirname "${BASH_SOURCE[0]}")/.."
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+
+extra=()
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  extra=(-m "not slow")
+fi
+exec python -m pytest -x -q "${extra[@]}" "$@"

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.placement import Placement
 from repro.core.tiers import TierTopology
 from repro.kernels.lbench import ref as lbench_ref
@@ -35,11 +37,47 @@ RHO_CAP = 0.95      # links time-slice: a victim is never fully starved
 LOI_SHARE_FLOOR = 0.1
 
 
-def queueing_slowdown(rho: float) -> float:
+def queueing_slowdown(rho):
     """M/D/1 mean service multiplier at utilization rho (capped at the
-    time-slicing limit — beyond ~95% the fabric arbiters round-robin)."""
-    rho = min(max(rho, 0.0), RHO_CAP)
+    time-slicing limit — beyond ~95% the fabric arbiters round-robin).
+    Broadcasts over numpy arrays; scalars come back as numpy scalars."""
+    rho = np.clip(rho, 0.0, RHO_CAP)
     return 1.0 + rho / (2.0 * (1.0 - rho))
+
+
+def step_time_vec(t_pool, t_local, t_compute, loi, overlap: bool = True):
+    """Victim-side step time under background LoI — the single source of
+    truth for the contention model, broadcasting over any argument.
+
+    The background stream occupies `loi` of the shared link; the victim's
+    own transfers are pipelined (they never queue against themselves) but
+    they lose bandwidth share and queue behind the background stream. The
+    rack-scale simulator calls this with whole-pool arrays of per-job
+    (t_pool, t_local, t_compute) against each job's background LoI.
+    """
+    loi = np.asarray(loi, dtype=np.float64)
+    t_pool_eff = (
+        t_pool * queueing_slowdown(loi)
+        / np.maximum(1.0 - loi, LOI_SHARE_FLOOR)
+    )
+    if overlap:
+        return np.maximum(np.maximum(t_compute, t_local), t_pool_eff)
+    return t_compute + t_local + t_pool_eff
+
+
+def background_lois(injected) -> np.ndarray:
+    """Per-victim background LoI inside one shared-link contention domain:
+    the sum of everyone ELSE's injected traffic, capped at saturation."""
+    injected = np.asarray(injected, dtype=np.float64)
+    return np.minimum(1.0, injected.sum() - injected)
+
+
+def progress_rates(t_pool, t_local, t_compute, bg_loi) -> np.ndarray:
+    """Per-job progress rate (fraction of isolated speed, in (0, 1]) at the
+    given background LoI. Vectorized over co-resident jobs."""
+    base = np.maximum(np.maximum(t_compute, t_local), t_pool)
+    base = np.maximum(base, 1e-12)
+    return base / step_time_vec(t_pool, t_local, t_compute, bg_loi)
 
 
 def lbench_loi(nflop: int, n_elements: int, topo: TierTopology,
@@ -79,19 +117,12 @@ class InterferenceProfile:
         return self.local_traffic / self.topo.local.bandwidth
 
     def step_time(self, loi: float = 0.0, overlap: bool = True) -> float:
-        """Predicted step time at background interference level `loi`.
-
-        Background occupies `loi` of the shared link; the victim's own
-        transfers are pipelined (prefetch) so they do not queue against
-        themselves, but they both lose bandwidth share and queue behind the
-        background stream.
-        """
-        t_pool_eff = self.t_pool * queueing_slowdown(loi) / max(
-            1.0 - loi, LOI_SHARE_FLOOR
+        """Predicted step time at background interference level `loi`
+        (scalar entry point into `step_time_vec`)."""
+        return float(
+            step_time_vec(self.t_pool, self.t_local, self.t_compute, loi,
+                          overlap)
         )
-        if overlap:
-            return max(self.t_compute, self.t_local, t_pool_eff)
-        return self.t_compute + self.t_local + t_pool_eff
 
     def step_time_no_pool(self) -> float:
         return max(self.t_compute, self.t_local)
@@ -101,6 +132,12 @@ class InterferenceProfile:
         degradation)."""
         return self.step_time(0.0) / self.step_time(loi)
 
+    def sensitivity_vec(self, lois) -> np.ndarray:
+        """`sensitivity` broadcast over an array of LoI values."""
+        return self.step_time(0.0) / step_time_vec(
+            self.t_pool, self.t_local, self.t_compute, lois
+        )
+
     def _raw_base(self) -> float:
         return max(self.t_compute, self.t_local, self.t_pool, 1e-12)
 
@@ -108,7 +145,7 @@ class InterferenceProfile:
         """IC: the slowdown this job inflicts on a 1-thread LBench probe
         (paper §3.2) — driven by the job's pool-link utilization."""
         util = self.t_pool / self._raw_base()
-        return queueing_slowdown(util)
+        return float(queueing_slowdown(util))
 
     def injected_loi(self) -> float:
         return min(1.0, self.t_pool / self._raw_base())
@@ -139,7 +176,7 @@ def lbench_intensity_sweep(topo: TierTopology, nflops=(1, 2, 4, 8, 16, 32,
             topo.pool.bandwidth,
             loi * topo.pool.bandwidth,
         )
-        ic = queueing_slowdown(loi)
+        ic = float(queueing_slowdown(loi))
         rows.append({
             "nflop": nf,
             "loi": loi,

@@ -18,6 +18,7 @@ paper's intent.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Optional
@@ -171,3 +172,26 @@ def analyze(
     }
     return Analysis(arch, shape_name, level1, level2, level3, placement,
                     iprof)
+
+
+@functools.lru_cache(maxsize=None)
+def _profile_for_cached(arch, shape_name, policy, pool_fraction,
+                        use_dryrun) -> itf.InterferenceProfile:
+    return analyze(arch, shape_name, policy=policy,
+                   pool_fraction=pool_fraction,
+                   use_dryrun=use_dryrun).profile
+
+
+def profile_for(arch: str, shape_name: str = "decode_32k", *,
+                policy: str = "hotness", pool_fraction="auto",
+                use_dryrun: bool = False) -> itf.InterferenceProfile:
+    """Submission-time interference profile for a catalog workload.
+
+    This is what the paper's §7.2 SLURM plugin would compute once per
+    (arch, shape) when the job template is registered — cached (with
+    arguments canonicalized here so kwarg spelling at call sites cannot
+    split the cache) so a 10k-job trace costs O(|zoo|) analyses, not
+    O(n_jobs).
+    """
+    return _profile_for_cached(arch, shape_name, policy, pool_fraction,
+                               use_dryrun)

@@ -138,6 +138,8 @@ def run_cell(arch: str, shape_name: str, mesh, args, outdir: str):
         ma = compiled.memory_analysis()
         print(ma)                               # proves it fits
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax < 0.5: one dict per program
+            ca = ca[0] if ca else {}
         print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
         cost = analyze_hlo(compiled.as_text())
         rep = roofline.report(

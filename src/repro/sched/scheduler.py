@@ -11,6 +11,11 @@ paper's baseline.
 workload runs many times against a background whose LoI changes randomly
 every interval; the aware scheduler caps the background range (0-20% vs
 0-50%) by keeping loud neighbours away.
+
+This module is the single-pool toy. The rack-scale, event-driven version —
+where the background LoI is derived from actual co-residents instead of
+assumed — lives in `repro.sched.simulator` (+ `cluster`, `policies`,
+`workload`).
 """
 
 from __future__ import annotations
@@ -76,25 +81,14 @@ class InterferenceAwareScheduler:
     def __init__(self, n_pools: int, capacity: int):
         self.pools = [Pool(i, capacity) for i in range(n_pools)]
 
-    def _cost(self, pool: Pool, job: Job) -> float:
-        bg_for_new = min(
-            1.0, sum(j.injected_loi for j in pool.jobs)
-        )
-        cost = 1.0 / max(job.sensitivity(bg_for_new), 1e-6) - 1.0
-        for res in pool.jobs:
-            bg_now = pool.background_loi_for(res)
-            bg_with = min(1.0, bg_now + job.injected_loi)
-            cost += (
-                1.0 / max(res.sensitivity(bg_with), 1e-6)
-                - 1.0 / max(res.sensitivity(bg_now), 1e-6)
-            )
-        return cost
-
     def place(self, job: Job) -> Optional[Pool]:
+        from repro.sched.policies import marginal_colocation_cost
+
         open_pools = [p for p in self.pools if len(p.jobs) < p.capacity]
         if not open_pools:
             return None
-        best = min(open_pools, key=lambda p: self._cost(p, job))
+        best = min(open_pools,
+                   key=lambda p: marginal_colocation_cost(p, job))
         best.jobs.append(job)
         return best
 

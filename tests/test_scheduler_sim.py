@@ -1,0 +1,214 @@
+"""Rack-scale co-location simulator: cluster construction, policy
+semantics, conservation invariants, and the aware-beats-random variance
+regression — all with deterministic seeds."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import interference as itf
+from repro.sched import (
+    Cluster,
+    ClusterSpec,
+    CorridorBinPackPolicy,
+    InterferenceAwarePolicy,
+    TraceJob,
+    build_cluster,
+    make_policy,
+    profile_with_injected_loi,
+    rescale_load,
+    run_policies,
+    simulate,
+    synthetic_stream,
+)
+
+
+def _job(i, r, arrival=0.0, work=10.0):
+    return TraceJob(
+        job_id=i, name=f"j{i}", profile=profile_with_injected_loi(r),
+        arrival=arrival, work=work,
+    )
+
+
+# ------------------------------------------------------------- cluster
+def test_cluster_construction():
+    spec = ClusterSpec(n_racks=3, pools_per_rack=2, nodes_per_pool=4)
+    c = Cluster.build(spec)
+    assert len(c.racks) == 3
+    assert len(c.pools) == 6 == spec.n_pools
+    assert [p.pool_id for p in c.pools] == list(range(6))
+    assert [p.rack_id for p in c.pools] == [0, 0, 1, 1, 2, 2]
+    assert c.total_capacity == 24 == spec.total_slots
+    assert c.occupancy == 0
+    assert all(p.is_open and p.free_slots == 4 for p in c.pools)
+
+
+def test_cluster_spec_validation():
+    with pytest.raises(ValueError):
+        ClusterSpec(n_racks=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(nodes_per_pool=-1)
+
+
+def test_pool_capacity_enforced():
+    c = build_cluster(1, 1, 2)
+    p = c.pools[0]
+    p.add(_job(0, 0.1))
+    p.add(_job(1, 0.1))
+    assert not p.is_open
+    with pytest.raises(RuntimeError):
+        p.add(_job(2, 0.1))
+
+
+def test_pool_background_loi():
+    c = build_cluster(1, 1, 4)
+    p = c.pools[0]
+    a, b = _job(0, 0.3), _job(1, 0.2)
+    p.add(a)
+    p.add(b)
+    assert p.background_loi_for(a) == pytest.approx(b.injected_loi)
+    assert p.total_injected_loi() == pytest.approx(
+        a.injected_loi + b.injected_loi
+    )
+    np.testing.assert_allclose(
+        p.background_lois(),
+        [b.injected_loi, a.injected_loi], rtol=1e-12,
+    )
+
+
+# ------------------------------------------------------------- policies
+def test_aware_separates_loud_from_sensitive():
+    """Top-IC and top-sensitivity jobs must land on different pools while
+    capacity allows (paper §7.2's whole point)."""
+    cluster = build_cluster(1, 2, 2)
+    pol = InterferenceAwarePolicy()
+    loud = _job(0, 0.85)       # highest IC in the mix
+    fragile = _job(1, 0.7)     # most sensitive in the mix
+    p_loud = pol.select(loud, cluster, 0.0)
+    p_loud.add(loud)
+    p_fragile = pol.select(fragile, cluster, 0.0)
+    assert p_fragile is not p_loud
+    # ...but when only one pool exists, co-location is forced, not refused
+    tight = build_cluster(1, 1, 2)
+    tight.pools[0].add(loud)
+    assert pol.select(fragile, tight, 0.0) is tight.pools[0]
+
+
+def test_binpack_respects_corridor_budget():
+    cluster = build_cluster(1, 4, 4)
+    pol = CorridorBinPackPolicy(loi_budget=0.6)
+    for i in range(6):
+        j = _job(i, 0.25)
+        p = pol.select(j, cluster, 0.0)
+        p.add(j)
+    aggs = [p.total_injected_loi() for p in cluster.pools]
+    assert all(a <= 0.6 + 1e-9 for a in aggs)
+    # best-fit consolidates: 6 jobs at 0.25 fit 2-per-pool in 3 pools
+    assert sum(1 for p in cluster.pools if p.jobs) == 3
+
+
+def test_policy_factory():
+    for name in ("fcfs", "random", "aware", "binpack"):
+        assert make_policy(name, seed=1).name == name
+    with pytest.raises(ValueError):
+        make_policy("clairvoyant")
+
+
+# ------------------------------------------------------------ simulator
+def test_conservation_invariants():
+    """Every job placed exactly once, runs on one pool, capacity never
+    exceeded, cluster fully drained."""
+    jobs = synthetic_stream(300, seed=5)
+    cluster = build_cluster(2, 2, 2)       # 8 slots -> backlog exercised
+    res = simulate(jobs, cluster, make_policy("aware"))
+    assert np.isfinite(res.start).all() and np.isfinite(res.finish).all()
+    assert (res.pool_of >= 0).all() and (res.pool_of < 4).all()
+    assert (res.start >= res.arrival - 1e-9).all()
+    assert (res.finish > res.start).all()
+    assert (res.slowdown >= 1.0 - 1e-9).all()
+    assert (res.peak_occupancy <= [p.capacity for p in cluster.pools]).all()
+    assert cluster.occupancy == 0
+
+
+def test_simulator_deterministic():
+    jobs = synthetic_stream(150, seed=9)
+    r1 = simulate(jobs, build_cluster(2, 2, 2), make_policy("random", seed=4))
+    r2 = simulate(jobs, build_cluster(2, 2, 2), make_policy("random", seed=4))
+    np.testing.assert_array_equal(r1.pool_of, r2.pool_of)
+    np.testing.assert_allclose(r1.finish, r2.finish, rtol=0, atol=0)
+
+
+def test_no_contention_means_no_slowdown():
+    """Jobs that never overlap run at isolated speed."""
+    jobs = [_job(i, 0.5, arrival=100.0 * i, work=10.0) for i in range(5)]
+    res = simulate(jobs, build_cluster(1, 1, 4), make_policy("fcfs"))
+    np.testing.assert_allclose(res.slowdown, 1.0, rtol=1e-9)
+    np.testing.assert_allclose(res.wait, 0.0, atol=1e-9)
+
+
+def test_two_loud_jobs_slow_each_other():
+    jobs = [_job(0, 0.5, 0.0, 10.0), _job(1, 0.5, 0.0, 10.0)]
+    res = simulate(jobs, build_cluster(1, 1, 2), make_policy("fcfs"))
+    expected = 1.0 / jobs[0].sensitivity(jobs[1].injected_loi)
+    np.testing.assert_allclose(res.slowdown, expected, rtol=1e-6)
+
+
+def test_aware_variance_not_worse_than_random():
+    """Regression: on a fixed trace the aware policy's slowdown variance
+    must not exceed the random baseline's (paper Fig 13 at rack scale)."""
+    jobs = synthetic_stream(400, seed=7)
+    res = run_policies(jobs, ClusterSpec(2, 2, 4),
+                       policy_names=("random", "aware"), seed=3)
+    var_aware = res["aware"].summary()["var_slowdown"]
+    var_random = res["random"].summary()["var_slowdown"]
+    assert var_aware <= var_random
+
+
+def test_thousand_job_trace_is_fast():
+    """Acceptance: a 1,000-job trace over >= 4 pools simulates in <10s."""
+    jobs = synthetic_stream(1000, seed=3)
+    t0 = time.perf_counter()
+    simulate(jobs, build_cluster(2, 2, 4), make_policy("aware"))
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_rescale_load_hits_target_utilization():
+    jobs = synthetic_stream(200, seed=1)
+    rescale_load(jobs, total_slots=16, utilization=0.5)
+    span = max(j.arrival for j in jobs)
+    offered = sum(j.work for j in jobs) / (16 * span)
+    assert offered == pytest.approx(0.5, rel=0.02)
+
+
+def test_simulate_rejects_bad_input():
+    with pytest.raises(ValueError):
+        simulate([], build_cluster(1, 1, 1), make_policy("fcfs"))
+    bad = [_job(0, 0.5, work=0.0)]
+    with pytest.raises(ValueError):
+        simulate(bad, build_cluster(1, 1, 1), make_policy("fcfs"))
+
+
+# ------------------------------------------- vectorized interference math
+def test_vectorized_sensitivity_matches_scalar():
+    prof = profile_with_injected_loi(0.4)
+    lois = np.linspace(0.0, 0.9, 16)
+    vec = prof.sensitivity_vec(lois)
+    scalar = np.array([prof.sensitivity(float(l)) for l in lois])
+    np.testing.assert_allclose(vec, scalar, rtol=1e-12)
+
+
+def test_progress_rates_match_sensitivity():
+    profs = [profile_with_injected_loi(r) for r in (0.1, 0.4, 0.8)]
+    inj = np.array([p.injected_loi() for p in profs])
+    bg = itf.background_lois(inj)
+    rates = itf.progress_rates(
+        np.array([p.t_pool for p in profs]),
+        np.array([p.t_local for p in profs]),
+        np.array([p.t_compute for p in profs]),
+        bg,
+    )
+    expected = np.array([p.sensitivity(float(b))
+                         for p, b in zip(profs, bg)])
+    np.testing.assert_allclose(rates, expected, rtol=1e-12)
+    assert ((rates > 0.0) & (rates <= 1.0 + 1e-12)).all()
