@@ -1,0 +1,149 @@
+"""Serving engine benchmark — steady-state tokens/s, per-token latency and
+local-vs-remote access ratio across the three scenario lanes:
+
+  serve_chat      — short prompts, Poisson arrivals (interactive);
+  serve_long32k   — long-context lane: per-slot KV spills the local-tier
+                    budget (a reduced-scale stand-in for the 32k cell on
+                    this CPU container; the shapes stress the same pager
+                    paths the full cell would);
+  serve_bursty    — mixed bursty arrivals (slot churn + admission).
+
+The long-context lane additionally runs the acceptance comparison of the
+brief: tier-aware pager (`hotness`) vs the no-paging first-touch baseline
+(`static`) on an identical all-at-once trace, so both engines take the
+same admission/decode schedule (equal steps -> equal tokens/s) and differ
+only in page placement. The comparison row asserts the pager cuts the
+remote (pool-tier) access share.
+
+`BENCH_SMOKE=1` (set by `benchmarks/run.py --smoke`, the CI lane) shrinks
+request counts; shapes stay identical so the same code paths compile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro import configs
+from repro.common.parallel import ParallelCtx
+from repro.serving import (
+    EngineConfig,
+    ServingEngine,
+    bursty_stream,
+    chat_stream,
+    long_context_stream,
+)
+from benchmarks.common import emit
+
+ARCH = "smollm_360m"
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _cfg():
+    return dataclasses.replace(configs.reduced(ARCH), dtype="float32")
+
+
+def _engine(ecfg, cfg):
+    return ServingEngine.build(cfg, ParallelCtx(remat="none"), ecfg)
+
+
+def _emit_scenario(tag, stats, extra=""):
+    s = stats.summary()
+    emit(
+        tag, 1e6 * stats.wall_s / max(stats.steps, 1),
+        f"tok_s_wall={s['tok_per_s_wall']:.1f} "
+        f"tok_s_virtual={s['tok_per_s_virtual']:.1f} "
+        f"ttft_p50={s['ttft_p50_s']:.2e} tpot_p50={s['tpot_p50_s']:.2e} "
+        f"tpot_p99={s['tpot_p99_s']:.2e} "
+        f"remote_share={s['remote_share']:.3f} "
+        f"max_conc={s['max_concurrency']} "
+        f"admission_blocks={s['admission_blocks']}{extra}",
+    )
+    return {"tag": tag, **{k: float(v) if isinstance(v, (int, float))
+                           else v for k, v in s.items()}}
+
+
+def run_chat(cfg):
+    n = 8 if SMOKE else 24
+    ecfg = EngineConfig(
+        n_slots=4, max_seq=64, prefill_buckets=(16, 32), page_tokens=8,
+        hot_window=16, local_budget_frac=0.5, admission="loi",
+        catalog_arch=ARCH,
+    )
+    engine = _engine(ecfg, cfg)
+    reqs = chat_stream(n, cfg.vocab_size, seed=1, prompt_buckets=(16, 32),
+                       gen_range=(8, 24), arrival_rate=3e4)
+    stats = engine.run(reqs)
+    return [_emit_scenario("serve_chat", stats)]
+
+
+def run_long_context(cfg):
+    """Pager-vs-baseline acceptance comparison on an identical trace."""
+    n = 4 if SMOKE else 8
+    rows, results = [], {}
+    for policy in ("hotness", "static"):
+        ecfg = EngineConfig(
+            n_slots=4, max_seq=192, prefill_buckets=(128,), page_tokens=16,
+            hot_window=32, local_budget_frac=0.4, pager_policy=policy,
+            admission="greedy",
+        )
+        engine = _engine(ecfg, cfg)
+        # all-at-once arrivals: identical admission order and step count
+        # for both policies -> the comparison is at equal tokens/s
+        reqs = long_context_stream(
+            n, cfg.vocab_size, seed=2, prompt_bucket=128,
+            gen_range=(16, 48), arrival_rate=1e9,
+        )
+        stats = engine.run(reqs)
+        results[policy] = stats
+        rows.append(_emit_scenario(
+            f"serve_long32k_{policy}", stats,
+            extra=(f" evictions={engine.pager.evictions}"
+                   f" promotions={engine.pager.promotions}"),
+        ))
+
+    hot, st = results["hotness"], results["static"]
+    remote_hot = hot.pager["remote_share"]
+    remote_static = st.pager["remote_share"]
+    emit(
+        "serve_long32k_pager_vs_static", 0.0,
+        f"remote_hotness={remote_hot:.3f} remote_static={remote_static:.3f} "
+        f"pager_remote_lower={remote_hot < remote_static} "
+        f"equal_steps={hot.steps == st.steps} "
+        f"tokens={hot.tokens}",
+    )
+    rows.append({
+        "tag": "serve_long32k_pager_vs_static",
+        "remote_hotness": float(remote_hot),
+        "remote_static": float(remote_static),
+        "pager_remote_lower": bool(remote_hot < remote_static),
+        "equal_steps": bool(hot.steps == st.steps),
+    })
+    assert remote_hot < remote_static, (
+        "tier-aware pager must cut the remote access share vs the "
+        "no-paging baseline"
+    )
+    return rows
+
+
+def run_bursty(cfg):
+    n = 8 if SMOKE else 24
+    ecfg = EngineConfig(
+        n_slots=4, max_seq=96, prefill_buckets=(16, 32, 64), page_tokens=8,
+        hot_window=16, local_budget_frac=0.5, admission="loi",
+        catalog_arch=ARCH,
+    )
+    engine = _engine(ecfg, cfg)
+    reqs = bursty_stream(n, cfg.vocab_size, seed=3,
+                         prompt_buckets=(16, 32, 64), gen_range=(8, 24),
+                         burst_size=6, burst_gap=1e-3)
+    stats = engine.run(reqs)
+    counts = engine.compile_counts()
+    steady = all(v <= 1 for v in counts.values())  # 0 = unused bucket
+    return [_emit_scenario("serve_bursty", stats,
+                           extra=f" steady_state_compiles={steady}")]
+
+
+def run():
+    cfg = _cfg()
+    return run_chat(cfg) + run_long_context(cfg) + run_bursty(cfg)

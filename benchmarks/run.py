@@ -1,13 +1,22 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure plus the serving
+and dry-run lanes.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,serve]
+    PYTHONPATH=src python -m benchmarks.run --smoke --out results/bench
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+`--smoke` shrinks the configurable lanes (serving request counts, dry-run
+cells) via BENCH_SMOKE=1 — the CI benchmark job's config. `--out DIR`
+writes one ``BENCH_<tag>.json`` per module (each module's returned rows),
+which CI uploads as artifacts next to the regenerated `results/dryrun/`
+records.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -22,15 +31,25 @@ MODULES = [
     ("fig11", "benchmarks.bench_lbench"),
     ("fig12", "benchmarks.bench_placement_case"),
     ("fig13", "benchmarks.bench_scheduler_case"),
+    ("serve", "benchmarks.bench_serving"),
+    ("dryrun", "benchmarks.bench_dryrun_sweep"),
 ]
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated tags, e.g. fig11,fig13")
+                    help="comma-separated tags, e.g. fig11,serve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest configs (sets BENCH_SMOKE=1)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_<tag>.json row dumps to this dir")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
 
     print("name,us_per_call,derived")
     failures = []
@@ -39,7 +58,12 @@ def main(argv=None) -> None:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
-            mod.run()
+            rows = mod.run()
+            if args.out:
+                with open(os.path.join(args.out,
+                                       f"BENCH_{tag}.json"), "w") as f:
+                    json.dump({"tag": tag, "module": modname,
+                               "rows": rows}, f, indent=1, default=str)
         except Exception as e:
             failures.append((tag, e))
             traceback.print_exc()

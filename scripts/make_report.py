@@ -58,7 +58,8 @@ def dryrun_summary(recs, mesh):
 def main():
     outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
     recs = load(outdir)
-    for mesh in ("16x16", "2x16x16"):
+    meshes = sorted({m for (_, _, m, _) in recs}) or ["16x16", "2x16x16"]
+    for mesh in meshes:
         ok, tot = dryrun_summary(recs, mesh)
         print(f"\n## Mesh {mesh}: {ok}/{tot} cells compile\n")
         print(roofline_table(recs, mesh))

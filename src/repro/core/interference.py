@@ -24,11 +24,12 @@ workload's tier access profile:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 from repro.core.placement import Placement
-from repro.core.tiers import TierTopology
+from repro.core.tiers import TierTopology, v5e_topology as tr_v5e
 from repro.kernels.lbench import ref as lbench_ref
 
 
@@ -43,6 +44,30 @@ def queueing_slowdown(rho):
     Broadcasts over numpy arrays; scalars come back as numpy scalars."""
     rho = np.clip(rho, 0.0, RHO_CAP)
     return 1.0 + rho / (2.0 * (1.0 - rho))
+
+
+def mdl_knee(max_excess: float = 0.75) -> float:
+    """Utilization rho* where the M/D/1 queueing excess reaches
+    `max_excess`: solve 1 + rho/(2(1-rho)) = 1 + e  ->  rho = 2e/(1+2e).
+    The default excess of 0.75 puts the knee at rho* = 0.6, the elbow of
+    `queueing_slowdown` where delay departs the linear regime."""
+    if max_excess <= 0.0:
+        raise ValueError("max_excess must be positive")
+    return 2.0 * max_excess / (1.0 + 2.0 * max_excess)
+
+
+def corridor_budget(topo: Optional[TierTopology] = None,
+                    max_excess: float = 0.75) -> float:
+    """Aggregate injected-LoI budget of one pool link (the R_bw corridor).
+
+    Derived, not hard-coded: the M/D/1 knee utilization of the shared link,
+    discounted by the pool tier's share of the aggregate bandwidth diet
+    (`TierTopology.r_bw_pool`) — that share of the link must stay clear for
+    the residents' own foreground pool traffic, so only the remainder is
+    available to absorb background injection before queueing explodes.
+    """
+    topo = topo or tr_v5e()
+    return mdl_knee(max_excess) * (1.0 - topo.r_bw_pool)
 
 
 def step_time_vec(t_pool, t_local, t_compute, loi, overlap: bool = True):

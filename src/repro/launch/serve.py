@@ -1,34 +1,72 @@
-"""Serving launcher: batched prefill + decode loop with tier-aware KV cache.
+"""Serving launcher: continuous-batching engine over tier-aware KV paging.
 
+    # scenario mode (the engine's native shape)
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --reduced --scenario chat --requests 16 --slots 4
+
+    # classic one-shot batch (kept for parity with the old launcher):
+    # `--batch` requests of the same prompt length arrive at t=0
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+Both modes run `repro.serving.ServingEngine`: fixed-shape jitted cells
+(bucketed prefill, slot-batched greedy decode with per-slot positions),
+the page-grain tier-aware KV pager, and M/D/1-knee admission control.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
-from repro.common.config import ShapeConfig
-from repro.data.synthetic import make_batch_for
 from repro.launch.mesh import ctx_for_mesh, make_smoke_mesh
-from repro.models import model as M
-from repro.runtime import serve as serve_rt
-from repro.runtime import sharding as shd
+from repro.serving import (
+    EngineConfig,
+    Request,
+    ServingEngine,
+    make_scenario,
+)
+
+
+def burst_requests(n: int, prompt_len: int, gen: int, vocab: int,
+                   seed: int) -> list:
+    """The old launcher's shape: n identical-length prompts at t=0."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            request_id=i,
+            tokens=rng.integers(0, vocab, size=prompt_len).astype(np.int32),
+            max_new_tokens=gen,
+            arrival=0.0,
+        )
+        for i in range(n)
+    ]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # classic one-shot batch
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
+    # scenario mode
+    ap.add_argument("--scenario", default=None,
+                    choices=["chat", "long_context", "bursty"])
+    ap.add_argument("--requests", type=int, default=16)
+    # engine knobs
+    ap.add_argument("--slots", type=int, default=0,
+                    help="0 = match --batch (one-shot) / 4 (scenario)")
+    ap.add_argument("--pager", default="hotness",
+                    choices=["hotness", "static", "none"])
+    ap.add_argument("--local-budget", type=float, default=0.5,
+                    help="local-tier budget as a fraction of peak KV bytes")
+    ap.add_argument("--admission", default="loi",
+                    choices=["loi", "greedy"])
     args = ap.parse_args(argv)
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(
@@ -36,37 +74,70 @@ def main(argv=None):
     )
     mesh = make_smoke_mesh()
     ctx = ctx_for_mesh(mesh, fsdp=False, remat="none")
-    max_seq = args.prompt_len + args.gen
 
-    params, _ = M.init_model(cfg, jax.random.PRNGKey(args.seed))
-    batch = make_batch_for(cfg, args.prompt_len, args.batch, 0, args.seed)
-    prompt = {k: (v[:, :args.prompt_len] if k == "tokens" else v)
-              for k, v in batch.items()}
+    if args.scenario:
+        n_slots = args.slots or 4
+        buckets = (16, 32) if args.scenario != "long_context" else (128,)
+        max_seq = max(buckets) + 64
+        # arrival processes scaled to the virtual clock (µs-scale steps on
+        # reduced models) so requests actually overlap in flight
+        scenario_kw = {
+            "chat": dict(prompt_buckets=buckets, arrival_rate=2e4),
+            "long_context": dict(prompt_bucket=buckets[0],
+                                 arrival_rate=5e3),
+            "bursty": dict(prompt_buckets=buckets, burst_size=n_slots + 2,
+                           burst_gap=1e-4),
+        }[args.scenario]
+        reqs = make_scenario(
+            args.scenario, args.requests, cfg.vocab_size, seed=args.seed,
+            **scenario_kw,
+        )
+    else:
+        n_slots = args.slots or args.batch
+        buckets = (args.prompt_len,)
+        max_seq = args.prompt_len + args.gen
+        reqs = burst_requests(
+            args.batch, args.prompt_len, args.gen, cfg.vocab_size,
+            args.seed,
+        )
 
-    t0 = time.time()
-    caches, logits = M.prefill(params, prompt, cfg, ctx, max_seq=max_seq)
-    tok = jnp.argmax(logits, axis=-1)
-    t_prefill = time.time() - t0
-
-    npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        t = args.prompt_len + npfx + i
-        logits, caches = M.decode_step(params, tok, caches, t, cfg, ctx)
-        tok = jnp.argmax(logits, axis=-1)
-        generated.append(tok)
-    t_decode = time.time() - t0
-
-    out = jnp.stack(generated, axis=1)
-    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s")
-    print(
-        f"decode: {args.gen - 1} steps in {t_decode:.3f}s "
-        f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)"
+    ecfg = EngineConfig(
+        n_slots=n_slots,
+        max_seq=max_seq,
+        prefill_buckets=buckets,
+        page_tokens=max(8, max_seq // 16),
+        local_budget_frac=args.local_budget,
+        pager_policy=args.pager,
+        hot_window=max(16, max_seq // 4),
+        admission=args.admission,
+        catalog_arch=args.arch if args.admission == "loi" else None,
     )
-    print("sample:", out[0, :12].tolist())
-    return out
+    engine = ServingEngine.build(
+        cfg, ctx, ecfg, mesh=mesh, seed=args.seed
+    )
+    stats = engine.run(reqs)
+    s = stats.summary()
+    print(
+        f"served {s['n_requests']} requests / {s['tokens']} tokens in "
+        f"{stats.steps} steps ({s['tok_per_s_wall']:.1f} tok/s wall, "
+        f"{s['tok_per_s_virtual']:.1f} tok/s virtual)"
+    )
+    print(
+        f"latency: ttft_p50={s['ttft_p50_s']:.2e}s "
+        f"tpot_p50={s['tpot_p50_s']:.2e}s tpot_p99={s['tpot_p99_s']:.2e}s"
+    )
+    print(
+        f"tiering[{args.pager}]: remote_share={s['remote_share']:.3f} "
+        f"evictions={engine.pager.evictions} "
+        f"promotions={engine.pager.promotions} "
+        f"admission_blocks={s['admission_blocks']} "
+        f"max_concurrency={s['max_concurrency']}"
+    )
+    print("compile counts (must stay flat at steady state):",
+          engine.compile_counts())
+    done = [r for r in reqs if r.output]
+    print("sample:", done[0].output[:12] if done else "(no requests)")
+    return stats
 
 
 if __name__ == "__main__":

@@ -121,13 +121,20 @@ def self_attention(
 
 
 def _cache_insert(cache, new, t):
-    """Insert `new` (B,1,KV,hd) at sequence position t via a masked
-    elementwise write. A dynamic-update-slice at a traced index on a
-    sequence-SHARDED cache makes XLA SPMD all-gather the whole cache
-    (measured: 40 GB of wire per decoded token); the iota-compare form
-    partitions with zero communication."""
+    """Insert `new` (B,1,KV,hd) at sequence position(s) t — a scalar shared
+    by the batch or a (B,) vector of per-slot positions (continuous
+    batching) — via a masked elementwise write. A dynamic-update-slice at a
+    traced index on a sequence-SHARDED cache makes XLA SPMD all-gather the
+    whole cache (measured: 40 GB of wire per decoded token); the
+    iota-compare form partitions with zero communication. A position >= S
+    writes nothing (masked slots park their cursor out of range)."""
     S = cache.shape[1]
-    mask = (jax.lax.iota(jnp.int32, S) == t)[None, :, None, None]
+    t = jnp.asarray(t)
+    if t.ndim == 0:
+        mask = (jax.lax.iota(jnp.int32, S) == t)[None, :, None, None]
+    else:
+        mask = (jax.lax.iota(jnp.int32, S)[None, :] == t[:, None])
+        mask = mask[:, :, None, None]
     return jnp.where(mask, new.astype(cache.dtype), cache)
 
 
@@ -137,16 +144,23 @@ def decode_self_attention(
     cfg: ModelConfig,
     k_cache,                # (B, S_max, KV, hd)
     v_cache,
-    t,                      # scalar: current position (cache valid length)
+    t,                      # scalar or (B,): current position(s) / valid len
     rope: bool = True,
 ):
-    """Single-token decode: insert new KV at position t, attend to prefix."""
+    """Single-token decode: insert new KV at position t, attend to prefix.
+
+    `t` may be a (B,) vector so that in-flight requests at different depths
+    share one fixed-shape decode cell (the serving engine's slot batching);
+    the cache length mask and RoPE positions are then per-slot.
+    """
     B = x.shape[0]
-    positions = jnp.full((B, 1), t)
+    t = jnp.asarray(t)
+    t_vec = t if t.ndim else jnp.full((B,), t)
+    positions = t_vec[:, None]
     q, k, v = _qkv(params, x, cfg, positions, rope)
     k_cache = _cache_insert(k_cache, k, t)
     v_cache = _cache_insert(v_cache, v, t)
-    out = decode_ops.decode_mha(q[:, 0], k_cache, v_cache, t + 1)
+    out = decode_ops.decode_mha(q[:, 0], k_cache, v_cache, t_vec + 1)
     out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x.dtype))
     return out[:, None, :], (k_cache, v_cache)
 

@@ -145,7 +145,8 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ParallelCtx, max_seq: int):
 
 def decode_step(params, token, caches, t, cfg: ModelConfig,
                 ctx: ParallelCtx):
-    """One decode step. token: (B,) int32; t: scalar position."""
+    """One decode step. token: (B,) int32; t: scalar position shared by the
+    batch, or a (B,) vector of per-slot positions (continuous batching)."""
     x = embed(params["embed"], token[:, None], cfg)
     cross = bool(cfg.num_encoder_layers)
     x, caches = blocks.stack_decode(

@@ -1,12 +1,25 @@
 """Serve-step builders: prefill (prompt -> caches) and decode (one token vs
 the KV cache / SSM state). `decode_32k` and `long_500k` cells lower the
 decode step; `prefill_32k` lowers prefill — per the brief.
+
+Two consumers:
+
+* the dry-run/launcher path keeps the classic `ServeBundle` (one jitted
+  prefill + one jitted decode over a uniform batch);
+* the continuous-batching engine (`repro.serving.engine`) uses
+  `make_engine_cells`: a fixed set of jitted cells — one greedy decode cell
+  over the whole slot batch with per-slot positions, one prefill cell per
+  prompt bucket, and one cache-insert cell per bucket that splices a
+  prefilled request into the global decode caches at a (traced) slot index.
+  Every shape is fixed at build time, so a steady-state serve loop never
+  recompiles regardless of admissions/completions (slot masking via parked
+  write positions, see `models.attention._cache_insert`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -101,3 +114,156 @@ def make_bundle(cfg: ModelConfig, ctx: ParallelCtx,
         donate_argnums=(2,),
     )
     return ServeBundle(prefill, decode, param_sh, cache_sh, aparams, acaches)
+
+
+# ------------------------------------------------- continuous batching
+def build_decode_greedy(cfg: ModelConfig, ctx: ParallelCtx):
+    """Greedy decode cell: one token per slot, argmax inside the jit so the
+    host only ever syncs an int32 vector plus a scalar finiteness flag
+    (argmax of NaN logits would otherwise turn a numerical blow-up into
+    silently wrong token streams). `t` is the per-slot position vector
+    (see models.model.decode_step)."""
+
+    def cell(params, token, caches, t):
+        logits, caches = M.decode_step(params, token, caches, t, cfg, ctx)
+        finite = jnp.isfinite(logits).all(axis=-1)   # per slot: parked
+        # slots carry garbage caches, so the engine masks them out
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), finite, caches
+
+    return cell
+
+
+def build_prefill_greedy(cfg: ModelConfig, ctx: ParallelCtx, bucket: int):
+    """Prefill cell for one prompt bucket: returns the request's decode
+    caches (seq extent `bucket` + frontend prefix; cross-KV extent follows
+    the frames in the batch) and its greedy first token. Prompts must be
+    exactly `bucket` long (see serving.batcher)."""
+
+    def cell(params, batch):
+        caches, logits = M.prefill(params, batch, cfg, ctx, max_seq=bucket)
+        return caches, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return cell
+
+
+def build_cache_insert():
+    """Splice a prefilled request's caches (batch=1, short seq extent) into
+    the global slot caches at a traced slot index. A dynamic-update-slice
+    per leaf: leading (stack, batch) dims, then the seq/state extents."""
+
+    def insert(caches, slot_caches, slot):
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def ins(big, small):
+            idx = (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), idx
+            )
+
+        return jax.tree.map(ins, caches, slot_caches)
+
+    return insert
+
+
+@dataclasses.dataclass
+class EngineCells:
+    """The fixed-shape jitted cells of the continuous-batching engine."""
+
+    decode_fn: Any                 # (params, tok (S,), caches, t (S,)) ->
+    #                        (next_tok (S,), finite, caches) [donates caches]
+    prefill_fns: Dict[int, Any]    # bucket -> (params, batch) -> (caches, tok)
+    insert_fns: Dict[int, Any]     # bucket -> (caches, slot_caches, slot)
+    param_shardings: Any
+    cache_shardings: Any
+    abstract_params: Any
+    abstract_caches: Any
+    n_prefix: int                  # frontend prefix tokens (vision)
+    max_seq_total: int             # cache seq extent incl. n_prefix
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Executable-cache sizes of every cell — the no-recompile
+        assertion reads this before/after steady state (-1 when the jax
+        build does not expose `_cache_size`)."""
+
+        def size(fn):
+            probe = getattr(fn, "_cache_size", None)
+            return int(probe()) if probe is not None else -1
+
+        out = {"decode": size(self.decode_fn)}
+        for b, fn in self.prefill_fns.items():
+            out[f"prefill_{b}"] = size(fn)
+        for b, fn in self.insert_fns.items():
+            out[f"insert_{b}"] = size(fn)
+        return out
+
+
+def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
+                      rules=None, mesh=None, *,
+                      n_slots: int, max_seq: int,
+                      buckets: Sequence[int], enc_len: int = 0
+                      ) -> EngineCells:
+    """Build the engine's cells. With a mesh, shardings come from the same
+    rules as `make_bundle` (this is the ServeBundle path refactored for
+    slot batching); meshless builds plain single-device jits."""
+    npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    if cfg.num_encoder_layers and len(set(buckets)) != 1:
+        raise ValueError(
+            "enc-dec archs need a single prefill bucket (cross-KV extent "
+            "is fixed by the encoder length)"
+        )
+    max_seq_total = max_seq + npfx
+
+    param_sh = cache_sh = tok_sh = None
+    aparams = acaches = None
+    if mesh is not None:
+        if rules is None:
+            rules = shd.ShardingRules.for_serving(
+                data_axis=ctx.fsdp_axis, tp_axis=ctx.tp_axis
+            )
+        bundle = make_bundle(
+            cfg, ctx, rules, mesh, batch=n_slots, max_seq=max_seq_total,
+            enc_len=enc_len,
+        )
+        param_sh, cache_sh = bundle.param_shardings, bundle.cache_shardings
+        aparams, acaches = bundle.abstract_params, bundle.abstract_caches
+        tok_sh = shd.named(mesh, P())
+        decode = jax.jit(
+            build_decode_greedy(cfg, ctx),
+            in_shardings=(param_sh, tok_sh, cache_sh, None),
+            out_shardings=(None, None, cache_sh),
+            donate_argnums=(2,),
+        )
+    else:
+        aparams, _ = abstract_params(cfg)
+        acaches = abstract_caches(cfg, n_slots, max_seq_total, enc_len)
+        decode = jax.jit(build_decode_greedy(cfg, ctx), donate_argnums=(2,))
+
+    prefills, inserts = {}, {}
+    for b in sorted(set(buckets)):
+        cell = build_prefill_greedy(cfg, ctx, b)
+        if mesh is not None:
+            prefills[b] = jax.jit(cell, in_shardings=(param_sh, None))
+            # pin the global caches to the decode cell's sharding so the
+            # insert->decode round trip never re-lays-out (and never
+            # recompiles either cell after the first call)
+            inserts[b] = jax.jit(
+                build_cache_insert(),
+                in_shardings=(cache_sh, None, None),
+                out_shardings=cache_sh,
+                donate_argnums=(0,),
+            )
+        else:
+            prefills[b] = jax.jit(cell)
+            inserts[b] = jax.jit(build_cache_insert(), donate_argnums=(0,))
+
+    return EngineCells(
+        decode_fn=decode,
+        prefill_fns=prefills,
+        insert_fns=inserts,
+        param_shardings=param_sh,
+        cache_shardings=cache_sh,
+        abstract_params=aparams,
+        abstract_caches=acaches,
+        n_prefix=npfx,
+        max_seq_total=max_seq_total,
+    )

@@ -25,6 +25,7 @@ from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core.interference import corridor_budget
 from repro.sched.cluster import Cluster, Pool
 
 
@@ -118,18 +119,23 @@ class CorridorBinPackPolicy:
     """Best-fit bin-packing on the pool's bandwidth corridor.
 
     The corridor budget is the aggregate injected LoI a pool link absorbs
-    before M/D/1 queueing departs the linear regime (default 0.6 ~ the
-    knee of `queueing_slowdown`). Placement is classic best-fit: the open
-    pool whose post-placement headroom is smallest but still nonnegative;
-    if the job fits no corridor, the pool with maximum headroom (least
-    overflow) — capacity corridors (R_cap) are enforced by the node-slot
-    capacity itself.
+    before M/D/1 queueing departs the linear regime. It is DERIVED from the
+    pool topology by `core.interference.corridor_budget` — the M/D/1 knee
+    utilization discounted by `TierTopology.r_bw_pool` (~0.59 on the
+    emulated v5e pool) — rather than hard-coded; pass `loi_budget` to
+    override (trace studies / tests). Placement is classic best-fit: the
+    open pool whose post-placement headroom is smallest but still
+    nonnegative; if the job fits no corridor, the pool with maximum
+    headroom (least overflow) — capacity corridors (R_cap) are enforced by
+    the node-slot capacity itself.
     """
 
     name = "binpack"
 
-    def __init__(self, loi_budget: float = 0.6):
-        self.loi_budget = loi_budget
+    def __init__(self, loi_budget: Optional[float] = None, topo=None):
+        self.loi_budget = (
+            loi_budget if loi_budget is not None else corridor_budget(topo)
+        )
 
     def select(self, job, cluster: Cluster, now: float) -> Optional[Pool]:
         open_pools = cluster.open_pools()

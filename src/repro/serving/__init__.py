@@ -1,0 +1,76 @@
+"""Tier-aware continuous-batching serving subsystem.
+
+This package is the serving-side realization of the paper's quantitative
+workflow: decode is the catalog's link-saturating, latency-sensitive cell,
+so it is where disaggregated-memory placement and admission decisions
+matter most (cf. the CXL-pooling studies arXiv:2211.02682, 2303.06420).
+
+Architecture (one module per concern):
+
+  queue.py    — `Request` / `RequestQueue` and deterministic arrival
+                scenarios (chat / long-context / bursty).
+  batcher.py  — fixed-slot continuous batching: requests flow through
+                `n_slots` decode lanes; admission on free slot, release on
+                completion; inactive slots mask their cache writes by
+                parking the write cursor out of range.
+  kv_pager.py — page-grain tier-aware KV-cache manager: hot tail pages
+                local, cold prefix evicted to the pool tier, placed by the
+                paper's placement engine (`core.placement`) under the
+                hot/cold decode traffic model shared with the workload
+                catalog (`core.access`). `static` is the first-touch
+                no-paging baseline; `none` the all-local control.
+  engine.py   — the event loop over fixed-shape jitted cells built by
+                `runtime.serve.make_engine_cells` (prefill per prompt
+                bucket, one slot-batched greedy decode cell with per-slot
+                positions, cache-splice cells), plus the admission
+                controller that throttles batch growth at the M/D/1-knee
+                corridor budget (`core.interference.corridor_budget`)
+                using cached `core.quantify.profile_for` submission-time
+                metrics.
+
+No recompilation occurs at steady state: every cell's shapes are fixed at
+build time and admissions/completions only flip mask/position vectors —
+`tests/test_serving.py` asserts the executable-cache sizes stay constant.
+CI gates this subsystem twice: the tier-1 fast lane runs the serving tests
+on every push, and the benchmark smoke job runs `benchmarks/bench_serving`
+(chat / long-context / bursty) and uploads the BENCH artifacts, including
+the long-context pager-vs-static comparison that must show the tier-aware
+pager cutting the remote (pool-tier) access share at equal tokens/s.
+"""
+
+from repro.serving.batcher import ContinuousBatcher, Slot
+from repro.serving.engine import (
+    AdmissionController,
+    EngineConfig,
+    ServeStats,
+    ServingEngine,
+)
+from repro.serving.kv_pager import KVPager, PagerConfig, StepTraffic
+from repro.serving.queue import (
+    Request,
+    RequestQueue,
+    SCENARIOS,
+    bursty_stream,
+    chat_stream,
+    long_context_stream,
+    make_scenario,
+)
+
+__all__ = [
+    "AdmissionController",
+    "ContinuousBatcher",
+    "EngineConfig",
+    "KVPager",
+    "PagerConfig",
+    "Request",
+    "RequestQueue",
+    "SCENARIOS",
+    "ServeStats",
+    "ServingEngine",
+    "Slot",
+    "StepTraffic",
+    "bursty_stream",
+    "chat_stream",
+    "long_context_stream",
+    "make_scenario",
+]

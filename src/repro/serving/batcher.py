@@ -1,0 +1,103 @@
+"""Slot bookkeeping for continuous batching.
+
+The engine decodes a fixed batch of `n_slots` sequences; requests flow
+through slots (admit on free, release on completion) so new prompts join
+in-flight decode without ever changing the jitted cell's shapes. Inactive
+slots park their write cursor at `park_pos` (>= cache length), which turns
+the masked KV insert into a no-op (`models.attention._cache_insert` writes
+nothing for out-of-range positions) — the "slot masking" half of the
+fixed-shape contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.queue import Request
+
+
+@dataclasses.dataclass
+class Slot:
+    index: int
+    request: Optional[Request] = None
+    t: int = 0                 # next cache write position (absolute)
+    emitted: int = 0           # tokens generated so far (incl. prefill's)
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+
+class ContinuousBatcher:
+    """Fixed-slot admission/release with bucketed prefill shapes."""
+
+    def __init__(self, n_slots: int, prefill_buckets: Sequence[int],
+                 park_pos: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.buckets = tuple(sorted(prefill_buckets))
+        self.park_pos = park_pos
+        self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
+        self._free: List[int] = list(range(n_slots))[::-1]  # pop() -> slot 0
+
+    # ------------------------------------------------------------ buckets
+    def bucket_for(self, prompt_len: int) -> int:
+        """Prompts must land exactly on a bucket: SSM/conv state is a
+        sequential reduction over the prompt, so right-padding would
+        corrupt it — generators quantize lengths instead (see queue.py)."""
+        if prompt_len not in self.buckets:
+            raise ValueError(
+                f"prompt_len {prompt_len} not in prefill buckets "
+                f"{self.buckets}; quantize the stream"
+            )
+        return prompt_len
+
+    # ----------------------------------------------------------- slots
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - self.n_free
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s.active for s in self.slots], dtype=bool)
+
+    def admit(self, request: Request, start_pos: int) -> Slot:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        slot = self.slots[self._free.pop()]
+        slot.request = request
+        slot.t = start_pos
+        slot.emitted = 1            # prefill emits the first token
+        return slot
+
+    def release(self, slot: Slot) -> Request:
+        req = slot.request
+        if req is None:
+            raise RuntimeError(f"slot {slot.index} already free")
+        slot.request = None
+        slot.t = self.park_pos
+        slot.emitted = 0
+        self._free.append(slot.index)
+        return req
+
+    # ------------------------------------------------------- step arrays
+    def t_vector(self) -> np.ndarray:
+        """Per-slot write positions; inactive slots parked out of range so
+        their cache writes mask away."""
+        return np.array(
+            [s.t if s.active else self.park_pos for s in self.slots],
+            dtype=np.int32,
+        )
+
+    def advance(self) -> None:
+        for s in self.slots:
+            if s.active:
+                s.t += 1
+                s.emitted += 1

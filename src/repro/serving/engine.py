@@ -1,0 +1,436 @@
+"""Tier-aware continuous-batching serving engine.
+
+The engine turns the one-shot prefill+decode loop of `launch/serve.py` into
+an event loop over fixed-shape jitted cells (`runtime.serve.
+make_engine_cells`):
+
+  admit   — pop arrived requests while slots are free AND the admission
+            controller projects the pool link below the M/D/1 knee; run
+            the bucketed prefill cell, splice the request's caches into
+            the slot batch, emit its first greedy token;
+  decode  — one step of the whole slot batch with per-slot positions
+            (inactive slots are masked by parked write cursors);
+  retire  — completed requests free their slot and their KV pages.
+
+Tier awareness lives in two places:
+
+* the `KVPager` keeps each slot's hot KV tail in the local tier and evicts
+  the cold prefix to the pool tier (hot/cold per `core.access`'s decode
+  traffic model, placement per `core.placement` — the same engine
+  `runtime/tiering.py` uses at tensor grain for training state);
+* the `AdmissionController` consults the catalog profile (cached
+  `core.quantify.profile_for`, the paper's §7.2 submission-time metrics)
+  for a prior per-slot injected LoI, refines it with the pager's measured
+  traffic, and throttles batch growth when the projected pool-link LoI
+  would cross the corridor budget (`core.interference.corridor_budget`,
+  the M/D/1 knee).
+
+The clock is dual: wall time measures what this host actually does;
+virtual time prices each step on the target tier topology (compute from
+the decode roofline, local/pool bytes from the pager, pool transfers
+overlapped with compute because pool-resident pages are layer-ahead
+prefetchable — `runtime/prefetch.py`). Latency metrics (TTFT/TPOT) are
+virtual; throughput is reported on both clocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import hw
+from repro.common.config import SHAPES, ModelConfig
+from repro.common.parallel import ParallelCtx
+from repro.common.pytree import leaf_bytes, named_leaves
+from repro.core import interference as itf
+from repro.core import roofline as rl
+from repro.core import tiers as tr
+from repro.models import model as M
+from repro.models.frontends import synthetic_frontend_embeds
+from repro.runtime import serve as serve_rt
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kv_pager import KVPager, PagerConfig
+from repro.serving.queue import Request, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8
+    max_seq: int = 128              # prompt+gen per slot (excl. vision pfx)
+    prefill_buckets: tuple = (32,)
+    # --- pager ---
+    page_tokens: int = 16
+    local_budget_frac: Optional[float] = 0.5   # of peak KV bytes; None=all
+    pager_policy: str = "hotness"              # hotness | static | none
+    hot_window: int = 32
+    cold_touch: float = 0.05
+    # --- admission ---
+    admission: str = "loi"                     # loi | greedy
+    knee_excess: float = 0.75
+    catalog_arch: Optional[str] = None         # profile_for prior (paper
+    catalog_shape: str = "decode_32k"          # §7.2 submission metrics)
+    # --- virtual clock ---
+    step_overhead_s: float = 5e-6              # host dispatch/launch floor
+    # per decode step; keeps the virtual clock of tiny reduced models in a
+    # physically plausible regime so arrival processes actually overlap
+
+
+class AdmissionController:
+    """Throttle slot admissions at the projected pool-link LoI knee.
+
+    Projection: per-slot LoI = one slot's share of pool-link utilization,
+    seeded from the catalog profile (`profile_for(arch, shape)` — cached,
+    computed once per workload exactly like PR 1's scheduler does at
+    submission time) and refined online with an EMA of the pager's
+    measured pool time per step. Admitting slot n+1 is allowed while
+    (n+1) * per_slot_loi stays under the corridor budget — the same
+    derived M/D/1-knee budget the rack scheduler's binpack policy packs
+    against."""
+
+    EMA = 0.5
+
+    def __init__(self, topo: tr.TierTopology, *, mode: str = "loi",
+                 knee_excess: float = 0.75, prior_loi: float = 0.0):
+        if mode not in ("loi", "greedy"):
+            raise ValueError(f"unknown admission mode {mode!r}")
+        self.mode = mode
+        self.budget = itf.corridor_budget(topo, knee_excess)
+        self.per_slot_loi = float(prior_loi)
+        self.blocks = 0
+
+    @classmethod
+    def from_catalog(cls, topo, arch: Optional[str], shape_name: str,
+                     **kw) -> "AdmissionController":
+        prior = 0.0
+        if arch is not None:
+            from repro.core.quantify import profile_for  # lazy: pulls jax
+
+            prof = profile_for(arch, shape_name, use_dryrun=False)
+            prior = prof.injected_loi() / SHAPES[shape_name].global_batch
+        return cls(topo, prior_loi=prior, **kw)
+
+    def observe(self, n_active: int, t_pool: float, dt: float) -> None:
+        if n_active < 1 or dt <= 0.0:
+            return
+        measured = min(1.0, t_pool / dt) / n_active
+        self.per_slot_loi = (
+            (1 - self.EMA) * self.per_slot_loi + self.EMA * measured
+        )
+
+    def projected_loi(self, n_slots: int) -> float:
+        return min(1.0, n_slots * self.per_slot_loi)
+
+    def admit(self, n_active: int) -> bool:
+        if self.mode == "greedy" or n_active == 0:
+            return True     # never deadlock an idle engine
+        ok = self.projected_loi(n_active + 1) <= self.budget
+        if not ok:
+            self.blocks += 1
+        return ok
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int
+    tokens: int
+    steps: int
+    wall_s: float
+    virtual_s: float
+    ttft: np.ndarray               # per request, virtual seconds
+    tpot: np.ndarray               # per generated token (after the first)
+    pager: dict
+    admission_blocks: int
+    max_concurrency: int
+
+    def summary(self) -> Dict[str, float]:
+        def pct(a, q):
+            return float(np.percentile(a, q)) if len(a) else float("nan")
+
+        return {
+            "n_requests": self.n_requests,
+            "tokens": self.tokens,
+            "steps": self.steps,
+            "tok_per_s_wall": self.tokens / max(self.wall_s, 1e-9),
+            "tok_per_s_virtual": self.tokens / max(self.virtual_s, 1e-12),
+            "ttft_p50_s": pct(self.ttft, 50),
+            "tpot_p50_s": pct(self.tpot, 50),
+            "tpot_p99_s": pct(self.tpot, 99),
+            "remote_share": self.pager["remote_share"],
+            "admission_blocks": self.admission_blocks,
+            "max_concurrency": self.max_concurrency,
+        }
+
+
+def _kv_bytes_per_token(acaches) -> float:
+    """Self-attention K/V bytes per cached token per slot, from the global
+    abstract cache tree (leaves (stack, slots, seq, ...))."""
+    total = 0.0
+    for name, leaf in named_leaves(acaches):
+        if name.endswith("/k") or name.endswith("/v"):
+            slots, seq = leaf.shape[1], leaf.shape[2]
+            total += leaf_bytes(leaf) / (slots * seq)
+    return total
+
+
+def _resident_bytes_per_slot(acaches) -> float:
+    """Per-slot bytes of the non-paged decode state (SSM state, conv
+    tails, cross-attention KV) — pinned local, streamed every step."""
+    total = 0.0
+    for name, leaf in named_leaves(acaches):
+        if not (name.endswith("/k") or name.endswith("/v")):
+            total += leaf_bytes(leaf) / leaf.shape[1]
+    return total
+
+
+class ServingEngine:
+    """Continuous-batching serve loop over fixed-shape cells."""
+
+    def __init__(self, cfg: ModelConfig, ctx: ParallelCtx,
+                 ecfg: EngineConfig, params,
+                 cells: serve_rt.EngineCells,
+                 topo: Optional[tr.TierTopology] = None):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.ecfg = ecfg
+        self.params = params
+        self.cells = cells
+        self.topo = topo or tr.v5e_topology()
+
+        self.npfx = cells.n_prefix
+        self.batcher = ContinuousBatcher(
+            ecfg.n_slots, ecfg.prefill_buckets,
+            park_pos=cells.max_seq_total,
+        )
+        kv_tok = _kv_bytes_per_token(cells.abstract_caches)
+        resident = _resident_bytes_per_slot(cells.abstract_caches)
+        budget = None
+        if ecfg.local_budget_frac is not None:
+            peak = kv_tok * cells.max_seq_total * ecfg.n_slots
+            budget = ecfg.local_budget_frac * peak
+        self.pager = KVPager(
+            ecfg.n_slots, cells.max_seq_total, kv_tok, resident,
+            PagerConfig(
+                page_tokens=ecfg.page_tokens,
+                local_budget_bytes=budget,
+                policy=ecfg.pager_policy,
+                hot_window=ecfg.hot_window,
+                cold_touch=ecfg.cold_touch,
+            ),
+            topo=self.topo,
+        )
+        self.admission = AdmissionController.from_catalog(
+            self.topo, ecfg.catalog_arch, ecfg.catalog_shape,
+            mode=ecfg.admission, knee_excess=ecfg.knee_excess,
+        )
+        self.caches = M.make_decode_caches(
+            cfg, ecfg.n_slots, cells.max_seq_total, enc_len=self._enc_len()
+        )
+        if cells.cache_shardings is not None:
+            self.caches = jax.device_put(self.caches, cells.cache_shardings)
+        self.tokens = np.zeros(ecfg.n_slots, dtype=np.int32)
+        self._active_params = cfg.active_param_count()
+        self.steps = 0
+        self.virtual_s = 0.0
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(cls, cfg: ModelConfig, ctx: ParallelCtx, ecfg: EngineConfig,
+              *, params=None, mesh=None, rules=None, seed: int = 0,
+              topo=None) -> "ServingEngine":
+        enc_len = (
+            max(ecfg.prefill_buckets) if cfg.num_encoder_layers else 0
+        )
+        cells = serve_rt.make_engine_cells(
+            cfg, ctx, rules, mesh,
+            n_slots=ecfg.n_slots, max_seq=ecfg.max_seq,
+            buckets=ecfg.prefill_buckets, enc_len=enc_len,
+        )
+        if params is None:
+            params, _ = M.init_model(cfg, jax.random.PRNGKey(seed))
+        return cls(cfg, ctx, ecfg, params, cells, topo=topo)
+
+    def _enc_len(self) -> int:
+        return (
+            max(self.ecfg.prefill_buckets)
+            if self.cfg.num_encoder_layers else 0
+        )
+
+    def compile_counts(self) -> Dict[str, int]:
+        return self.cells.compile_counts()
+
+    # ------------------------------------------------------------ admit
+    def _frontend_extras(self, req: Request, bucket: int) -> dict:
+        extras = {}
+        if self.cfg.frontend in ("vision_stub", "audio_stub"):
+            key = jax.random.fold_in(jax.random.PRNGKey(17), req.request_id)
+            emb = synthetic_frontend_embeds(self.cfg, 1, bucket, key)
+            name = ("patches" if self.cfg.frontend == "vision_stub"
+                    else "frames")
+            extras[name] = emb
+        return extras
+
+    def _admit(self, req: Request, now: float) -> None:
+        if req.output:
+            raise ValueError(
+                f"request {req.request_id} was already served — build a "
+                "fresh trace per run (Request objects are consumed)"
+            )
+        bucket = self.batcher.bucket_for(req.prompt_len)
+        if req.prompt_len + req.max_new_tokens > self.ecfg.max_seq:
+            raise ValueError(
+                f"request {req.request_id}: prompt+gen exceeds max_seq "
+                f"{self.ecfg.max_seq}"
+            )
+        batch = {"tokens": jnp.asarray(req.tokens[None, :]),
+                 **self._frontend_extras(req, bucket)}
+        slot_caches, tok = self.cells.prefill_fns[bucket](self.params, batch)
+        start = self.npfx + req.prompt_len
+        slot = self.batcher.admit(req, start_pos=start)
+        self.caches = self.cells.insert_fns[bucket](
+            self.caches, slot_caches, np.int32(slot.index)
+        )
+        self.virtual_s += self._prefill_dt(start)
+        first = int(np.asarray(tok)[0])
+        self.tokens[slot.index] = first
+        req.admitted = now
+        req.output.append(first)
+        req.token_times.append(self.virtual_s)
+        self.pager.admit(slot.index, start)
+        if req.done:                      # max_new_tokens == 1
+            req.finished = self.virtual_s
+            self._retire(slot)
+
+    def _prefill_dt(self, n_tokens: int) -> float:
+        """Virtual cost of prefilling `n_tokens` on the target topology:
+        prefill compute + writing the request's caches into the local
+        tier."""
+        t_comp = (
+            rl.model_flops_decode(self._active_params, n_tokens)
+            / hw.V5E.peak_flops_bf16
+        )
+        write = (
+            self.pager.bytes_per_token * n_tokens
+            + self.pager.resident_bytes
+        ) / self.topo.local.bandwidth
+        return max(t_comp, write) + self.ecfg.step_overhead_s
+
+    def _retire(self, slot) -> Request:
+        req = self.batcher.release(slot)
+        self.pager.release(slot.index)
+        return req
+
+    # ------------------------------------------------------------- step
+    def _step_decode(self) -> None:
+        """One fixed-shape decode step over all slots + accounting."""
+        active = self.batcher.active_mask()
+        n_active = int(active.sum())
+        t_vec = self.batcher.t_vector()
+        next_tok, finite, self.caches = self.cells.decode_fn(
+            self.params, jnp.asarray(self.tokens), self.caches,
+            jnp.asarray(t_vec),
+        )
+        next_np = np.asarray(next_tok)
+        if not bool(np.asarray(finite)[active].all()):
+            raise FloatingPointError(
+                f"non-finite decode logits at step {self.steps} "
+                f"(active slots: {n_active})"
+            )
+
+        traffic = self.pager.step(active)
+        t_compute = (
+            rl.model_flops_decode(self._active_params, n_active)
+            / hw.V5E.peak_flops_bf16
+        )
+        t_local = traffic.local_bytes / self.topo.local.bandwidth
+        t_pool = traffic.pool_bytes / self.topo.pool.bandwidth
+        # pool transfers overlap compute (layer-ahead prefetch of pool
+        # pages, runtime/prefetch.py) -> roofline max, not sum
+        dt = float(
+            itf.step_time_vec(t_pool, t_local, t_compute, 0.0)
+        ) + self.ecfg.step_overhead_s
+        self.virtual_s += dt
+        self.steps += 1
+        self.admission.observe(n_active, t_pool, dt)
+
+        self.batcher.advance()
+        for slot in self.batcher.slots:
+            if not slot.active:
+                continue
+            req = slot.request
+            tok = int(next_np[slot.index])
+            self.tokens[slot.index] = tok
+            req.output.append(tok)
+            req.token_times.append(self.virtual_s)
+            if req.done:
+                req.finished = self.virtual_s
+                self._retire(slot)
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request],
+            max_steps: Optional[int] = None) -> ServeStats:
+        """Serve a request trace to completion (deterministic for a fixed
+        trace). Returns aggregate stats; per-request outputs/latencies are
+        left on the `Request` objects."""
+        q = RequestQueue(requests)
+        now0 = self.virtual_s
+        steps0 = self.steps
+        blocks0 = self.admission.blocks
+        pager0 = self.pager.counters()
+        wall0 = time.perf_counter()
+        max_conc = 0
+        while len(q) or self.batcher.n_active:
+            while (self.batcher.n_free and q.peek(self.virtual_s)
+                   and self.admission.admit(self.batcher.n_active)):
+                self._admit(q.pop(self.virtual_s), self.virtual_s)
+            if self.batcher.n_active == 0:
+                nxt = q.next_arrival()
+                if not np.isfinite(nxt):
+                    break
+                self.virtual_s = max(self.virtual_s, nxt)
+                continue
+            max_conc = max(max_conc, self.batcher.n_active)
+            self._step_decode()
+            if max_steps is not None and self.steps >= max_steps:
+                break
+        wall = time.perf_counter() - wall0
+
+        done = [r for r in requests if r.output]
+        ttft = np.array([r.token_times[0] - r.arrival for r in done])
+        tpot = np.concatenate(
+            [np.diff(r.token_times) for r in done if len(r.token_times) > 1]
+            or [np.zeros(0)]
+        )
+        # every counter in the stats is a delta for THIS run() call — the
+        # engine object stays reusable across traces without mixing
+        # lifetime totals into per-run metrics
+        pager1 = self.pager.counters()
+        dlocal = pager1["local_bytes"] - pager0["local_bytes"]
+        dpool = pager1["pool_bytes"] - pager0["pool_bytes"]
+        pager_delta = {
+            "steps": pager1["steps"] - pager0["steps"],
+            "local_bytes": dlocal,
+            "pool_bytes": dpool,
+            "remote_share": dpool / (dlocal + dpool) if dlocal + dpool
+            else 0.0,
+            "evictions": pager1["evictions"] - pager0["evictions"],
+            "promotions": pager1["promotions"] - pager0["promotions"],
+            "local_used": pager1["local_used"],
+            "pool_used": pager1["pool_used"],
+        }
+        return ServeStats(
+            n_requests=len(done),
+            tokens=sum(len(r.output) for r in done),
+            steps=self.steps - steps0,
+            wall_s=wall,
+            virtual_s=self.virtual_s - now0,
+            ttft=ttft,
+            tpot=tpot,
+            pager=pager_delta,
+            admission_blocks=self.admission.blocks - blocks0,
+            max_concurrency=max_conc,
+        )

@@ -1,0 +1,266 @@
+"""Paged tier-aware KV-cache manager — the serving realization of the
+paper's page-grain placement (its PEBS/page analysis, §4) on top of the
+framework's tier model.
+
+The decode caches of the in-flight batch are divided into fixed-size pages
+(`page_tokens` tokens of self-attention K/V per slot). Each page lives in
+one tier: `local` (HBM) or `pool` (the disaggregated tier behind the shared
+link). Per decode step the pager:
+
+  1. derives each page's access weight from the hot-tail/cold-prefix decode
+     traffic model (`core.access.decode_cache_split` constants — the same
+     model the workload catalog uses, so engine accounting and catalog
+     analysis agree);
+  2. charges the step's bytes to the tier each page currently occupies
+     (plus the non-paged resident state: SSM state/conv tails/cross-KV,
+     always local);
+  3. under the `hotness` policy, re-places pages with the paper's placement
+     engine (`core.placement.place`, the same hotness policy
+     `runtime/tiering.py` applies to training state at tensor grain):
+     hottest pages stay local until the local budget is spent, cold pages
+     are evicted to the pool.
+
+Policies:
+  hotness — tier-aware paging (the tentpole): recency-hot tail pages local,
+            cold prefix evicted to the pool.
+  static  — no-paging baseline: a page's tier is fixed at allocation
+            (first-come local until the budget fills, then pool). Under
+            decode recency this strands the hot tail on the pool tier —
+            the Linux first-touch analogue the paper starts from.
+  none    — no local budget (everything local; control case).
+
+The pager is a *logical* manager plus exact byte accounting, matching the
+rest of the framework: XLA memory kinds are tensor-grain (see
+runtime/capability.py), so physical page moves cannot be expressed on this
+backend — placement is tracked at page grain exactly like the paper tracks
+pages it cannot individually pin either. Pool reads are assumed
+layer-ahead-prefetchable (runtime/prefetch.py), which is why the engine's
+step-time model overlaps pool time with compute instead of serializing it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import placement as plc
+from repro.core import tiers as tr
+from repro.core.access import DECODE_COLD_TOUCH, DECODE_HOT_WINDOW, \
+    TensorAccess
+
+LOCAL, POOL = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PagerConfig:
+    page_tokens: int = 32
+    local_budget_bytes: Optional[float] = None   # None -> unbounded (no
+    # eviction pressure; the "none" policy forces this)
+    policy: str = "hotness"                      # hotness | static | none
+    hot_window: int = DECODE_HOT_WINDOW          # tokens read at full rate
+    cold_touch: float = DECODE_COLD_TOUCH        # cold-prefix touch/step
+    rebalance_every: int = 1                     # steps between re-places
+
+    def __post_init__(self):
+        if self.policy not in ("hotness", "static", "none"):
+            raise ValueError(f"unknown pager policy {self.policy!r}")
+        if self.page_tokens < 1:
+            raise ValueError("page_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class StepTraffic:
+    local_bytes: float
+    pool_bytes: float
+
+    @property
+    def total(self) -> float:
+        return self.local_bytes + self.pool_bytes
+
+
+class KVPager:
+    """Page table + tier accounting for `n_slots` in-flight sequences.
+
+    `bytes_per_token`: self-attention K/V bytes per cached token per slot.
+    `resident_bytes`: per-slot non-paged state (SSM state, conv tails,
+    cross-attention KV) — pinned local, read whole every step.
+    """
+
+    def __init__(self, n_slots: int, max_seq: int, bytes_per_token: float,
+                 resident_bytes: float, pcfg: PagerConfig,
+                 topo: Optional[tr.TierTopology] = None):
+        self.cfg = pcfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.bytes_per_token = float(bytes_per_token)
+        self.resident_bytes = float(resident_bytes)
+        self.page_bytes = self.bytes_per_token * pcfg.page_tokens
+        self.n_pages = -(-max_seq // pcfg.page_tokens)  # ceil
+        self.topo = topo or tr.v5e_topology()
+
+        self.valid = np.zeros((n_slots, self.n_pages), dtype=bool)
+        self.tier = np.full((n_slots, self.n_pages), LOCAL, dtype=np.int8)
+        self.lengths = np.zeros(n_slots, dtype=np.int64)
+
+        self._steps = 0
+        self.total_local_bytes = 0.0
+        self.total_pool_bytes = 0.0
+        self.evictions = 0
+        self.promotions = 0
+
+    # ------------------------------------------------------------ budget
+    @property
+    def budget(self) -> float:
+        if self.cfg.policy == "none" or self.cfg.local_budget_bytes is None:
+            return float("inf")
+        return float(self.cfg.local_budget_bytes)
+
+    def local_bytes_used(self) -> float:
+        return float((self.valid & (self.tier == LOCAL)).sum()
+                     * self.page_bytes)
+
+    def pool_bytes_used(self) -> float:
+        return float((self.valid & (self.tier == POOL)).sum()
+                     * self.page_bytes)
+
+    # --------------------------------------------------------- lifecycle
+    def _alloc_pages(self, slot: int, upto_page: int) -> None:
+        """Mark pages [0, upto_page) of `slot` valid; new pages start in
+        the tier the policy dictates."""
+        newly = ~self.valid[slot, :upto_page]
+        if not newly.any():
+            return
+        if self.cfg.policy == "static":
+            # first-come local until the budget fills; permanent thereafter
+            for p in np.nonzero(newly)[0]:
+                fits = (self.local_bytes_used() + self.page_bytes
+                        <= self.budget)
+                self.tier[slot, p] = LOCAL if fits else POOL
+                self.valid[slot, p] = True
+        else:
+            # hotness/none: allocate local (the tail is the hot end); the
+            # next rebalance evicts whatever the budget cannot hold
+            self.tier[slot, :upto_page][newly] = LOCAL
+            self.valid[slot, :upto_page] = True
+
+    def admit(self, slot: int, length: int) -> None:
+        """A prefilled request enters `slot` with `length` cached tokens."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        self.valid[slot, :] = False
+        self.lengths[slot] = length
+        self._alloc_pages(slot, self._page_of(length - 1) + 1)
+        if self.cfg.policy == "hotness":
+            self.rebalance()
+
+    def release(self, slot: int) -> None:
+        self.valid[slot, :] = False
+        self.lengths[slot] = 0
+
+    def _page_of(self, pos: int) -> int:
+        return max(int(pos), 0) // self.cfg.page_tokens
+
+    # ------------------------------------------------------ access model
+    def _page_weights(self) -> np.ndarray:
+        """(n_slots, n_pages) per-step touch weight of each valid page
+        under the hot-tail/cold-prefix model, fractional at the hot/cold
+        page boundary."""
+        starts = np.arange(self.n_pages) * self.cfg.page_tokens
+        ends = starts + self.cfg.page_tokens
+        hot_lo = self.lengths[:, None] - self.cfg.hot_window
+        # tokens of each page inside [hot_lo, length)
+        hot_tokens = np.clip(
+            np.minimum(ends[None, :], self.lengths[:, None])
+            - np.maximum(starts[None, :], hot_lo),
+            0, self.cfg.page_tokens,
+        )
+        frac_hot = hot_tokens / self.cfg.page_tokens
+        w = frac_hot + (1.0 - frac_hot) * self.cfg.cold_touch
+        return np.where(self.valid, w, 0.0)
+
+    def step(self, active: np.ndarray) -> StepTraffic:
+        """Account one decode step for the `active` slot mask: reads per
+        the traffic model against current page tiers, plus the new token's
+        KV write into its (tail) page and the resident state."""
+        active = np.asarray(active, dtype=bool)
+        w = self._page_weights() * active[:, None]
+        local_r = float((w * (self.tier == LOCAL)).sum() * self.page_bytes)
+        pool_r = float((w * (self.tier == POOL)).sum() * self.page_bytes)
+
+        # one token of KV written at the tail of each active slot
+        wr_local = wr_pool = 0.0
+        for s in np.nonzero(active)[0]:
+            p = self._page_of(int(self.lengths[s]))  # write position == len
+            if p < self.n_pages:
+                if not self.valid[s, p]:
+                    self._alloc_pages(s, p + 1)
+                if self.tier[s, p] == POOL:
+                    wr_pool += self.bytes_per_token
+                else:
+                    wr_local += self.bytes_per_token
+                self.lengths[s] += 1
+        local_b = local_r + wr_local + self.resident_bytes * active.sum()
+        pool_b = pool_r + wr_pool
+
+        self._steps += 1
+        if (self.cfg.policy == "hotness"
+                and self._steps % self.cfg.rebalance_every == 0):
+            self.rebalance()
+
+        self.total_local_bytes += local_b
+        self.total_pool_bytes += pool_b
+        return StepTraffic(local_b, pool_b)
+
+    # --------------------------------------------------------- placement
+    def rebalance(self) -> None:
+        """Re-place valid pages with the paper's placement engine: build a
+        page-grain access profile and run the `hotness` policy against the
+        local budget — the exact analogue of `runtime/tiering.py` applying
+        `core.placement` to training state at tensor grain."""
+        idx = np.nonzero(self.valid)
+        n_valid = len(idx[0])
+        if (n_valid == 0 or not np.isfinite(self.budget)
+                or self.page_bytes <= 0):
+            return  # nothing paged (e.g. SSM-only archs: no self-attn KV)
+        w = self._page_weights()
+        # epsilon recency gradient: among equal-weight cold pages, evict
+        # the oldest first (LRU within the cold class); placement-only,
+        # never part of traffic accounting
+        eps = 1e-9 / max(self.n_pages, 1)
+        profile = [
+            TensorAccess(f"s{s}/p{p}", int(self.page_bytes),
+                         float(w[s, p]) + eps * (p + 1), "cache")
+            for s, p in zip(*idx)
+        ]
+        total = n_valid * self.page_bytes
+        pool_fraction = max(0.0, 1.0 - self.budget / total)
+        place = plc.place(profile, self.topo, "hotness", pool_fraction)
+        before = self.tier.copy()
+        for (s, p), a in zip(zip(*idx), profile):
+            self.tier[s, p] = (
+                LOCAL if place.tier_of(a.name) == "hbm" else POOL
+            )
+        moved = (before != self.tier) & self.valid
+        self.evictions += int((moved & (self.tier == POOL)).sum())
+        self.promotions += int((moved & (self.tier == LOCAL)).sum())
+
+    # ----------------------------------------------------------- metrics
+    def remote_share(self) -> float:
+        """Pool-tier share of cumulative cache traffic (the acceptance
+        metric: tier-aware paging must push this down)."""
+        total = self.total_local_bytes + self.total_pool_bytes
+        return self.total_pool_bytes / total if total else 0.0
+
+    def counters(self) -> dict:
+        return {
+            "steps": self._steps,
+            "local_bytes": self.total_local_bytes,
+            "pool_bytes": self.total_pool_bytes,
+            "remote_share": self.remote_share(),
+            "evictions": self.evictions,
+            "promotions": self.promotions,
+            "local_used": self.local_bytes_used(),
+            "pool_used": self.pool_bytes_used(),
+        }

@@ -1,0 +1,165 @@
+"""Request queue and arrival-process generators for the serving engine.
+
+A `Request` is one user call: a prompt (already tokenized; its length must
+be one of the engine's prefill buckets — serving systems quantize prompt
+lengths so the fixed-shape prefill cells never recompile) plus a decode
+budget. `RequestQueue` is a FIFO ordered by arrival time: the engine only
+sees requests whose arrival is <= its clock, so open-loop traces replay
+deterministically.
+
+Three scenario generators mirror the benchmark matrix of the brief:
+
+* `chat_stream`      — short prompts, short generations, steady Poisson
+                       arrivals (the latency-sensitive interactive lane);
+* `long_context_stream` — few requests, long prompts (the 32k-class lane
+                       whose KV cache spills the local tier — the cell the
+                       tier-aware pager exists for);
+* `bursty_stream`    — mixed prompt lengths arriving in bursts separated
+                       by idle gaps (slot churn + admission stress).
+
+All generators are deterministic in `seed`.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its per-request accounting."""
+
+    request_id: int
+    tokens: np.ndarray            # (prompt_len,) int32 prompt
+    max_new_tokens: int
+    arrival: float = 0.0          # seconds since trace start
+    # --- filled in by the engine ---
+    admitted: float = float("nan")
+    finished: float = float("nan")
+    output: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class RequestQueue:
+    """FIFO over arrival time. `pop(now)` only releases arrived requests."""
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._items: List[Request] = sorted(requests, key=lambda r: r.arrival)
+        self._head = 0
+
+    def push(self, req: Request) -> None:
+        # insert into the *unconsumed* suffix only — re-sorting the whole
+        # list would shuffle already-popped items back past _head
+        pos = bisect.bisect(
+            [r.arrival for r in self._items[self._head:]], req.arrival
+        )
+        self._items.insert(self._head + pos, req)
+
+    def __len__(self) -> int:
+        return len(self._items) - self._head
+
+    def peek(self, now: float) -> Optional[Request]:
+        if self._head < len(self._items):
+            r = self._items[self._head]
+            if r.arrival <= now:
+                return r
+        return None
+
+    def pop(self, now: float) -> Optional[Request]:
+        r = self.peek(now)
+        if r is not None:
+            self._head += 1
+        return r
+
+    def next_arrival(self) -> float:
+        """Arrival time of the next queued request (inf when drained)."""
+        if self._head < len(self._items):
+            return self._items[self._head].arrival
+        return float("inf")
+
+
+# ------------------------------------------------------------- scenarios
+def _mk_requests(rng, vocab: int, prompt_lens, gens, arrivals) -> list:
+    out = []
+    for i, (pl, g, at) in enumerate(zip(prompt_lens, gens, arrivals)):
+        toks = rng.integers(0, vocab, size=int(pl)).astype(np.int32)
+        out.append(Request(
+            request_id=i, tokens=toks, max_new_tokens=int(g),
+            arrival=float(at),
+        ))
+    return out
+
+
+def chat_stream(n: int, vocab: int, *, seed: int = 0,
+                prompt_buckets: Sequence[int] = (16, 32),
+                gen_range: tuple = (8, 24),
+                arrival_rate: float = 2.0) -> List[Request]:
+    """Short-prompt interactive chat: Poisson arrivals, bucketed prompts."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n))
+    lens = rng.choice(list(prompt_buckets), size=n)
+    gens = rng.integers(gen_range[0], gen_range[1] + 1, size=n)
+    return _mk_requests(rng, vocab, lens, gens, arrivals)
+
+
+def long_context_stream(n: int, vocab: int, *, seed: int = 0,
+                        prompt_bucket: int = 256,
+                        gen_range: tuple = (16, 48),
+                        arrival_rate: float = 0.5) -> List[Request]:
+    """Long-context lane: every prompt at the largest bucket, so per-slot
+    KV exceeds the local-tier budget and the pager must evict."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n))
+    lens = np.full(n, prompt_bucket)
+    gens = rng.integers(gen_range[0], gen_range[1] + 1, size=n)
+    return _mk_requests(rng, vocab, lens, gens, arrivals)
+
+
+def bursty_stream(n: int, vocab: int, *, seed: int = 0,
+                  prompt_buckets: Sequence[int] = (16, 32, 64),
+                  gen_range: tuple = (8, 32),
+                  burst_size: int = 6,
+                  burst_gap: float = 4.0) -> List[Request]:
+    """Mixed bursty arrivals: `burst_size` requests land together, then the
+    line goes quiet for ~`burst_gap` seconds (slot churn + admission
+    throttle stress)."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    jitter = 0.01 * burst_gap     # in-burst spread << the idle gap
+    while len(arrivals) < n:
+        k = min(burst_size, n - len(arrivals))
+        arrivals.extend([t + float(rng.uniform(0, jitter))
+                         for _ in range(k)])
+        t += float(rng.exponential(burst_gap))
+    arrivals = np.sort(np.asarray(arrivals))
+    lens = rng.choice(list(prompt_buckets), size=n)
+    gens = rng.integers(gen_range[0], gen_range[1] + 1, size=n)
+    return _mk_requests(rng, vocab, lens, gens, arrivals)
+
+
+SCENARIOS = {
+    "chat": chat_stream,
+    "long_context": long_context_stream,
+    "bursty": bursty_stream,
+}
+
+
+def make_scenario(name: str, n: int, vocab: int, *, seed: int = 0,
+                  **kwargs) -> List[Request]:
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; one of "
+                         f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name](n, vocab, seed=seed, **kwargs)

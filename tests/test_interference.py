@@ -66,6 +66,79 @@ def test_ic_reflects_injection():
     assert quiet.interference_coefficient() >= 1.0
 
 
+def test_mdl_knee_math():
+    """rho* solves queueing_slowdown(rho*) = 1 + max_excess exactly."""
+    for e in (0.25, 0.75, 2.0):
+        rho = itf.mdl_knee(e)
+        assert itf.queueing_slowdown(rho) == pytest.approx(1.0 + e)
+    assert itf.mdl_knee(0.75) == pytest.approx(0.6)
+    with pytest.raises(ValueError):
+        itf.mdl_knee(0.0)
+
+
+def test_corridor_budget_derived_not_hardcoded():
+    """Binpack's budget comes from the topology (knee x (1 - r_bw_pool)),
+    not the old 0.6 constant — and scales with the pool's bandwidth
+    share."""
+    from repro.sched.policies import CorridorBinPackPolicy
+
+    topo = tr.v5e_topology()
+    b = itf.corridor_budget(topo)
+    assert b == pytest.approx(
+        itf.mdl_knee() * (1.0 - topo.r_bw_pool)
+    )
+    assert 0.0 < b < itf.mdl_knee()
+    assert CorridorBinPackPolicy().loi_budget == pytest.approx(b)
+    assert CorridorBinPackPolicy(loi_budget=0.42).loi_budget == 0.42
+    # a fatter pool link (larger r_bw_pool) must tighten the corridor
+    import dataclasses as dc
+
+    fat = dc.replace(
+        topo,
+        tiers=(topo.tiers[0],
+               dc.replace(topo.tiers[1],
+                          bandwidth=topo.tiers[0].bandwidth)),
+    )
+    assert itf.corridor_budget(fat) < b
+
+
+def test_catalog_decode_loi_spread():
+    """Paper Fig 10 spread: under the refined hot-tail/cold-prefix decode
+    traffic model, catalog decode cells populate the intermediate LoI band
+    instead of collapsing onto the silent/link-saturating extremes."""
+    from repro import configs
+    from repro.core.quantify import profile_for
+
+    lois = [
+        profile_for(a, "decode_32k", pool_fraction=0.05,
+                    use_dryrun=False).injected_loi()
+        for a in configs.list_archs()
+    ]
+    mid = [l for l in lois if 0.1 < l < 0.95]
+    assert len(mid) >= 2, lois             # intermediate points exist
+    assert max(lois) > 0.95, lois          # saturating cells remain
+    # the adoption (pool-by-necessity) scenario also has an intermediate
+    auto = [
+        profile_for(a, "decode_32k", pool_fraction="auto",
+                    use_dryrun=False).injected_loi()
+        for a in configs.list_archs()
+    ]
+    assert any(0.1 < l < 0.95 for l in auto), auto
+
+
+def test_decode_cache_split_model():
+    from repro.core import access as acc
+
+    # short sequences: everything hot, no split
+    assert acc.decode_cache_split(acc.DECODE_HOT_WINDOW) == [("", 1.0, 1.0)]
+    parts = acc.decode_cache_split(8 * acc.DECODE_HOT_WINDOW)
+    assert len(parts) == 2
+    (_, hot_frac, hot_t), (_, cold_frac, cold_t) = parts
+    assert hot_frac == pytest.approx(1 / 8)
+    assert hot_frac + cold_frac == pytest.approx(1.0)
+    assert hot_t == 1.0 and cold_t == acc.DECODE_COLD_TOUCH < 1.0
+
+
 def test_lbench_loi_monotone_in_nflop():
     topo = tr.v5e_topology()
     lois = [itf.lbench_loi(nf, 1 << 20, topo) for nf in (1, 8, 64, 512)]
