@@ -26,6 +26,7 @@ MODULES = [
     ("fig5", "benchmarks.bench_roofline_scatter"),
     ("fig6", "benchmarks.bench_bwcap_curve"),
     ("fig8", "benchmarks.bench_prefetch"),
+    ("bfs", "benchmarks.bench_bfs_case"),
     ("fig9", "benchmarks.bench_tier_ratios"),
     ("fig10", "benchmarks.bench_sensitivity"),
     ("fig11", "benchmarks.bench_lbench"),

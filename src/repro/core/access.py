@@ -177,6 +177,25 @@ def serve_profile(params, caches, cfg: ModelConfig, shape: ShapeConfig,
     return out
 
 
+def with_prefetch_excess(profile: list[TensorAccess], excess_bytes: float,
+                         name: str = "prefetch/excess"
+                         ) -> list[TensorAccess]:
+    """Fold a prefetcher's fetched-but-unused bytes back into an access
+    profile (paper §4.2: SuperLU's speculative HW prefetcher adds 37%
+    excess traffic). The excess is real pool-link traffic per step — it
+    inflates the profile's pool time, injected LoI, and interference
+    coefficient exactly like useful traffic does, which is how a
+    low-accuracy prefetcher turns itself into an interference injector.
+    `excess_bytes` comes from `prefetch.PrefetchReport.excess_bytes` (per
+    trace; divide by steps for per-step) or the pager's
+    `prefetch_excess_bytes` counter."""
+    if excess_bytes <= 0:
+        return list(profile)
+    return list(profile) + [
+        TensorAccess(name, int(excess_bytes), 1.0, "other")
+    ]
+
+
 # ------------------------------------------------- Fig 6 scaling curve
 def bandwidth_capacity_curve(profile: list[TensorAccess]):
     """Returns (footprint_fraction, traffic_fraction) arrays — the CDF of

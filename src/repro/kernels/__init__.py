@@ -8,7 +8,9 @@ Each kernel package ships three modules:
   ref.py     - the pure-jnp oracle the tests assert against
 
 Kernels: lbench (the paper's interference/roofline kernel), flash_attention
-(prefill), decode_attention (single-token vs long KV), ssd_scan (Mamba2 SSD).
+(prefill), decode_attention (single-token vs long KV; `paged.py` adds the
+block-index-map variant over non-contiguous KV pages, fed by
+`serving.kv_pager.KVPager.block_table`), ssd_scan (Mamba2 SSD).
 """
 
 from __future__ import annotations

@@ -6,6 +6,7 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.decode_attention import ref
@@ -29,4 +30,42 @@ def decode_mha(
 
     return da.flash_decode(
         q, k, v, length, scale=scale, interpret=(impl == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_decode_mha(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    lengths,
+    *,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """q (B,H,D) vs a PAGED cache: k/v (P_phys, page, KV, D) physical page
+    pool + (B, n_logical) block tables (`KVPager.block_table` layout) with
+    per-sequence valid `lengths`. Block-table entries past the valid
+    length are clamped to physical page 0 so the gather stays in bounds
+    on every backend; the length mask keeps them out of the math."""
+    n_pages = block_tables.shape[1]
+    page = k_pages.shape[1]
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (q.shape[0],)
+    )
+    live = (
+        jnp.arange(n_pages, dtype=jnp.int32)[None, :] * page
+        < lengths[:, None]
+    )
+    block_tables = jnp.where(live, jnp.asarray(block_tables, jnp.int32), 0)
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        return ref.paged_decode_mha(q, k_pages, v_pages, block_tables,
+                                    lengths, scale=scale)
+    from repro.kernels.decode_attention import paged as pg
+
+    return pg.paged_flash_decode(
+        q, k_pages, v_pages, block_tables, lengths, scale=scale,
+        interpret=(impl == "interpret"),
     )

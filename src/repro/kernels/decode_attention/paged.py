@@ -1,0 +1,121 @@
+"""Paged flash-decode Pallas kernel: one query token vs a KV cache stored
+as fixed-size pages scattered through a physical page pool, gathered via a
+per-sequence block-index map — the kernel-level realization of the serving
+pager's page grain (`serving/kv_pager.py` hands out exactly this layout
+via `KVPager.block_table`).
+
+The block tables and lengths ride the scalar-prefetch channel
+(`pltpu.PrefetchScalarGridSpec`): they are resident in SMEM before the
+kernel body runs, so the K/V BlockSpec index maps can chase
+`bt[b, page_idx]` to DMA each NON-CONTIGUOUS physical page while the
+previous page's flash update is still computing — the same
+fetch-one-page-ahead overlap the prefetch subsystem models at the tier
+level, here done by Mosaic's double-buffered pipeline at the VMEM level.
+
+Grid (B, H, n_logical_pages); the page dimension is sequential
+("arbitrary") so the online-softmax accumulators live in VMEM scratch
+across iterations, exactly like the dense `decode_attention.py` kernel.
+Out-of-length positions are masked by an iota test against `lengths`;
+block-table entries past a sequence's last valid page must still name a
+real physical page (the public wrapper in ops.py clamps them to 0) so the
+gather stays in bounds — the mask keeps them out of the math.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc,
+            *, page: int, scale: float, n_pages: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)            # (D,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = (k @ q) * scale                               # (page,)
+    pos = pi * page + jax.lax.iota(jnp.int32, page)   # logical positions
+    valid = pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_sc[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[0] = l_sc[0] * alpha + p.sum()
+    m_sc[0] = m_new
+    acc[...] = acc[...] * alpha + (p[:, None] * v).sum(axis=0)[None, :]
+
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        o_ref[0, 0, :] = (
+            acc[0] / jnp.maximum(l_sc[0], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                       scale=None, interpret: bool = False):
+    """q (B,H,D) vs paged cache k/v (P_phys, page, KV, D) through
+    block_tables (B, n_logical_pages) int32 physical-page ids; `lengths`
+    (B,) valid token counts. Logical page `i` of sequence `b` holds
+    tokens [i*page, (i+1)*page) and lives at physical page
+    `block_tables[b, i]`. Entries past the valid length must be in
+    [0, P_phys) — use ops.paged_decode_mha, which clamps."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, H, D = q.shape
+    _, page, KV, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block tables + lengths
+        grid=(B, H, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, pi, bt, ln: (b, h, 0)),
+            pl.BlockSpec(
+                (1, page, 1, D),
+                lambda b, h, pi, bt, ln, rep=rep: (bt[b, pi], 0, h // rep,
+                                                   0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, D),
+                lambda b, h, pi, bt, ln, rep=rep: (bt[b, pi], 0, h // rep,
+                                                   0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D),
+                               lambda b, h, pi, bt, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, scale=scale, n_pages=n_pages),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(block_tables, lengths, q, k_pages, v_pages)

@@ -14,6 +14,25 @@ from typing import Optional
 import jax.numpy as jnp
 
 
+def gather_pages(pages: jnp.ndarray, block_tables) -> jnp.ndarray:
+    """Assemble a dense (B, S, KV, D) cache from a physical page pool
+    (P_phys, page, KV, D) through (B, n_logical) block tables — the
+    oracle's view of the paged layout (and the parity test's bridge
+    between `KVPager.block_table` and the dense reference)."""
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    g = pages[block_tables]                 # (B, n_logical, page, KV, D)
+    B, n, page, KV, D = g.shape
+    return g.reshape(B, n * page, KV, D)
+
+
+def paged_decode_mha(q, k_pages, v_pages, block_tables, lengths, *,
+                     scale=None) -> jnp.ndarray:
+    """Paged oracle: gather to dense, then the dense oracle."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return decode_mha(q, k, v, lengths, scale=scale)
+
+
 def decode_mha(
     q: jnp.ndarray,       # (B, H, D) one new token per sequence
     k: jnp.ndarray,       # (B, S, KV, D) cache

@@ -1,75 +1,8 @@
-"""Layer-ahead prefetch of pool-tier (pinned_host) tensors — the TPU
-realization of the paper's §4.2 finding that prefetching is NECESSARY for
-HPC workloads on tiered memory.
+"""Thin re-export shim — the layer-ahead scan prefetch moved into the
+predictive prefetch subsystem as its statically-schedulable corner
+(`repro.prefetch.static`; the `static` predictor scores the same schedule
+through the shared `PrefetchEngine`). Existing imports keep working."""
 
-`scan_with_prefetch` runs a lax.scan over stacked layer params where the
-pool-resident leaves are streamed host->device one layer AHEAD of use
-(double buffer in the scan carry): XLA emits async copy-start/copy-done
-pairs whose transfer overlaps the previous layer's compute, exactly like a
-HW prefetcher hides CXL latency. Accuracy is structurally 100% (the layer
-schedule is static); coverage is min(1, t_layer_compute / t_layer_transfer)
-— reported by benchmarks/bench_prefetch.py.
+from repro.prefetch.static import scan_with_prefetch, to_device
 
-On backends without internal memory-kind transfers (XLA:CPU — see
-runtime/capability.py) the transfer is an identity and the scan reduces to
-a plain lax.scan, so the same code path runs everywhere.
-"""
-
-from __future__ import annotations
-
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-
-from repro.runtime import capability
-
-
-def to_device(x):
-    if capability.supports_internal_transfer():
-        return jax.device_put(x, jax.memory.TransferToMemoryKind("device"))
-    return x
-
-
-def scan_with_prefetch(
-    body: Callable,
-    carry,
-    stacked_params,
-    pool_mask,
-    n_layers: int,
-):
-    """lax.scan over layers with layer-ahead prefetch of pooled leaves.
-
-    body(carry, layer_params) -> (carry, out)
-    pool_mask: pytree of bools matching stacked_params — True leaves are
-    pool-resident and get the double-buffer treatment.
-    """
-
-    def slice_layer(i):
-        return jax.tree.map(
-            lambda p: jax.lax.dynamic_index_in_dim(p, i, 0, keepdims=False),
-            stacked_params,
-        )
-
-    def fetch(layer, i):
-        # transfer pooled leaves of layer i+? to device
-        return jax.tree.map(
-            lambda leaf, pooled: to_device(leaf) if pooled else leaf,
-            layer, pool_mask,
-        )
-
-    first = fetch(slice_layer(0), 0)
-
-    def step(state, i):
-        carry, buf = state
-        # kick off the NEXT layer's transfer before computing this one —
-        # XLA schedules the copy concurrently with body()'s compute
-        nxt = jnp.minimum(i + 1, n_layers - 1)
-        next_buf = fetch(slice_layer(nxt), nxt)
-        carry, out = body(carry, buf)
-        return (carry, next_buf), out
-
-    (carry, _), outs = jax.lax.scan(
-        step, (carry, first), jnp.arange(n_layers)
-    )
-    return carry, outs
+__all__ = ["scan_with_prefetch", "to_device"]

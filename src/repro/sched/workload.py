@@ -157,6 +157,41 @@ def rescale_load(jobs: List[TraceJob], total_slots: int,
     return jobs
 
 
+def serving_stream(
+    n_jobs: int,
+    profile: InterferenceProfile,
+    *,
+    seed: int = 0,
+    arrival_rate: float = 0.05,
+    steps: tuple = (2_000, 20_000),
+    name: Optional[str] = None,
+) -> List[TraceJob]:
+    """Serving instances as simulator jobs — the closed admission<->
+    scheduler loop (ROADMAP): `profile` is the engine's MEASURED
+    interference profile (`ServingEngine.measured_profile()`, per-step
+    pool/local bytes from the pager's exact accounting), so a fleet of
+    co-located serving jobs throttles each other in the simulator by the
+    LoI each one actually injects — not a catalog prior. `steps` is the
+    decode-step count range per instance (long-lived, decode-dominated
+    services); isolated work prices each step at the profile's
+    uncontended step time.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n_jobs))
+    step0 = profile.step_time(0.0)
+    name = name or f"serve/{profile.arch}"
+    return [
+        TraceJob(
+            job_id=i,
+            name=f"{name}#{i}",
+            profile=profile,
+            arrival=float(arrivals[i]),
+            work=int(rng.integers(*steps)) * step0,
+        )
+        for i in range(n_jobs)
+    ]
+
+
 def catalog_stream(
     n_jobs: int,
     *,

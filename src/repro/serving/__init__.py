@@ -18,7 +18,13 @@ Architecture (one module per concern):
                 paper's placement engine (`core.placement`) under the
                 hot/cold decode traffic model shared with the workload
                 catalog (`core.access`). `static` is the first-touch
-                no-paging baseline; `none` the all-local control.
+                no-paging baseline; `none` the all-local control. With
+                `PagerConfig.prefetch` set, cold-prefix page-in is
+                prediction-driven (`repro.prefetch` predictor zoo):
+                staged pool transfers overlap compute, demand page-ins
+                serialize, and `block_table()` exposes the
+                logical->physical page map the paged decode-attention
+                kernel gathers through.
   engine.py   — the event loop over fixed-shape jitted cells built by
                 `runtime.serve.make_engine_cells` (prefill per prompt
                 bucket, one slot-batched greedy decode cell with per-slot

@@ -69,6 +69,11 @@ class EngineConfig:
     pager_policy: str = "hotness"              # hotness | static | none
     hot_window: int = 32
     cold_touch: float = 0.05
+    # prediction-driven page-in (repro.prefetch): None = legacy weighted
+    # accounting, "demand" = discrete demand-paging baseline, else a
+    # predictor name whose staged page-ins overlap compute
+    prefetch: Optional[str] = None
+    prefetch_degree: int = 8
     # --- admission ---
     admission: str = "loi"                     # loi | greedy
     knee_excess: float = 0.75
@@ -161,6 +166,7 @@ class ServeStats:
             "tpot_p50_s": pct(self.tpot, 50),
             "tpot_p99_s": pct(self.tpot, 99),
             "remote_share": self.pager["remote_share"],
+            "demand_share": self.pager.get("demand_share", 0.0),
             "admission_blocks": self.admission_blocks,
             "max_concurrency": self.max_concurrency,
         }
@@ -220,6 +226,8 @@ class ServingEngine:
                 policy=ecfg.pager_policy,
                 hot_window=ecfg.hot_window,
                 cold_touch=ecfg.cold_touch,
+                prefetch=ecfg.prefetch,
+                prefetch_degree=ecfg.prefetch_degree,
             ),
             topo=self.topo,
         )
@@ -236,6 +244,7 @@ class ServingEngine:
         self._active_params = cfg.active_param_count()
         self.steps = 0
         self.virtual_s = 0.0
+        self._t_compute_s = 0.0
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -347,14 +356,19 @@ class ServingEngine:
             / hw.V5E.peak_flops_bf16
         )
         t_local = traffic.local_bytes / self.topo.local.bandwidth
-        t_pool = traffic.pool_bytes / self.topo.pool.bandwidth
-        # pool transfers overlap compute (layer-ahead prefetch of pool
-        # pages, runtime/prefetch.py) -> roofline max, not sum
+        # staged/prefetched pool transfers overlap compute (issued a step
+        # ahead — repro.prefetch; in the legacy weighted mode all pool
+        # traffic is assumed prefetchable) -> roofline max; DEMAND
+        # page-ins stall the step and serialize
+        t_staged = traffic.prefetch_pool_bytes / self.topo.pool.bandwidth
+        t_demand = traffic.demand_pool_bytes / self.topo.pool.bandwidth
+        t_pool = t_staged + t_demand
         dt = float(
-            itf.step_time_vec(t_pool, t_local, t_compute, 0.0)
-        ) + self.ecfg.step_overhead_s
+            itf.step_time_vec(t_staged, t_local, t_compute, 0.0)
+        ) + t_demand + self.ecfg.step_overhead_s
         self.virtual_s += dt
         self.steps += 1
+        self._t_compute_s += t_compute
         self.admission.observe(n_active, t_pool, dt)
 
         self.batcher.advance()
@@ -369,6 +383,31 @@ class ServingEngine:
             if req.done:
                 req.finished = self.virtual_s
                 self._retire(slot)
+
+    # ----------------------------------------------- admission <-> sched
+    def measured_profile(self) -> itf.InterferenceProfile:
+        """The engine's MEASURED interference profile (paper §7.2 closed
+        loop, ROADMAP's admission<->scheduler item): per-step pool/local
+        traffic from the pager's exact byte accounting plus the decode
+        roofline compute time, as an `InterferenceProfile` the rack
+        simulator prices like any other submitted job. Feed it to
+        `sched.workload.serving_stream` so co-located serving instances
+        throttle each other by their OBSERVED injected LoI rather than a
+        catalog prior."""
+        if self.steps == 0:
+            raise RuntimeError(
+                "measured_profile needs at least one decode step — run a "
+                "trace first (the catalog prior covers cold starts)"
+            )
+        c = self.pager.counters()
+        return itf.InterferenceProfile(
+            arch=self.cfg.name,
+            shape="serve_measured",
+            pool_traffic=c["pool_bytes"] / self.steps,
+            local_traffic=c["local_bytes"] / self.steps,
+            t_compute=self._t_compute_s / self.steps,
+            topo=self.topo,
+        )
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request],
@@ -411,14 +450,25 @@ class ServingEngine:
         pager1 = self.pager.counters()
         dlocal = pager1["local_bytes"] - pager0["local_bytes"]
         dpool = pager1["pool_bytes"] - pager0["pool_bytes"]
+        ddemand = (pager1["demand_pool_bytes"]
+                   - pager0["demand_pool_bytes"])
         pager_delta = {
             "steps": pager1["steps"] - pager0["steps"],
             "local_bytes": dlocal,
             "pool_bytes": dpool,
+            "demand_pool_bytes": ddemand,
+            "prefetch_pool_bytes": (pager1["prefetch_pool_bytes"]
+                                    - pager0["prefetch_pool_bytes"]),
             "remote_share": dpool / (dlocal + dpool) if dlocal + dpool
+            else 0.0,
+            "demand_share": ddemand / (dlocal + dpool) if dlocal + dpool
             else 0.0,
             "evictions": pager1["evictions"] - pager0["evictions"],
             "promotions": pager1["promotions"] - pager0["promotions"],
+            "prefetch_issued": (pager1["prefetch_issued"]
+                                - pager0["prefetch_issued"]),
+            "prefetch_useful": (pager1["prefetch_useful"]
+                                - pager0["prefetch_useful"]),
             "local_used": pager1["local_used"],
             "pool_used": pager1["pool_used"],
         }

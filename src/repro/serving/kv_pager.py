@@ -33,9 +33,29 @@ The pager is a *logical* manager plus exact byte accounting, matching the
 rest of the framework: XLA memory kinds are tensor-grain (see
 runtime/capability.py), so physical page moves cannot be expressed on this
 backend — placement is tracked at page grain exactly like the paper tracks
-pages it cannot individually pin either. Pool reads are assumed
-layer-ahead-prefetchable (runtime/prefetch.py), which is why the engine's
-step-time model overlaps pool time with compute instead of serializing it.
+pages it cannot individually pin either. The page grain IS real at the
+kernel level, though: every valid (slot, page) owns a physical page id
+from a shared free list, and `block_table()` emits the logical->physical
+map that `kernels/decode_attention/paged.py` gathers through.
+
+Pool-read accounting has two modes:
+
+* `prefetch=None` (default, the pre-subsystem model): expected-value
+  weighted accounting; all pool reads are ASSUMED layer-ahead
+  prefetchable (`repro.prefetch.static`), so the engine overlaps pool
+  time with compute.
+* `prefetch=<predictor>` (prediction-driven page-in): the cold prefix is
+  touched on a DISCRETE deterministic schedule (mean rate = `cold_touch`)
+  and every pool touch is classified — staged ahead by the predictor
+  (`repro.prefetch.predictors`, overlappable) or a demand page-in (the
+  engine serializes it). `prefetch="demand"` is the null predictor: the
+  demand-paging baseline the paper starts from. The overlap claim is now
+  EARNED per page instead of assumed, and mispredicted stages are excess
+  pool-link traffic (`counters()["prefetch_excess_bytes"]`).
+
+An optional `recorder` (`repro.prefetch.trace.TraceRecorder`) captures
+the discrete page-touch stream for offline predictor scoring in either
+mode.
 """
 
 from __future__ import annotations
@@ -62,18 +82,39 @@ class PagerConfig:
     hot_window: int = DECODE_HOT_WINDOW          # tokens read at full rate
     cold_touch: float = DECODE_COLD_TOUCH        # cold-prefix touch/step
     rebalance_every: int = 1                     # steps between re-places
+    # --- prediction-driven page-in (repro.prefetch) ---
+    prefetch: Optional[str] = None   # predictor name | "demand" | None
+    prefetch_degree: int = 8         # max pages staged ahead per step
 
     def __post_init__(self):
         if self.policy not in ("hotness", "static", "none"):
             raise ValueError(f"unknown pager policy {self.policy!r}")
         if self.page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
+        if self.prefetch is not None and self.prefetch not in (
+                "demand", "next_line", "stride", "stream", "markov"):
+            raise ValueError(
+                f"pager prefetch {self.prefetch!r} must be a stream-"
+                "learnable predictor (or 'demand'); 'static'/'frontier' "
+                "need schedules/hints the pager does not have"
+            )
+
+    @property
+    def cold_period(self) -> int:
+        """Steps between discrete touches of one cold page (mean rate
+        matches the weighted model's `cold_touch`)."""
+        return max(1, int(round(1.0 / max(self.cold_touch, 1e-9))))
 
 
 @dataclasses.dataclass
 class StepTraffic:
     local_bytes: float
     pool_bytes: float
+    # split of pool_bytes under prediction-driven page-in: staged-ahead
+    # transfers overlap compute; demand page-ins serialize. The legacy
+    # weighted mode reports everything as prefetchable (the old model).
+    demand_pool_bytes: float = 0.0
+    prefetch_pool_bytes: float = 0.0
 
     @property
     def total(self) -> float:
@@ -103,12 +144,38 @@ class KVPager:
         self.valid = np.zeros((n_slots, self.n_pages), dtype=bool)
         self.tier = np.full((n_slots, self.n_pages), LOCAL, dtype=np.int8)
         self.lengths = np.zeros(n_slots, dtype=np.int64)
+        # physical page ids: every valid (slot, page) owns one from a
+        # shared LIFO free list — interleaved admissions scatter a slot's
+        # pages through the pool, which is exactly what the paged decode
+        # kernel's block-index map exists for
+        self.phys = np.full((n_slots, self.n_pages), -1, dtype=np.int64)
+        self._free_phys = list(range(n_slots * self.n_pages))
 
         self._steps = 0
         self.total_local_bytes = 0.0
         self.total_pool_bytes = 0.0
+        self.total_demand_pool_bytes = 0.0
+        self.total_prefetch_pool_bytes = 0.0
         self.evictions = 0
         self.promotions = 0
+        self.prefetch_issued = 0
+        self.prefetch_useful = 0
+
+        self.recorder = None          # optional prefetch.trace.TraceRecorder
+        self._predictor = None
+        self._staged: set = set()     # (slot, page) staged ahead, untouched
+        if pcfg.prefetch is not None:
+            from repro.prefetch.predictors import make_predictor
+
+            if pcfg.prefetch == "stream":
+                # one stream region per slot: global page ids are
+                # slot-major, so each slot's cold walk is its own stream
+                self._predictor = make_predictor(
+                    "stream", region_pages=self.n_pages,
+                    max_streams=max(n_slots, 2),
+                )
+            else:
+                self._predictor = make_predictor(pcfg.prefetch)
 
     # ------------------------------------------------------------ budget
     @property
@@ -132,6 +199,8 @@ class KVPager:
         newly = ~self.valid[slot, :upto_page]
         if not newly.any():
             return
+        for p in np.nonzero(newly)[0]:
+            self.phys[slot, p] = self._free_phys.pop()
         if self.cfg.policy == "static":
             # first-come local until the budget fills; permanent thereafter
             for p in np.nonzero(newly)[0]:
@@ -149,18 +218,29 @@ class KVPager:
         """A prefilled request enters `slot` with `length` cached tokens."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
-        self.valid[slot, :] = False
+        self.release(slot)
         self.lengths[slot] = length
         self._alloc_pages(slot, self._page_of(length - 1) + 1)
         if self.cfg.policy == "hotness":
             self.rebalance()
 
     def release(self, slot: int) -> None:
+        for p in np.nonzero(self.valid[slot])[0]:
+            self._free_phys.append(int(self.phys[slot, p]))
+        self.phys[slot, :] = -1
         self.valid[slot, :] = False
         self.lengths[slot] = 0
+        self._staged = {(s, p) for (s, p) in self._staged if s != slot}
 
     def _page_of(self, pos: int) -> int:
         return max(int(pos), 0) // self.cfg.page_tokens
+
+    def block_table(self) -> np.ndarray:
+        """(n_slots, n_pages) logical->physical page map for the paged
+        decode kernel (`kernels.decode_attention.ops.paged_decode_mha`).
+        Invalid entries are 0 — the kernel's length mask keeps them out
+        of the math (ops clamps identically)."""
+        return np.where(self.valid, self.phys, 0).astype(np.int32)
 
     # ------------------------------------------------------ access model
     def _page_weights(self) -> np.ndarray:
@@ -180,14 +260,87 @@ class KVPager:
         w = frac_hot + (1.0 - frac_hot) * self.cfg.cold_touch
         return np.where(self.valid, w, 0.0)
 
+    def _discrete_touches(self, active: np.ndarray) -> list:
+        """Deterministic per-step page-touch list [(slot, page), ...]:
+        hot-tail pages every step, cold-prefix pages on a round-robin of
+        period `cold_period` (page p of any slot is touched at steps
+        where p ≡ step (mod period), so the touched cold set walks +1
+        page per step — the same mean rate as the weighted model, made
+        observable)."""
+        period = self.cfg.cold_period
+        touches = []
+        for s in np.nonzero(active)[0]:
+            length = int(self.lengths[s])
+            if length <= 0:
+                continue
+            last = self._page_of(length - 1)
+            hot_lo = self._page_of(max(length - self.cfg.hot_window, 0))
+            for p in range(hot_lo, last + 1):
+                if self.valid[s, p]:
+                    touches.append((int(s), p, False))
+            for p in range(0, hot_lo):
+                if self.valid[s, p] and (p - self._steps) % period == 0:
+                    touches.append((int(s), p, True))
+        return touches
+
+    def _gid(self, slot: int, page: int) -> int:
+        return slot * self.n_pages + page
+
     def step(self, active: np.ndarray) -> StepTraffic:
         """Account one decode step for the `active` slot mask: reads per
         the traffic model against current page tiers, plus the new token's
         KV write into its (tail) page and the resident state."""
         active = np.asarray(active, dtype=bool)
-        w = self._page_weights() * active[:, None]
-        local_r = float((w * (self.tier == LOCAL)).sum() * self.page_bytes)
-        pool_r = float((w * (self.tier == POOL)).sum() * self.page_bytes)
+        touches = None
+        if self.recorder is not None or self._predictor is not None:
+            touches = self._discrete_touches(active)
+            if self.recorder is not None:
+                self.recorder.record(
+                    self._gid(s, p) for s, p, _ in touches
+                )
+
+        demand_b = staged_b = 0.0
+        if self._predictor is None:
+            # expected-value weighted accounting (the pre-subsystem
+            # model); every pool byte is assumed layer-ahead prefetchable
+            w = self._page_weights() * active[:, None]
+            local_r = float(
+                (w * (self.tier == LOCAL)).sum() * self.page_bytes
+            )
+            pool_r = float(
+                (w * (self.tier == POOL)).sum() * self.page_bytes
+            )
+        else:
+            # discrete prediction-driven paging: each pool touch is a
+            # demand page-in unless the predictor staged it ahead. Only
+            # the COLD walk feeds the predictor — hot-tail touches are
+            # local by placement and move with the tail; they are not
+            # page-in candidates and would only pollute the stream the
+            # predictor must learn.
+            local_r = pool_r = 0.0
+            for s, p, cold in touches:
+                if self.tier[s, p] == LOCAL:
+                    local_r += self.page_bytes
+                elif (s, p) in self._staged:
+                    self._staged.discard((s, p))
+                    self.prefetch_useful += 1
+                    local_r += self.page_bytes   # staged copy: local read
+                else:
+                    demand_b += self.page_bytes
+                if cold:
+                    self._predictor.observe(self._gid(s, p))
+            # stage the predictor's forecast for the NEXT step's touches:
+            # the transfer crosses the pool link now (overlapped with
+            # compute); mispredictions become excess link traffic
+            self._predictor.start_step()
+            for gid in self._predictor.predict(self.cfg.prefetch_degree):
+                s, p = divmod(int(gid), self.n_pages)
+                if (0 <= s < self.n_slots and 0 <= p < self.n_pages
+                        and self.valid[s, p] and self.tier[s, p] == POOL
+                        and (s, p) not in self._staged):
+                    self._staged.add((s, p))
+                    self.prefetch_issued += 1
+                    staged_b += self.page_bytes
 
         # one token of KV written at the tail of each active slot
         wr_local = wr_pool = 0.0
@@ -202,7 +355,7 @@ class KVPager:
                     wr_local += self.bytes_per_token
                 self.lengths[s] += 1
         local_b = local_r + wr_local + self.resident_bytes * active.sum()
-        pool_b = pool_r + wr_pool
+        pool_b = pool_r + wr_pool + demand_b + staged_b
 
         self._steps += 1
         if (self.cfg.policy == "hotness"
@@ -211,7 +364,15 @@ class KVPager:
 
         self.total_local_bytes += local_b
         self.total_pool_bytes += pool_b
-        return StepTraffic(local_b, pool_b)
+        if self._predictor is None:
+            # legacy overlap assumption: all pool traffic prefetchable
+            demand, staged = 0.0, pool_b
+        else:
+            demand = demand_b + wr_pool
+            staged = staged_b
+        self.total_demand_pool_bytes += demand
+        self.total_prefetch_pool_bytes += staged
+        return StepTraffic(local_b, pool_b, demand, staged)
 
     # --------------------------------------------------------- placement
     def rebalance(self) -> None:
@@ -245,6 +406,12 @@ class KVPager:
         moved = (before != self.tier) & self.valid
         self.evictions += int((moved & (self.tier == POOL)).sum())
         self.promotions += int((moved & (self.tier == LOCAL)).sum())
+        if self._staged:
+            # a staged copy whose page got promoted (or freed) is moot
+            self._staged = {
+                (s, p) for (s, p) in self._staged
+                if self.valid[s, p] and self.tier[s, p] == POOL
+            }
 
     # ----------------------------------------------------------- metrics
     def remote_share(self) -> float:
@@ -253,14 +420,30 @@ class KVPager:
         total = self.total_local_bytes + self.total_pool_bytes
         return self.total_pool_bytes / total if total else 0.0
 
+    def demand_share(self) -> float:
+        """Share of cumulative traffic that STALLS on the pool tier
+        (demand page-ins; staged transfers overlap compute). Prediction-
+        driven page-in must push this down vs the 'demand' baseline."""
+        total = self.total_local_bytes + self.total_pool_bytes
+        return self.total_demand_pool_bytes / total if total else 0.0
+
     def counters(self) -> dict:
         return {
             "steps": self._steps,
             "local_bytes": self.total_local_bytes,
             "pool_bytes": self.total_pool_bytes,
+            "demand_pool_bytes": self.total_demand_pool_bytes,
+            "prefetch_pool_bytes": self.total_prefetch_pool_bytes,
             "remote_share": self.remote_share(),
+            "demand_share": self.demand_share(),
             "evictions": self.evictions,
             "promotions": self.promotions,
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_useful": self.prefetch_useful,
+            "prefetch_excess_bytes": (
+                (self.prefetch_issued - self.prefetch_useful)
+                * self.page_bytes
+            ),
             "local_used": self.local_bytes_used(),
             "pool_used": self.pool_bytes_used(),
         }

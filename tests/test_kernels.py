@@ -6,8 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.decode_attention import ops as dops
 from repro.kernels.decode_attention import ref as dref
 from repro.kernels.decode_attention.decode_attention import flash_decode
+from repro.kernels.decode_attention.paged import paged_flash_decode
 from repro.kernels.flash_attention import ref as fref
 from repro.kernels.flash_attention.chunked import mha_chunked
 from repro.kernels.flash_attention.flash_attention import flash_mha
@@ -135,6 +137,124 @@ def test_decode_ragged_lengths():
     r = dref.decode_mha(q, k, v, length)
     p = flash_decode(q, k, v, length, interpret=True, block_k=64)
     np.testing.assert_allclose(np.asarray(p), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ----------------------------------------------- paged decode attention
+def _paged_layout(k, v, page, seed=0, extra_phys=3):
+    """Scatter a dense (B,S,KV,D) cache into a permuted physical page
+    pool + block tables (non-contiguous, interleaved physical order)."""
+    B, S, KV, D = k.shape
+    n_log = S // page
+    n_phys = B * n_log + extra_phys          # a few never-mapped pages
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_phys)[: B * n_log]
+    bt = perm.reshape(B, n_log).astype(np.int32)
+    kp = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(99), (n_phys, page, KV, D))
+    ).astype(np.asarray(k).dtype)            # garbage in unmapped pages
+    vp = kp.copy()
+    kr = np.asarray(k).reshape(B, n_log, page, KV, D)
+    vr = np.asarray(v).reshape(B, n_log, page, KV, D)
+    for b in range(B):
+        for i in range(n_log):
+            kp[bt[b, i]] = kr[b, i]
+            vp[bt[b, i]] = vr[b, i]
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("page", [16, 64, 128])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,dtype",
+    [
+        (2, 512, 8, 2, 64, jnp.float32),
+        (1, 256, 4, 4, 128, jnp.float32),
+        (2, 512, 8, 2, 64, jnp.bfloat16),
+    ],
+)
+def test_paged_decode_matches_dense_ref(page, B, S, H, KV, D, dtype):
+    """Acceptance: the paged kernel == the dense oracle token-for-token
+    across page sizes {16, 64, 128} with scattered physical pages and
+    ragged lengths."""
+    ks = jax.random.split(jax.random.PRNGKey(S + D + page), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    k = _rand(ks[1], (B, S, KV, D), dtype)
+    v = _rand(ks[2], (B, S, KV, D), dtype)
+    lengths = jnp.array([(S // 2 + 17 * i) % S + 1 for i in range(B)],
+                        jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, page, seed=page)
+    r = dref.decode_mha(q, k, v, lengths)
+    p = paged_flash_decode(q, kp, vp, bt, lengths, interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(p, np.float32), np.asarray(r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_paged_ops_clamps_dead_table_entries():
+    """ops.paged_decode_mha must tolerate garbage block-table entries
+    past the valid length (the pager's freed/unallocated slots)."""
+    B, S, H, KV, D, page = 2, 256, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    lengths = jnp.array([40, 200], jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, page)
+    bt = np.asarray(bt).copy()
+    n_phys = kp.shape[0]
+    live = np.arange(bt.shape[1])[None, :] * page < np.asarray(lengths)[:, None]
+    bt[~live] = n_phys + 10_000              # out-of-bounds garbage
+    r = dref.decode_mha(q, k, v, lengths)
+    for impl in ("reference", "interpret"):
+        out = dops.paged_decode_mha(q, kp, vp, jnp.asarray(bt), lengths,
+                                    impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_reads_kv_pager_block_table():
+    """The pager's page grain is real at the kernel level: admit
+    interleaved requests into a KVPager, lay K/V out physically by its
+    block_table(), and the paged kernel must reproduce the dense oracle
+    token-for-token."""
+    from repro.serving.kv_pager import KVPager, PagerConfig
+
+    B, H, KV, D, page_tokens = 3, 4, 2, 64, 16
+    max_seq = 128
+    pager = KVPager(
+        B, max_seq, bytes_per_token=2.0 * KV * D * 2, resident_bytes=0.0,
+        pcfg=PagerConfig(page_tokens=page_tokens, policy="none"),
+    )
+    # interleaved admits/releases scatter physical pages across slots
+    pager.admit(0, 64)
+    pager.admit(1, 128)
+    pager.release(0)
+    pager.admit(0, 96)
+    pager.admit(2, 48)
+    lengths = jnp.asarray(pager.lengths, jnp.int32)
+    bt = pager.block_table()
+    assert bt.shape == (B, max_seq // page_tokens)
+    mapped = bt[pager.valid]
+    assert len(set(mapped)) == len(mapped)    # no phys page shared
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, max_seq, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, max_seq, KV, D), jnp.float32)
+    n_phys = B * (max_seq // page_tokens)
+    kp = np.zeros((n_phys, page_tokens, KV, D), np.float32)
+    vp = np.zeros_like(kp)
+    kr = np.asarray(k).reshape(B, -1, page_tokens, KV, D)
+    vr = np.asarray(v).reshape(B, -1, page_tokens, KV, D)
+    for s, p in zip(*np.nonzero(pager.valid)):
+        kp[bt[s, p]] = kr[s, p]
+        vp[bt[s, p]] = vr[s, p]
+    r = dref.decode_mha(q, k, v, lengths)
+    out = dops.paged_decode_mha(q, jnp.asarray(kp), jnp.asarray(vp),
+                                jnp.asarray(bt), lengths, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-5,
                                atol=2e-5)
 
 

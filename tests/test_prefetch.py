@@ -1,0 +1,261 @@
+"""Predictive prefetch subsystem: predictor zoo unit tests on synthetic
+and adversarial streams, engine metric invariants, trace capture from all
+three sources, and the BFS case-study acceptance number (slow-marked)."""
+
+import numpy as np
+import pytest
+
+from repro.prefetch import (
+    AccessTrace,
+    PrefetchConfig,
+    PrefetchEngine,
+    TraceRecorder,
+    bfs_trace,
+    evaluate_zoo,
+    kv_pager_trace,
+    make_predictor,
+    remote_reduction,
+    sched_pool_trace,
+)
+from repro.prefetch.predictors import StaticSchedulePredictor
+
+
+def _trace(steps, n_pages=1 << 20, hints=None, page_bytes=4096.0):
+    return AccessTrace("t", "test", page_bytes, n_pages, steps,
+                       hints=hints).validate()
+
+
+def _run(steps, predictor, local=64, bw=16, degree=8, hints=None,
+         n_pages=1 << 20):
+    eng = PrefetchEngine(PrefetchConfig(local_pages=local,
+                                        bw_pages_per_step=bw,
+                                        degree=degree))
+    return eng.run(_trace(steps, n_pages, hints), predictor)
+
+
+# ----------------------------------------------------------- predictors
+def test_stride_predictor_nails_constant_stride():
+    steps = [[100 + 3 * i] for i in range(64)]
+    r = _run(steps, make_predictor("stride"))
+    # only the end-of-trace in-flight tail counts against accuracy
+    assert r.accuracy > 0.85
+    assert r.timeliness == pytest.approx(1.0)
+    assert r.excess < 0.15
+    # every touch after the confirmation window is covered
+    assert r.demand_misses <= 4
+    assert r.coverage > 0.9
+
+
+def test_next_line_on_sequential_and_strided():
+    seq = [[i] for i in range(64)]
+    assert _run(seq, make_predictor("next_line")).coverage > 0.9
+    strided = [[5 * i] for i in range(64)]
+    # +1 prediction never hits a stride-5 stream with degree 4
+    r = _run(strided, make_predictor("next_line"), degree=4)
+    assert r.coverage == 0.0
+    assert r.excess == pytest.approx(1.0)
+
+
+def test_stream_predictor_untangles_interleaved_streams():
+    # two interleaved sequential walks in distant regions
+    steps = [[i, 1_000_000 + 2 * i] for i in range(64)]
+    r = _run(steps, make_predictor("stream"))
+    assert r.coverage > 0.85
+    # a single-PC stride predictor sees alternating deltas and stalls
+    assert _run(steps, make_predictor("stride")).coverage < 0.5
+
+
+def test_markov_predictor_learns_repeating_cycle():
+    # cycle longer than the local cache, so correlation (not residency)
+    # must cover the touches; no positional pattern for stride to find
+    cycle = [7, 3, 11, 5, 2, 19, 13, 31, 23, 41, 37, 29]
+    steps = [[cycle[i % len(cycle)]] for i in range(120)]
+    r = _run(steps, make_predictor("markov"), local=4, degree=2)
+    assert r.accuracy > 0.9
+    assert r.coverage > 0.8
+    assert _run(steps, make_predictor("stride"), local=4).coverage == 0.0
+
+
+def test_adversarial_random_stream_defeats_learned_predictors():
+    rng = np.random.default_rng(0)
+    steps = [[int(p)] for p in rng.integers(0, 1 << 16, 256)]
+    for name in ("next_line", "stride", "stream", "markov"):
+        r = _run(steps, make_predictor(name), local=16)
+        assert r.coverage < 0.1, name
+    # ... while the schedule-oracle static predictor still covers
+    p = StaticSchedulePredictor([s for s in steps])
+    r = _run(steps, p, local=16)
+    assert r.accuracy == pytest.approx(1.0)
+    assert r.coverage > 0.95
+
+
+def test_static_predictor_accuracy_one_on_layer_stream():
+    """The subsumed runtime/prefetch.py case: schedule fully known."""
+    from repro.prefetch.static import layer_stream_trace
+
+    t = layer_stream_trace(8, 4, epochs=3)
+    eng = PrefetchEngine(PrefetchConfig(local_pages=8, bw_pages_per_step=8,
+                                        degree=4))
+    r = eng.run(t, make_predictor("static", schedule=t.steps))
+    assert r.accuracy == pytest.approx(1.0)
+    assert r.excess == pytest.approx(0.0)
+    assert r.timeliness == pytest.approx(1.0)
+    base = eng.run(t, make_predictor("demand"))
+    assert r.remote_accesses < base.remote_accesses
+
+
+def test_frontier_predictor_uses_hints_only():
+    rng = np.random.default_rng(1)
+    steps = [[int(p) for p in rng.integers(0, 4096, 4)] for _ in range(50)]
+    hints = steps[1:] + [[]]
+    with_h = _run(steps, make_predictor("frontier"), hints=hints,
+                  n_pages=4096, local=32, bw=16, degree=8)
+    assert with_h.accuracy == pytest.approx(1.0)
+    assert with_h.coverage > 0.8
+    no_h = _run(steps, make_predictor("frontier"), n_pages=4096, local=32)
+    assert no_h.issued == 0
+
+
+def test_make_predictor_unknown_name():
+    with pytest.raises(ValueError):
+        make_predictor("oracle9000")
+
+
+# -------------------------------------------------------------- engine
+def test_engine_metric_invariants():
+    t = sched_pool_trace(3, steps=80, pages_per_job=64)
+    cfg = PrefetchConfig(local_pages=24, bw_pages_per_step=8, degree=8)
+    for r in evaluate_zoo(t, cfg):
+        assert 0.0 <= r.accuracy <= 1.0
+        assert 0.0 <= r.coverage <= 1.0
+        assert 0.0 <= r.excess <= 1.0
+        assert r.useful + r.late <= r.issued
+        assert r.local_hits + r.demand_misses + r.late == t.touches
+        assert r.remote_accesses <= t.touches
+        assert r.total_time >= cfg.t_compute * t.n_steps
+
+
+def test_engine_bandwidth_cap_limits_prefetch():
+    # 4 new pages per step: a link that only fits the demand stream
+    # leaves NO headroom to prefetch; a wider link covers everything
+    steps = [[4 * i + j for j in range(4)] for i in range(32)]
+    tight = _run(steps, make_predictor("next_line"), bw=4, degree=8)
+    loose = _run(steps, make_predictor("next_line"), bw=12, degree=8)
+    assert tight.issued == 0
+    assert loose.issued > 0 and loose.coverage > 0.8
+    # demand always gets link priority: the stream still completes
+    assert tight.local_hits + tight.demand_misses + tight.late == 128
+
+
+def test_pool_latency_makes_shallow_prefetch_late():
+    """timeliness: at latency_steps=2 a depth-1 predictor is always
+    correct but always late (touch stalls, transfer deduped), while a
+    deep-degree predictor runs far enough ahead to stay in time."""
+    steps = [[i] for i in range(64)]
+    eng = PrefetchEngine(PrefetchConfig(local_pages=64,
+                                        bw_pages_per_step=16, degree=1,
+                                        latency_steps=2))
+    shallow = eng.run(_trace(steps), make_predictor("next_line"))
+    assert shallow.late > 0 and shallow.useful == 0
+    assert shallow.accuracy > 0.95      # only the end-of-trace in-flight
+    # page counts against it
+    assert shallow.timeliness == 0.0
+    assert shallow.coverage == 0.0
+    # late prefetches still stall: remote accesses match demand paging
+    base = eng.run(_trace(steps), make_predictor("demand"))
+    assert shallow.remote_accesses == base.remote_accesses
+    deep = PrefetchEngine(
+        PrefetchConfig(local_pages=64, bw_pages_per_step=16, degree=8,
+                       latency_steps=2)
+    ).run(_trace(steps), make_predictor("next_line"))
+    assert deep.timeliness > 0.9
+    assert deep.coverage > 0.9
+    assert deep.remote_accesses < shallow.remote_accesses
+
+
+def test_demand_baseline_never_prefetches():
+    t = kv_pager_trace(steps=32)
+    r = PrefetchEngine(PrefetchConfig(16, 8)).run(
+        t, make_predictor("demand")
+    )
+    assert r.issued == 0 and r.accuracy == 0.0
+
+
+# ------------------------------------------------------ trace capture
+def test_kv_pager_trace_shape_and_determinism():
+    a = kv_pager_trace(steps=48)
+    b = kv_pager_trace(steps=48)
+    assert a.steps == b.steps
+    assert a.n_steps == 48
+    assert a.source == "serving"
+    assert all(0 <= p < a.n_pages for s in a.steps for p in s)
+
+
+def test_trace_recorder_roundtrip():
+    rec = TraceRecorder()
+    rec.record([1, 2])
+    rec.record([])
+    rec.record(iter([3]))
+    t = rec.to_trace("x", "test", 128.0, 8)
+    assert t.steps == [[1, 2], [], [3]]
+    rec.record([99])                       # out of the 8-page space
+    with pytest.raises(ValueError):
+        rec.to_trace("x", "test", 128.0, 8)
+
+
+def test_sched_pool_trace_streams_are_sequential_per_job():
+    t = sched_pool_trace(2, steps=50, pages_per_job=64, seed=3)
+    per_job = {0: [], 1: []}
+    for s in t.steps:
+        for p in s:
+            per_job[p // 64].append(p % 64)
+    for j, pages in per_job.items():
+        assert pages, f"job {j} silent"
+        deltas = np.diff(pages)
+        # sequential scan with wraparound only
+        assert set(np.unique(deltas)) <= {1, 1 - 64}
+
+
+def test_bfs_trace_hints_are_next_step():
+    b = bfs_trace(n_vertices=512, avg_degree=8, page_bytes=256, chunk=16)
+    t = b.trace
+    assert t.hints is not None
+    assert t.hints[:-1] == t.steps[1:]
+    assert t.hints[-1] == []
+    assert sum(len(lv) for lv in b.levels) <= b.n_vertices
+
+
+# ----------------------------------------------- BFS case study (§7.1)
+@pytest.mark.slow
+def test_bfs_frontier_prefetch_cuts_remote_access_40pct():
+    """The paper's headline: application-directed (frontier) prefetch
+    must cut remote accesses >= 40% vs demand paging at matched pool
+    bandwidth (paper measures ~50%; the engine is idealized so we gate
+    at the acceptance floor with slack)."""
+    b = bfs_trace(n_vertices=8192, avg_degree=16, page_bytes=1024,
+                  chunk=32)
+    t = b.trace
+    cfg = PrefetchConfig(local_pages=max(8, t.n_pages // 16),
+                         bw_pages_per_step=40, degree=40)
+    reports = evaluate_zoo(
+        t, cfg, predictors=["demand", "next_line", "stream", "frontier"]
+    )
+    red = remote_reduction(reports, "frontier")
+    assert red >= 0.40, f"frontier reduction {red:.2f} < 0.40"
+    # and it is the APPLICATION knowledge doing it: HW-style predictors
+    # stay far below the acceptance bar on the irregular frontier walk
+    assert remote_reduction(reports, "next_line") < 0.20
+    assert remote_reduction(reports, "stream") < 0.20
+    # speedup comes with the reduction (paper: ~13%)
+    base = next(r for r in reports if r.predictor == "demand")
+    front = next(r for r in reports if r.predictor == "frontier")
+    assert front.total_time < base.total_time
+
+
+def test_excess_feedback_inflates_pool_traffic():
+    from repro.core.access import TensorAccess, with_prefetch_excess
+
+    prof = [TensorAccess("x", 1000, 1.0, "param")]
+    out = with_prefetch_excess(prof, 500.0)
+    assert sum(a.traffic for a in out) == 1500
+    assert with_prefetch_excess(prof, 0.0) == prof
