@@ -2,7 +2,7 @@
 
 The paper's §4.2 finding — prefetching is *necessary* for HPC workloads on
 tiered memory — shows up twice in this framework: (a) layer-ahead prefetch of
-pool-tier params (runtime/prefetch.py) and (b) this input pipeline, which
+pool-tier params (prefetch/static.py) and (b) this input pipeline, which
 keeps `depth` batches in flight on a background thread so host->device
 transfer overlaps the previous step's compute.
 

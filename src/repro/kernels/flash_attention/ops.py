@@ -1,4 +1,5 @@
-"""Public attention op. Dispatches pallas / interpret / reference."""
+"""Public attention ops (dense prefill + paged chunked prefill).
+Dispatches pallas / interpret / reference."""
 
 from __future__ import annotations
 
@@ -6,6 +7,7 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.flash_attention import ref
@@ -45,5 +47,46 @@ def mha(
         causal=causal,
         scale=scale,
         kv_offset=kv_offset,
+        interpret=(impl == "interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_prefill_mha(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    c0,
+    *,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """Chunked prefill vs a PAGED cache: q (B, C, H, D) — C prompt tokens
+    at absolute positions [c0, c0+C) — against k/v (P_phys, page, KV, D)
+    physical page pool + (B, n_logical) block tables (`KVPager.
+    block_table` layout), causal. The chunk's own K/V must already be
+    written into the pool (see `models.attention.paged_chunk_insert`).
+    `c0` (B,) may be traced. Block-table entries above the causal
+    frontier are clamped to physical page 0 so the gather stays in
+    bounds on every backend; the causal mask keeps them out of the
+    math."""
+    B, C = q.shape[0], q.shape[1]
+    n_pages = block_tables.shape[1]
+    page = k_pages.shape[1]
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    live = (
+        jnp.arange(n_pages, dtype=jnp.int32)[None, :] * page
+        < (c0 + C)[:, None]
+    )
+    block_tables = jnp.where(live, jnp.asarray(block_tables, jnp.int32), 0)
+    impl = impl or kernels.backend()
+    if impl == "reference":
+        return ref.paged_prefill_mha(q, k_pages, v_pages, block_tables,
+                                     c0, scale=scale)
+    from repro.kernels.flash_attention import paged_prefill as pp
+
+    return pp.paged_prefill_flash(
+        q, k_pages, v_pages, block_tables, c0, scale=scale,
         interpret=(impl == "interpret"),
     )

@@ -1,0 +1,141 @@
+"""Paged chunked-prefill Pallas kernel: a fixed-size chunk of C prompt
+tokens attends causally to everything already written to a KV cache laid
+out as a physical page pool, gathered per logical page through a
+per-sequence block table — the prefill-side twin of
+`kernels/decode_attention/paged.py`, and the kernel the serving engine's
+chunked prefill rides so a long prompt never serializes against in-flight
+decode for more than one chunk.
+
+The block tables and the chunk's start position ride the scalar-prefetch
+channel (`pltpu.PrefetchScalarGridSpec`): both are resident in SMEM before
+the body runs, so the K/V BlockSpec index maps chase `bt[b, pi]` to DMA
+each NON-CONTIGUOUS physical page while the previous page's flash update
+is still computing. The chunk offset `c0` is a runtime scalar, not a
+Python constant, so every chunk of every request reuses ONE compiled
+kernel — the engine's no-recompile contract extends to chunked prefill.
+
+Grid (B, H, n_logical_pages); the page dimension is sequential
+("arbitrary") so the (C, D) online-softmax accumulators live in VMEM
+scratch across pages. Pages entirely above the causal frontier
+(`page_start > c0 + C - 1`) are skipped via `pl.when` — the same
+fully-masked-tile elision the dense flash kernel does for the causal
+upper triangle. The chunk's own K/V must already be in the pool (the
+paged cache-write path in `models/attention.py` scatters it through the
+block table before calling this), so queries attend to their own chunk
+through the same gather as the prefix — one code path, no concat.
+Block-table entries past the frontier must still name a real physical
+page (ops.py clamps them to 0); the causal mask keeps them out of the
+math.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, c0_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
+            page: int, chunk: int, scale: float, n_pages: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    c0 = c0_ref[b]
+    needed = pi * page <= c0 + chunk - 1        # page below causal frontier
+
+    @pl.when(needed)
+    def _tile():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (C, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (C, page)
+        qpos = c0 + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+        kpos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, (chunk, page), 1
+        )
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l_sc[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_flash(q, k_pages, v_pages, block_tables, c0, *,
+                        scale=None, interpret: bool = False):
+    """q (B, C, H, D) — chunk of C prompt tokens at absolute positions
+    [c0[b], c0[b]+C) — vs paged cache k/v (P_phys, page, KV, D) through
+    block_tables (B, n_logical_pages) int32 physical-page ids; `c0` (B,)
+    int32 chunk starts. Causal: query i attends to positions <= c0+i.
+    The chunk's own K/V must already be written into the pool. Entries
+    past the causal frontier must be in [0, P_phys) — use
+    ops.paged_prefill_mha, which clamps."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, C, H, D = q.shape
+    _, page, KV, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block tables + c0
+        grid=(B, H, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, D), lambda b, h, pi, bt, c0: (b, 0, h, 0)),
+            pl.BlockSpec(
+                (1, page, 1, D),
+                lambda b, h, pi, bt, c0, rep=rep: (bt[b, pi], 0, h // rep,
+                                                   0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, D),
+                lambda b, h, pi, bt, c0, rep=rep: (bt[b, pi], 0, h // rep,
+                                                   0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, D),
+                               lambda b, h, pi, bt, c0: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, D), jnp.float32),
+            pltpu.VMEM((C, 1), jnp.float32),
+            pltpu.VMEM((C, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, chunk=C, scale=scale,
+                          n_pages=n_pages),
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(block_tables, c0, q, k_pages, v_pages)

@@ -1,10 +1,12 @@
-"""Pure-jnp oracle for blocked causal GQA attention."""
+"""Pure-jnp oracle for blocked causal GQA attention (dense and paged)."""
 
 from __future__ import annotations
 
 from typing import Optional
 
 import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import gather_pages
 
 
 def mha(
@@ -34,6 +36,35 @@ def mha(
         kpos = jnp.arange(Skv)[None, :]
         mask = qpos >= kpos
         logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_prefill_mha(q, k_pages, v_pages, block_tables, c0, *,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged chunked-prefill oracle: gather the page pool to a dense
+    cache, then causal attention of the chunk q (B, C, H, D) at absolute
+    positions [c0[b], c0[b]+C) against it. `c0` may be traced (the chunk
+    offset is a runtime scalar in the serving engine), so the causal mask
+    is built per batch row instead of through `mha`'s static kv_offset."""
+    B, C, H, D = q.shape
+    k = gather_pages(k_pages, block_tables)        # (B, Skv, KV, D)
+    v = gather_pages(v_pages, block_tables)
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+
+    kq = jnp.repeat(k, rep, axis=2)
+    vq = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) * scale
+    qpos = c0[:, None] + jnp.arange(C)[None, :]            # (B, C)
+    mask = qpos[:, :, None] >= jnp.arange(Skv)[None, None, :]
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
     probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
     probs = probs / probs.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq.astype(jnp.float32))

@@ -63,6 +63,13 @@ def main(argv=None):
                     help="0 = match --batch (one-shot) / 4 (scenario)")
     ap.add_argument("--pager", default="hotness",
                     choices=["hotness", "static", "none"])
+    ap.add_argument("--contiguous", action="store_true",
+                    help="per-slot contiguous caches instead of the "
+                    "paged physical page pool (the pre-PR-4 layout)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="interleave prompt chunks of this many tokens "
+                    "with decode steps (paged, attention-only archs; "
+                    "0 = serialized whole-prompt prefill)")
     ap.add_argument("--local-budget", type=float, default=0.5,
                     help="local-tier budget as a fraction of peak KV bytes")
     ap.add_argument("--admission", default="loi",
@@ -101,11 +108,32 @@ def main(argv=None):
             args.seed,
         )
 
+    page_tokens = max(8, max_seq // 16)
+    if args.prefill_chunk and args.contiguous:
+        ap.error("--prefill-chunk needs the paged layout; drop "
+                 "--contiguous")
+    if args.prefill_chunk:
+        # chunks scatter whole pages through the block table: pin the
+        # page grain to 8 (every bucket is a multiple) and round the
+        # chunk up to whole pages
+        page_tokens = 8
+        args.prefill_chunk = -(-args.prefill_chunk // page_tokens) \
+            * page_tokens
+        bad = [b for b in buckets if b % args.prefill_chunk]
+        if bad:
+            ap.error(
+                f"--prefill-chunk {args.prefill_chunk} (page-rounded) "
+                f"must divide every prompt bucket {tuple(buckets)}; "
+                f"try one of "
+                f"{sorted({c for c in (8, 16, 32, 64) if not any(b % c for b in buckets)})}"
+            )
     ecfg = EngineConfig(
         n_slots=n_slots,
         max_seq=max_seq,
         prefill_buckets=buckets,
-        page_tokens=max(8, max_seq // 16),
+        paged=not args.contiguous,
+        prefill_chunk=args.prefill_chunk or None,
+        page_tokens=page_tokens,
         local_budget_frac=args.local_budget,
         pager_policy=args.pager,
         hot_window=max(16, max_seq // 4),
@@ -124,7 +152,8 @@ def main(argv=None):
     )
     print(
         f"latency: ttft_p50={s['ttft_p50_s']:.2e}s "
-        f"tpot_p50={s['tpot_p50_s']:.2e}s tpot_p99={s['tpot_p99_s']:.2e}s"
+        f"tpot_p50={s['tpot_p50_s']:.2e}s tpot_p99={s['tpot_p99_s']:.2e}s "
+        f"stall_p95={s['stall_p95_s']:.2e}s"
     )
     print(
         f"tiering[{args.pager}]: remote_share={s['remote_share']:.3f} "

@@ -186,6 +186,105 @@ def encode_cross_kv(params, enc_out, cfg: ModelConfig):
     return k, v
 
 
+# ------------------------------------------------------- paged KV cache
+def paged_cache_insert(pool, new, t, block_table, page_tokens: int):
+    """Write one token of K or V per slot into a PHYSICAL page pool.
+
+    pool (P_phys, page, KV, hd); new (B, 1, KV, hd); t scalar or (B,)
+    absolute position(s); block_table (B, n_pages) logical->physical page
+    map (`KVPager.block_table` layout). The write lands at
+    pool[bt[b, t//page], t%page]. Positions past the table (parked slots)
+    scatter out of bounds and DROP — the paged twin of `_cache_insert`'s
+    masked no-op. Physical pages are uniquely owned, so the scatter never
+    collides."""
+    B = new.shape[0]
+    n_pages = block_table.shape[1]
+    t = jnp.asarray(t)
+    t_vec = (t if t.ndim else jnp.full((B,), t)).astype(jnp.int32)
+    pidx = t_vec // page_tokens
+    off = t_vec % page_tokens
+    in_range = pidx < n_pages
+    phys = jnp.take_along_axis(
+        block_table, jnp.clip(pidx, 0, n_pages - 1)[:, None], axis=1
+    )[:, 0]
+    phys = jnp.where(in_range, phys, pool.shape[0])   # OOB -> dropped
+    return pool.at[phys, off].set(new[:, 0].astype(pool.dtype),
+                                  mode="drop")
+
+
+def paged_chunk_insert(pool, new, c0, block_row, page_tokens: int):
+    """Write a page-aligned CHUNK of K or V through the block table.
+
+    pool (P_phys, page, KV, hd); new (1, C, KV, hd) with C a multiple of
+    `page_tokens`; c0 (traced) chunk start, also page-aligned; block_row
+    (1, n_pages) the prefilling slot's block-table row. Whole pages are
+    scattered at once — the chunked-prefill fast path."""
+    _, C, KV, hd = new.shape
+    n_wp = C // page_tokens
+    p0 = jnp.asarray(c0, jnp.int32) // page_tokens
+    phys = jax.lax.dynamic_slice(block_row, (jnp.int32(0), p0),
+                                 (1, n_wp))[0]        # (n_wp,)
+    tiles = new[0].reshape(n_wp, page_tokens, KV, hd)
+    return pool.at[phys].set(tiles.astype(pool.dtype))
+
+
+def paged_decode_self_attention(
+    params,
+    x,                      # (B, 1, d) the new token
+    cfg: ModelConfig,
+    k_pool,                 # (P_phys, page, KV, hd) physical page pool
+    v_pool,
+    t,                      # scalar or (B,): current position(s)
+    block_table,            # (B, n_pages) int32
+    page_tokens: int,
+    rope: bool = True,
+):
+    """Single-token decode against the paged cache: insert new KV through
+    the block table, gather-attend via the paged decode kernel. Same
+    contract as `decode_self_attention` — per-slot `t`, parked positions
+    write nothing — but the cache IS the physical page pool the serving
+    pager allocates from, so tier placement is real at the data layout."""
+    B = x.shape[0]
+    t = jnp.asarray(t)
+    t_vec = t if t.ndim else jnp.full((B,), t)
+    positions = t_vec[:, None]
+    q, k, v = _qkv(params, x, cfg, positions, rope)
+    k_pool = paged_cache_insert(k_pool, k, t_vec, block_table, page_tokens)
+    v_pool = paged_cache_insert(v_pool, v, t_vec, block_table, page_tokens)
+    out = decode_ops.paged_decode_mha(
+        q[:, 0], k_pool, v_pool, block_table, t_vec + 1
+    )
+    out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x.dtype))
+    return out[:, None, :], (k_pool, v_pool)
+
+
+def paged_prefill_chunk_attention(
+    params,
+    x,                      # (1, C, d) one chunk of one request's prompt
+    cfg: ModelConfig,
+    k_pool,
+    v_pool,
+    c0,                     # (traced) absolute position of the chunk start
+    block_row,              # (1, n_pages) the slot's block-table row
+    page_tokens: int,
+    rope: bool = True,
+):
+    """One prompt chunk against the paged cache: write the chunk's KV
+    through the block table, then causal flash attention over everything
+    prefilled so far (previous chunks + this one) via the paged-prefill
+    kernel. C and c0 must be page-aligned (the engine enforces
+    `prefill_chunk % page_tokens == 0`)."""
+    B, C, _ = x.shape
+    c0 = jnp.asarray(c0, jnp.int32)
+    positions = c0 + jnp.broadcast_to(jnp.arange(C)[None, :], (B, C))
+    q, k, v = _qkv(params, x, cfg, positions, rope)
+    k_pool = paged_chunk_insert(k_pool, k, c0, block_row, page_tokens)
+    v_pool = paged_chunk_insert(v_pool, v, c0, block_row, page_tokens)
+    out = flash_ops.paged_prefill_mha(q, k_pool, v_pool, block_row, c0)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, (k_pool, v_pool)
+
+
 def decode_cross_attention(params, x, cross_kv, cfg: ModelConfig):
     """Decode-time cross-attention against the fixed encoder K/V."""
     dt = x.dtype

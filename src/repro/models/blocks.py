@@ -142,8 +142,11 @@ def stack_apply(params, x, cfg: ModelConfig, ctx: ParallelCtx,
 
 # --------------------------------------------------------------- caches
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
-                cross: bool = False, enc_len: int = 0):
-    """Decode caches, mirroring the stacked-params structure."""
+                cross: bool = False, enc_len: int = 0, kv_shape=None):
+    """Decode caches, mirroring the stacked-params structure. `kv_shape`
+    overrides the self-attention K/V leaf shape (the paged pool layout —
+    see `init_paged_caches`); the K/V buffers are the engine's largest
+    arrays, so they are allocated directly in their final shape."""
     descs = pattern(cfg, cross)
     nb = cfg.num_layers // len(descs)
     dtype = jnp.dtype(cfg.dtype)
@@ -151,7 +154,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
     for j, desc in enumerate(descs):
         c = {}
         if desc.kind == "attn":
-            shape = (nb, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            shape = kv_shape or (nb, batch, max_seq, cfg.num_kv_heads,
+                                 cfg.head_dim)
             c["k"] = jnp.zeros(shape, dtype)
             c["v"] = jnp.zeros(shape, dtype)
         else:
@@ -170,15 +174,50 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
+                      page_tokens: int, cross: bool = False,
+                      enc_len: int = 0):
+    """Decode caches with self-attention K/V laid out as a PHYSICAL page
+    pool: (nb, n_slots * n_pages, page_tokens, KV, hd) instead of the
+    per-slot contiguous (nb, n_slots, max_seq, KV, hd). Each valid
+    (slot, logical page) owns one physical page handed out by the serving
+    pager's free list; the (n_slots, n_pages) block table maps between
+    them at every cache read/write. Non-attention state (SSM state, conv
+    tails, cross-KV) is resident per slot and keeps the dense layout."""
+    descs = pattern(cfg, cross)
+    nb = cfg.num_layers // len(descs)
+    n_pages = -(-max_seq // page_tokens)       # ceil
+    p_phys = n_slots * n_pages
+    return init_caches(
+        cfg, n_slots, max_seq, cross=cross, enc_len=enc_len,
+        kv_shape=(nb, p_phys, page_tokens, cfg.num_kv_heads, cfg.head_dim),
+    )
+
+
 def _apply_layer_decode(p, c, x, t, cfg: ModelConfig, desc: LayerDesc,
-                        ctx: ParallelCtx):
-    """One layer, one token. Returns (x, new_cache)."""
+                        ctx: ParallelCtx, block_table=None,
+                        page_tokens: int = 0, attn_override=None):
+    """One layer, one token (or, via `attn_override`, one prompt chunk).
+    Returns (x, new_cache). With a block table the attention K/V lives in
+    the physical page pool layout; `attn_override(p_attn, h, c) ->
+    (h, (k, v))` swaps the attention contraction while the rest of the
+    layer body stays shared (the chunked-prefill path — one body, so a
+    layer change cannot silently diverge the chunked and serialized
+    streams)."""
     nc = dict(c)
     h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
     if desc.kind == "attn":
-        h, (nc["k"], nc["v"]) = attn.decode_self_attention(
-            p["attn"], h, cfg, c["k"], c["v"], t
-        )
+        if attn_override is not None:
+            h, (nc["k"], nc["v"]) = attn_override(p["attn"], h, c)
+        elif block_table is not None:
+            h, (nc["k"], nc["v"]) = attn.paged_decode_self_attention(
+                p["attn"], h, cfg, c["k"], c["v"], t, block_table,
+                page_tokens,
+            )
+        else:
+            h, (nc["k"], nc["v"]) = attn.decode_self_attention(
+                p["attn"], h, cfg, c["k"], c["v"], t
+            )
     else:
         h, (nc["state"], (nc["tail_x"], nc["tail_B"], nc["tail_C"])) = (
             ssm_mod.ssm_decode_step(
@@ -203,8 +242,10 @@ def _apply_layer_decode(p, c, x, t, cfg: ModelConfig, desc: LayerDesc,
 
 
 def stack_decode(params, caches, x, t, cfg: ModelConfig, ctx: ParallelCtx,
-                 cross: bool = False):
-    """One decode step through the whole stack. x: (B, 1, d)."""
+                 cross: bool = False, block_table=None,
+                 page_tokens: int = 0):
+    """One decode step through the whole stack. x: (B, 1, d). With
+    `block_table`, attention caches are the paged pool layout."""
     descs = pattern(cfg, cross)
 
     def body(x, inp):
@@ -212,7 +253,39 @@ def stack_decode(params, caches, x, t, cfg: ModelConfig, ctx: ParallelCtx,
         new_cache = {}
         for j, desc in enumerate(descs):
             x, new_cache[f"pos{j}"] = _apply_layer_decode(
-                blk[f"pos{j}"], cache[f"pos{j}"], x, t, cfg, desc, ctx
+                blk[f"pos{j}"], cache[f"pos{j}"], x, t, cfg, desc, ctx,
+                block_table=block_table, page_tokens=page_tokens,
+            )
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
+def stack_prefill_chunk(params, caches, x, c0, cfg: ModelConfig,
+                        ctx: ParallelCtx, block_row, page_tokens: int):
+    """One page-aligned prompt chunk through the whole stack against the
+    PAGED caches: each attention layer writes the chunk's KV through the
+    block table and flash-attends to everything prefilled so far. Only
+    attention-only decoder stacks chunk (an SSM/conv prefix is a
+    sequential reduction over the prompt; see
+    `runtime.serve.chunked_prefill_supported`). x: (1, C, d)."""
+    descs = pattern(cfg, cross=False)
+    if any(d.kind != "attn" or d.cross for d in descs):
+        raise ValueError("chunked prefill needs an attention-only stack")
+
+    def chunk_attn(p_attn, h, c):
+        return attn.paged_prefill_chunk_attention(
+            p_attn, h, cfg, c["k"], c["v"], c0, block_row, page_tokens
+        )
+
+    def body(x, inp):
+        blk, cache = inp
+        new_cache = {}
+        for j, desc in enumerate(descs):
+            x, new_cache[f"pos{j}"] = _apply_layer_decode(
+                blk[f"pos{j}"], cache[f"pos{j}"], x, None, cfg, desc, ctx,
+                attn_override=chunk_attn,
             )
         return x, new_cache
 

@@ -144,15 +144,39 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ParallelCtx, max_seq: int):
 
 
 def decode_step(params, token, caches, t, cfg: ModelConfig,
-                ctx: ParallelCtx):
+                ctx: ParallelCtx, block_table=None, page_tokens: int = 0):
     """One decode step. token: (B,) int32; t: scalar position shared by the
-    batch, or a (B,) vector of per-slot positions (continuous batching)."""
+    batch, or a (B,) vector of per-slot positions (continuous batching).
+    With `block_table` (B, n_pages), `caches` is the paged physical
+    page-pool layout (`make_paged_decode_caches`) and attention reads and
+    writes go through the table."""
     x = embed(params["embed"], token[:, None], cfg)
     cross = bool(cfg.num_encoder_layers)
     x, caches = blocks.stack_decode(
-        params["blocks"], caches, x, t, cfg, ctx, cross=cross
+        params["blocks"], caches, x, t, cfg, ctx, cross=cross,
+        block_table=block_table, page_tokens=page_tokens,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, params.get("head"))
+    return logits[:, 0, :], caches
+
+
+def prefill_chunk(params, tokens, caches, chunk_idx, cfg: ModelConfig,
+                  ctx: ParallelCtx, block_row, page_tokens: int):
+    """One page-aligned prompt chunk against the PAGED caches: tokens
+    (1, C) at absolute positions [chunk_idx*C, (chunk_idx+1)*C), written
+    through `block_row` (1, n_pages) — the prefilling slot's block-table
+    row. Returns (last-token logits, caches); the engine uses the logits
+    only on the final chunk (the greedy first token). Attention-only
+    decoder stacks without frontends/encoders (the engine gates this via
+    `runtime.serve.chunked_prefill_supported`)."""
+    C = tokens.shape[1]
+    c0 = jnp.asarray(chunk_idx, jnp.int32) * C
+    x = embed(params["embed"], tokens, cfg)
+    x, caches = blocks.stack_prefill_chunk(
+        params["blocks"], caches, x, c0, cfg, ctx, block_row, page_tokens
+    )
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
     logits = unembed(params["embed"], x, cfg, params.get("head"))
     return logits[:, 0, :], caches
 
@@ -161,5 +185,15 @@ def make_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
                        enc_len: int = 0):
     return blocks.init_caches(
         cfg, batch, max_seq,
+        cross=bool(cfg.num_encoder_layers), enc_len=enc_len,
+    )
+
+
+def make_paged_decode_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
+                             page_tokens: int, enc_len: int = 0):
+    """Decode caches with self-attention K/V as a physical page pool
+    (see blocks.init_paged_caches); the serving engine's paged layout."""
+    return blocks.init_paged_caches(
+        cfg, n_slots, max_seq, page_tokens,
         cross=bool(cfg.num_encoder_layers), enc_len=enc_len,
     )

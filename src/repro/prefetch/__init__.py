@@ -15,9 +15,10 @@ Three-level mapping (each level one module, composable across sources):
      application hints), and the static layer stream
      (`layer_stream_trace` — the subsumed `runtime/prefetch.py` case).
   2. predict  (`predictors.py`) — one protocol
-     (observe/start_step/predict), six predictors: next_line, stride,
-     stream, markov, static (accuracy=1 schedule), and the
-     application-directed frontier predictor.
+     (observe/start_step/predict), seven predictors: next_line, stride,
+     stream, markov, ghb (second-order delta-correlation history),
+     static (accuracy=1 schedule), and the application-directed frontier
+     predictor.
   3. score    (`engine.py`) — the shared `PrefetchEngine` replays any
      trace under any predictor against a local page budget and a
      matched pool link, charges issued pool->local copies, and reports
@@ -42,6 +43,7 @@ from repro.prefetch.engine import (
 )
 from repro.prefetch.predictors import (
     FrontierPredictor,
+    GHBPredictor,
     MarkovPredictor,
     NextLinePredictor,
     Predictor,
@@ -64,6 +66,7 @@ __all__ = [
     "AccessTrace",
     "BFSTrace",
     "FrontierPredictor",
+    "GHBPredictor",
     "MarkovPredictor",
     "NextLinePredictor",
     "Predictor",

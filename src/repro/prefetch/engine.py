@@ -224,7 +224,7 @@ def evaluate_zoo(trace: AccessTrace, cfg: PrefetchConfig,
     with the trace's own schedule (the accuracy=1 upper bound);
     `frontier` only moves when the trace carries hints."""
     names = predictors or ["demand", "next_line", "stride", "stream",
-                           "markov", "static", "frontier"]
+                           "markov", "ghb", "static", "frontier"]
     out = []
     for name in names:
         if name == "static":

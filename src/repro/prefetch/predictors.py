@@ -1,4 +1,4 @@
-"""The predictor zoo — one protocol, six predictors (paper §4.2, Fig 7/8).
+"""The predictor zoo — one protocol, seven predictors (paper §4.2, Fig 7/8).
 
 Every predictor sees the same thing a hardware or runtime prefetcher sees:
 the demand page-touch stream, one page id at a time (`observe`), plus an
@@ -19,6 +19,11 @@ The zoo spans the paper's taxonomy:
               stream (the LLC streamer; survives interleaved slots/jobs).
   markov    — first-order page-transition history, walk the most
               frequent successors (correlation prefetcher).
+  ghb       — Global History Buffer, delta-correlation: SECOND-order
+              history keyed on the last two touch DELTAS, so it learns
+              repeating delta patterns (+1,+3,+1,+3 ...) that defeat
+              both the single-stride confirmer and first-order page
+              correlation (Nesbit & Smith's GHB/DC organization).
   static    — the full access SCHEDULE is known (the subsumed
               `runtime/prefetch.py` layer stream: accuracy is
               structurally 1); predicts exactly the next step's pages.
@@ -173,6 +178,57 @@ class MarkovPredictor(Predictor):
         return out
 
 
+class GHBPredictor(Predictor):
+    """Global History Buffer, delta-correlation (second-order history).
+
+    The index is the pair of the last two non-zero touch deltas; the
+    table records which delta followed that pair. Prediction replays the
+    likeliest delta chain from the current context — so a repeating
+    delta pattern of any period <= 2 (strides, alternating strides,
+    interleaved +a/+b walks) is learned exactly, where `stride` needs a
+    single confirmed constant and `markov` must see every absolute page
+    twice. Pages are unbounded; the table is capacity-capped like a
+    hardware GHB."""
+
+    name = "ghb"
+
+    def __init__(self, max_entries: int = 1 << 12):
+        self.last: Optional[int] = None
+        self.key = (None, None)            # last two deltas
+        self.table: Dict[tuple, collections.Counter] = {}
+        self.max_entries = max_entries
+
+    def observe(self, page: int) -> None:
+        if self.last is None:
+            self.last = page
+            return
+        d = page - self.last
+        self.last = page
+        if d == 0:
+            return
+        a, b = self.key
+        if a is not None and (
+                self.key in self.table or len(self.table) < self.max_entries):
+            self.table.setdefault(self.key, collections.Counter())[d] += 1
+        self.key = (b, d)
+
+    def predict(self, degree: int) -> List[int]:
+        a, _ = self.key
+        if self.last is None or a is None:
+            return []
+        out: List[int] = []
+        key, page = self.key, self.last
+        for _ in range(degree):
+            succ = self.table.get(key)
+            if not succ:
+                break
+            d = succ.most_common(1)[0][0]
+            page = page + d
+            out.append(page)
+            key = (key[1], d)
+        return out
+
+
 class StaticSchedulePredictor(Predictor):
     """The access schedule is fully known ahead of time — the subsumed
     `runtime/prefetch.py` case (a lax.scan over stacked layers has a
@@ -219,6 +275,7 @@ _ZOO = {
     "stride": StridePredictor,
     "stream": StreamPredictor,
     "markov": MarkovPredictor,
+    "ghb": GHBPredictor,
     "frontier": FrontierPredictor,
 }
 

@@ -5,15 +5,32 @@ decode step; `prefill_32k` lowers prefill — per the brief.
 Two consumers:
 
 * the dry-run/launcher path keeps the classic `ServeBundle` (one jitted
-  prefill + one jitted decode over a uniform batch);
+  prefill + one jitted decode over a uniform batch of per-slot contiguous
+  caches);
 * the continuous-batching engine (`repro.serving.engine`) uses
   `make_engine_cells`: a fixed set of jitted cells — one greedy decode cell
   over the whole slot batch with per-slot positions, one prefill cell per
-  prompt bucket, and one cache-insert cell per bucket that splices a
-  prefilled request into the global decode caches at a (traced) slot index.
-  Every shape is fixed at build time, so a steady-state serve loop never
-  recompiles regardless of admissions/completions (slot masking via parked
-  write positions, see `models.attention._cache_insert`).
+  prompt bucket, and one cache-insert cell per bucket. Every shape is
+  fixed at build time, so a steady-state serve loop never recompiles
+  regardless of admissions/completions (slot masking via parked write
+  positions, see `models.attention._cache_insert`).
+
+With `paged=True` (the engine's default) the KV cache IS a physical page
+pool: self-attention K/V leaves are (nb, n_slots * n_pages, page_tokens,
+KV, hd) and every cell takes the live (n_slots, n_pages) block table from
+`serving.kv_pager.KVPager.block_table()` — the single allocator whose
+free list and tier tags drive both the kernel gather and the byte
+accounting. The decode cell runs `kernels/decode_attention/paged.py`
+(interpret mode on CPU, compiled pallas on TPU) over that table; the
+insert cell scatters a prefilled request's pages into the pool; and on
+attention-only stacks (`chunked_prefill_supported`) a chunked-prefill
+cell (`kernels/flash_attention/paged_prefill.py`) processes one
+page-aligned prompt chunk per call — writing K/V through the table and
+flash-attending to everything prefilled so far — so the engine can
+interleave prefill chunks with decode steps instead of stalling the
+whole slot batch for a long prompt. The block table and the chunk index
+are runtime arrays, never Python constants: slot churn, page churn and
+chunk progress all replay through the same compiled cells.
 """
 
 from __future__ import annotations
@@ -117,6 +134,28 @@ def make_bundle(cfg: ModelConfig, ctx: ParallelCtx,
 
 
 # ------------------------------------------------- continuous batching
+def chunked_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs a pure-attention decoder with no frontend
+    prefix and no encoder: an SSM/conv layer's prompt pass is a sequential
+    reduction that cannot restart mid-stream from paged KV alone."""
+    from repro.models import blocks
+
+    if cfg.num_encoder_layers or cfg.frontend:
+        return False
+    return all(
+        cfg.is_attn_layer(j) for j in range(blocks.super_period(cfg))
+    )
+
+
+def abstract_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
+                          page_tokens: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: M.make_paged_decode_caches(
+            cfg, n_slots, max_seq, page_tokens, enc_len
+        )
+    )
+
+
 def build_decode_greedy(cfg: ModelConfig, ctx: ParallelCtx):
     """Greedy decode cell: one token per slot, argmax inside the jit so the
     host only ever syncs an int32 vector plus a scalar finiteness flag
@@ -146,6 +185,24 @@ def build_prefill_greedy(cfg: ModelConfig, ctx: ParallelCtx, bucket: int):
     return cell
 
 
+def build_decode_greedy_paged(cfg: ModelConfig, ctx: ParallelCtx,
+                              page_tokens: int):
+    """Greedy decode cell over the PAGED caches: same contract as
+    `build_decode_greedy` plus the live block table — the decode step
+    reads and writes the physical page pool through
+    `kernels/decode_attention/paged.py`."""
+
+    def cell(params, token, caches, t, block_table):
+        logits, caches = M.decode_step(
+            params, token, caches, t, cfg, ctx,
+            block_table=block_table, page_tokens=page_tokens,
+        )
+        finite = jnp.isfinite(logits).all(axis=-1)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), finite, caches
+
+    return cell
+
+
 def build_cache_insert():
     """Splice a prefilled request's caches (batch=1, short seq extent) into
     the global slot caches at a traced slot index. A dynamic-update-slice
@@ -165,20 +222,97 @@ def build_cache_insert():
     return insert
 
 
+def build_paged_cache_insert(bucket_total: int, page_tokens: int):
+    """Scatter a prefilled request's caches into the PAGED layout: the
+    request's `bucket_total` tokens of K/V (batch=1, dense from the
+    prefill cell) land whole-page in the physical pool at the pages the
+    block table assigns to the traced slot index; resident leaves (SSM
+    state, conv tails, cross-KV) keep the dense dynamic-update-slice.
+    The final partial page carries garbage beyond `bucket_total` — those
+    positions are >= the slot's length, so the kernels' masks exclude
+    them and decode overwrites them before the length ever reaches
+    them."""
+    n_wp = -(-bucket_total // page_tokens)     # pages the prompt spans
+    pad = n_wp * page_tokens - bucket_total
+
+    def insert(caches, slot_caches, slot, block_table):
+        slot = jnp.asarray(slot, jnp.int32)
+        row = jax.lax.dynamic_index_in_dim(
+            block_table, slot, 0, keepdims=False
+        )                                      # (n_pages,)
+        phys = row[:n_wp]
+
+        def ins_dense(big, small):
+            idx = (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), idx
+            )
+
+        def ins_paged(big, small):
+            sm = small[:, 0]                   # (nb, bucket_total, KV, hd)
+            sm = jnp.pad(sm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            nb, _, kv, hd = sm.shape
+            sm = sm.reshape(nb, n_wp, page_tokens, kv, hd)
+            return big.at[:, phys].set(sm.astype(big.dtype))
+
+        out = {}
+        for pos, c in caches.items():
+            out[pos] = {
+                key: (ins_paged(big, slot_caches[pos][key])
+                      if key in ("k", "v")
+                      else ins_dense(big, slot_caches[pos][key]))
+                for key, big in c.items()
+            }
+        return out
+
+    return insert
+
+
+def build_prefill_chunk(cfg: ModelConfig, ctx: ParallelCtx,
+                        page_tokens: int):
+    """Chunked-prefill cell: one page-aligned chunk of one request's
+    prompt against the global PAGED caches — no separate per-request
+    caches, no insert step; the chunk's K/V goes straight through the
+    block table into the pool. Returns the chunk's last-token greedy
+    pick (the engine uses it only on the final chunk)."""
+
+    def cell(params, tokens, caches, slot, chunk_idx, block_table):
+        row = jax.lax.dynamic_index_in_dim(
+            block_table, jnp.asarray(slot, jnp.int32), 0, keepdims=True
+        )                                      # (1, n_pages)
+        logits, caches = M.prefill_chunk(
+            params, tokens, caches, chunk_idx, cfg, ctx, row, page_tokens
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return cell
+
+
 @dataclasses.dataclass
 class EngineCells:
-    """The fixed-shape jitted cells of the continuous-batching engine."""
+    """The fixed-shape jitted cells of the continuous-batching engine.
 
-    decode_fn: Any                 # (params, tok (S,), caches, t (S,)) ->
-    #                        (next_tok (S,), finite, caches) [donates caches]
+    Paged mode: `decode_fn` and `insert_fns` additionally take the live
+    (n_slots, n_pages) int32 block table as their last argument, and
+    `chunk_fn` (attention-only archs with `prefill_chunk` set) processes
+    one page-aligned prompt chunk: (params, tokens (1, C), caches, slot,
+    chunk_idx, block_table) -> (tok (1,), caches) [donates caches]."""
+
+    decode_fn: Any                 # (params, tok (S,), caches, t (S,)[, bt])
+    #                     -> (next_tok (S,), finite, caches) [donates caches]
     prefill_fns: Dict[int, Any]    # bucket -> (params, batch) -> (caches, tok)
-    insert_fns: Dict[int, Any]     # bucket -> (caches, slot_caches, slot)
+    insert_fns: Dict[int, Any]     # bucket -> (caches, slot_caches, slot[, bt])
     param_shardings: Any
     cache_shardings: Any
     abstract_params: Any
     abstract_caches: Any
     n_prefix: int                  # frontend prefix tokens (vision)
     max_seq_total: int             # cache seq extent incl. n_prefix
+    paged: bool = False            # physical page-pool cache layout
+    page_tokens: int = 0           # tokens per page (paged mode)
+    n_pages: int = 0               # logical pages per slot (paged mode)
+    chunk_fn: Any = None           # chunked-prefill cell (paged mode only)
+    chunk: int = 0                 # tokens per prefill chunk
 
     def compile_counts(self) -> Dict[str, int]:
         """Executable-cache sizes of every cell — the no-recompile
@@ -194,17 +328,26 @@ class EngineCells:
             out[f"prefill_{b}"] = size(fn)
         for b, fn in self.insert_fns.items():
             out[f"insert_{b}"] = size(fn)
+        if self.chunk_fn is not None:
+            out["prefill_chunk"] = size(self.chunk_fn)
         return out
 
 
 def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
                       rules=None, mesh=None, *,
                       n_slots: int, max_seq: int,
-                      buckets: Sequence[int], enc_len: int = 0
+                      buckets: Sequence[int], enc_len: int = 0,
+                      paged: bool = False, page_tokens: int = 16,
+                      prefill_chunk: int = 0,
                       ) -> EngineCells:
     """Build the engine's cells. With a mesh, shardings come from the same
     rules as `make_bundle` (this is the ServeBundle path refactored for
-    slot batching); meshless builds plain single-device jits."""
+    slot batching); meshless builds plain single-device jits.
+
+    `paged=True` lays the self-attention KV cache out as the physical
+    page pool the serving pager allocates from (see module docstring);
+    `prefill_chunk > 0` (paged, attention-only archs) additionally builds
+    the chunked-prefill cell."""
     npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
     if cfg.num_encoder_layers and len(set(buckets)) != 1:
         raise ValueError(
@@ -212,6 +355,26 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
             "is fixed by the encoder length)"
         )
     max_seq_total = max_seq + npfx
+    n_pages = -(-max_seq_total // page_tokens) if paged else 0
+    if prefill_chunk:
+        if not paged:
+            raise ValueError("chunked prefill requires the paged layout")
+        if not chunked_prefill_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: chunked prefill needs an attention-only "
+                "decoder without frontend/encoder"
+            )
+        if prefill_chunk % page_tokens:
+            raise ValueError(
+                f"prefill_chunk {prefill_chunk} must be a multiple of "
+                f"page_tokens {page_tokens} (chunks write whole pages)"
+            )
+        bad = [b for b in buckets if b % prefill_chunk]
+        if bad:
+            raise ValueError(
+                f"prefill_chunk {prefill_chunk} must divide every prompt "
+                f"bucket (got {bad}): prompts advance whole chunks"
+            )
 
     param_sh = cache_sh = tok_sh = None
     aparams = acaches = None
@@ -224,37 +387,82 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
             cfg, ctx, rules, mesh, batch=n_slots, max_seq=max_seq_total,
             enc_len=enc_len,
         )
-        param_sh, cache_sh = bundle.param_shardings, bundle.cache_shardings
-        aparams, acaches = bundle.abstract_params, bundle.abstract_caches
+        param_sh = bundle.param_shardings
+        aparams = bundle.abstract_params
+        if paged:
+            # the pool has no batch dim to shard over dp and its page dim
+            # is gathered through the block table — replicate the paged
+            # leaves (multi-host slot sharding stays a ROADMAP item)
+            acaches = abstract_paged_caches(
+                cfg, n_slots, max_seq_total, page_tokens, enc_len
+            )
+            cache_sh = shd.named(
+                mesh, jax.tree.map(lambda _: P(), acaches)
+            )
+        else:
+            cache_sh = bundle.cache_shardings
+            acaches = bundle.abstract_caches
         tok_sh = shd.named(mesh, P())
+        decode_cell = (
+            build_decode_greedy_paged(cfg, ctx, page_tokens) if paged
+            else build_decode_greedy(cfg, ctx)
+        )
+        in_sh = (param_sh, tok_sh, cache_sh, None)
         decode = jax.jit(
-            build_decode_greedy(cfg, ctx),
-            in_shardings=(param_sh, tok_sh, cache_sh, None),
+            decode_cell,
+            in_shardings=in_sh + (None,) if paged else in_sh,
             out_shardings=(None, None, cache_sh),
             donate_argnums=(2,),
         )
     else:
         aparams, _ = abstract_params(cfg)
-        acaches = abstract_caches(cfg, n_slots, max_seq_total, enc_len)
-        decode = jax.jit(build_decode_greedy(cfg, ctx), donate_argnums=(2,))
+        acaches = (
+            abstract_paged_caches(cfg, n_slots, max_seq_total, page_tokens,
+                                  enc_len)
+            if paged else abstract_caches(cfg, n_slots, max_seq_total,
+                                          enc_len)
+        )
+        decode_cell = (
+            build_decode_greedy_paged(cfg, ctx, page_tokens) if paged
+            else build_decode_greedy(cfg, ctx)
+        )
+        decode = jax.jit(decode_cell, donate_argnums=(2,))
 
     prefills, inserts = {}, {}
     for b in sorted(set(buckets)):
         cell = build_prefill_greedy(cfg, ctx, b)
+        ins_cell = (
+            build_paged_cache_insert(b + npfx, page_tokens) if paged
+            else build_cache_insert()
+        )
         if mesh is not None:
             prefills[b] = jax.jit(cell, in_shardings=(param_sh, None))
             # pin the global caches to the decode cell's sharding so the
             # insert->decode round trip never re-lays-out (and never
             # recompiles either cell after the first call)
+            ins_in = (cache_sh, None, None)
             inserts[b] = jax.jit(
-                build_cache_insert(),
-                in_shardings=(cache_sh, None, None),
+                ins_cell,
+                in_shardings=ins_in + (None,) if paged else ins_in,
                 out_shardings=cache_sh,
                 donate_argnums=(0,),
             )
         else:
             prefills[b] = jax.jit(cell)
-            inserts[b] = jax.jit(build_cache_insert(), donate_argnums=(0,))
+            inserts[b] = jax.jit(ins_cell, donate_argnums=(0,))
+
+    chunk_fn = None
+    if prefill_chunk:
+        chunk_cell = build_prefill_chunk(cfg, ctx, page_tokens)
+        if mesh is not None:
+            chunk_fn = jax.jit(
+                chunk_cell,
+                in_shardings=(param_sh, None, cache_sh, None, None, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            )
+        else:
+            chunk_fn = jax.jit(chunk_cell, donate_argnums=(2,))
 
     return EngineCells(
         decode_fn=decode,
@@ -266,4 +474,9 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         abstract_caches=acaches,
         n_prefix=npfx,
         max_seq_total=max_seq_total,
+        paged=paged,
+        page_tokens=page_tokens if paged else 0,
+        n_pages=n_pages,
+        chunk_fn=chunk_fn,
+        chunk=prefill_chunk,
     )

@@ -5,6 +5,15 @@ workflow: decode is the catalog's link-saturating, latency-sensitive cell,
 so it is where disaggregated-memory placement and admission decisions
 matter most (cf. the CXL-pooling studies arXiv:2211.02682, 2303.06420).
 
+The KV cache is a PHYSICAL page pool end-to-end (the default,
+`EngineConfig.paged`): self-attention K/V lives as (stack, n_slots *
+n_pages, page_tokens, heads, head_dim) arrays, and every jitted cell —
+decode, prefill-insert, chunked prefill — reads and writes it through the
+live (n_slots, n_pages) block table the pager emits. Page placement is
+therefore real at the data-layout level, not an accounting overlay: the
+paper's three-level local/pool byte split prices exactly the pages the
+kernels gather.
+
 Architecture (one module per concern):
 
   queue.py    — `Request` / `RequestQueue` and deterministic arrival
@@ -12,36 +21,55 @@ Architecture (one module per concern):
   batcher.py  — fixed-slot continuous batching: requests flow through
                 `n_slots` decode lanes; admission on free slot, release on
                 completion; inactive slots mask their cache writes by
-                parking the write cursor out of range.
-  kv_pager.py — page-grain tier-aware KV-cache manager: hot tail pages
-                local, cold prefix evicted to the pool tier, placed by the
-                paper's placement engine (`core.placement`) under the
-                hot/cold decode traffic model shared with the workload
-                catalog (`core.access`). `static` is the first-touch
-                no-paging baseline; `none` the all-local control. With
-                `PagerConfig.prefetch` set, cold-prefix page-in is
-                prediction-driven (`repro.prefetch` predictor zoo):
-                staged pool transfers overlap compute, demand page-ins
-                serialize, and `block_table()` exposes the
-                logical->physical page map the paged decode-attention
-                kernel gathers through.
+                parking the write cursor out of range. With chunked
+                prefill, a slot also has a `prefill` phase: occupied but
+                outside the decode batch while its prompt advances one
+                chunk at a time.
+  kv_pager.py — the single page ALLOCATOR plus tier-aware placement: a
+                shared free list hands each valid (slot, page) a physical
+                page id; `block_table()` is the logical->physical map the
+                engine's paged cells and the paged pallas kernels
+                (`kernels/decode_attention/paged.py`,
+                `kernels/flash_attention/paged_prefill.py`) chase;
+                `phys_tiers()` tags every physical page local or pool.
+                Hot tail pages stay local, the cold prefix is evicted to
+                the pool tier by the paper's placement engine
+                (`core.placement`) under the hot/cold decode traffic
+                model shared with the workload catalog (`core.access`).
+                `static` is the first-touch no-paging baseline; `none`
+                the all-local control. With `PagerConfig.prefetch` set,
+                cold-prefix page-in is prediction-driven (`repro.
+                prefetch` predictor zoo): staged pool transfers overlap
+                compute, demand page-ins serialize.
   engine.py   — the event loop over fixed-shape jitted cells built by
                 `runtime.serve.make_engine_cells` (prefill per prompt
                 bucket, one slot-batched greedy decode cell with per-slot
-                positions, cache-splice cells), plus the admission
-                controller that throttles batch growth at the M/D/1-knee
-                corridor budget (`core.interference.corridor_budget`)
-                using cached `core.quantify.profile_for` submission-time
-                metrics.
+                positions over the page pool, page-scatter insert cells,
+                and — on attention-only archs — a chunked-prefill cell
+                that interleaves page-aligned prompt chunks with decode
+                steps so prefill never serializes a long prompt against
+                the in-flight batch; `ServeStats.decode_stall` measures
+                exactly that gap). The admission controller throttles
+                batch growth at the M/D/1-knee corridor budget
+                (`core.interference.corridor_budget`) using cached
+                `core.quantify.profile_for` submission-time metrics,
+                tightened online by the pager's measured prefetch-excess
+                pool traffic.
 
 No recompilation occurs at steady state: every cell's shapes are fixed at
-build time and admissions/completions only flip mask/position vectors —
-`tests/test_serving.py` asserts the executable-cache sizes stay constant.
-CI gates this subsystem twice: the tier-1 fast lane runs the serving tests
-on every push, and the benchmark smoke job runs `benchmarks/bench_serving`
-(chat / long-context / bursty) and uploads the BENCH artifacts, including
-the long-context pager-vs-static comparison that must show the tier-aware
-pager cutting the remote (pool-tier) access share at equal tokens/s.
+build time, and admissions/completions/page churn/chunk progress only flip
+mask/position/block-table ARRAYS — `tests/test_serving.py` asserts the
+executable-cache sizes stay constant. CI gates this subsystem three ways:
+the tier-1 fast lane runs the serving tests on every push; the
+paged-engine-parity lane replays `scripts/dev_serve.py --paged` with
+interpret-mode pallas kernels, asserting token-for-token equality between
+the paged engine and the contiguous naive loop; and the benchmark smoke
+job runs `benchmarks/bench_serving` (chat / long-context / bursty /
+chunked-prefill) and uploads the BENCH artifacts, including the
+long-context pager-vs-static comparison that must show the tier-aware
+pager cutting the remote (pool-tier) access share at equal tokens/s and
+the chunked-prefill lane that must show a lower p95 decode-step stall
+than serialized prefill.
 """
 
 from repro.serving.batcher import ContinuousBatcher, Slot

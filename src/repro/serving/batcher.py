@@ -5,13 +5,21 @@ through slots (admit on free, release on completion) so new prompts join
 in-flight decode without ever changing the jitted cell's shapes. Inactive
 slots park their write cursor at `park_pos` (>= cache length), which turns
 the masked KV insert into a no-op (`models.attention._cache_insert` writes
-nothing for out-of-range positions) — the "slot masking" half of the
-fixed-shape contract.
+nothing for out-of-range positions; the paged write path drops the scatter
+the same way) — the "slot masking" half of the fixed-shape contract.
+
+A slot has two phases. `decode` is the classic lane: the request was
+prefilled in one shot (or finished its chunks) and generates one token per
+engine step. `prefill` is the chunked-prefill lane: the slot is OCCUPIED
+(it owns KV pages and blocks admission) but excluded from the decode
+batch — its prompt advances one page-aligned chunk at a time, interleaved
+with everyone else's decode steps, until `begin_decode` flips it live.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -25,10 +33,22 @@ class Slot:
     request: Optional[Request] = None
     t: int = 0                 # next cache write position (absolute)
     emitted: int = 0           # tokens generated so far (incl. prefill's)
+    phase: str = "decode"      # "decode" | "prefill" (chunked prefill)
+    prefill_pos: int = 0       # prompt tokens prefilled so far
+    seq: int = -1              # admission order (FIFO chunk scheduling)
+
+    @property
+    def occupied(self) -> bool:
+        return self.request is not None
 
     @property
     def active(self) -> bool:
-        return self.request is not None
+        """In the decode batch (occupied AND past its prefill phase)."""
+        return self.request is not None and self.phase == "decode"
+
+    @property
+    def prefilling(self) -> bool:
+        return self.request is not None and self.phase == "prefill"
 
 
 class ContinuousBatcher:
@@ -43,6 +63,7 @@ class ContinuousBatcher:
         self.park_pos = park_pos
         self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
         self._free: List[int] = list(range(n_slots))[::-1]  # pop() -> slot 0
+        self._seq = itertools.count()
 
     # ------------------------------------------------------------ buckets
     def bucket_for(self, prompt_len: int) -> int:
@@ -63,19 +84,51 @@ class ContinuousBatcher:
 
     @property
     def n_active(self) -> int:
+        return sum(1 for s in self.slots if s.active)
+
+    @property
+    def n_prefilling(self) -> int:
+        return sum(1 for s in self.slots if s.prefilling)
+
+    @property
+    def n_busy(self) -> int:
+        """Occupied slots (decode-active + mid-chunked-prefill)."""
         return self.n_slots - self.n_free
 
     def active_mask(self) -> np.ndarray:
         return np.array([s.active for s in self.slots], dtype=bool)
 
-    def admit(self, request: Request, start_pos: int) -> Slot:
+    def prefilling_slots(self) -> List[Slot]:
+        """Mid-prefill slots in admission order (FIFO chunk scheduling)."""
+        return sorted(
+            (s for s in self.slots if s.prefilling), key=lambda s: s.seq
+        )
+
+    def admit(self, request: Request, start_pos: int,
+              phase: str = "decode") -> Slot:
         if not self._free:
             raise RuntimeError("no free slot")
         slot = self.slots[self._free.pop()]
         slot.request = request
-        slot.t = start_pos
-        slot.emitted = 1            # prefill emits the first token
+        slot.phase = phase
+        slot.seq = next(self._seq)
+        if phase == "decode":
+            slot.t = start_pos
+            slot.emitted = 1        # prefill emits the first token
+        else:
+            slot.t = self.park_pos  # masked until begin_decode
+            slot.emitted = 0
+            slot.prefill_pos = 0
         return slot
+
+    def begin_decode(self, slot: Slot, start_pos: int) -> None:
+        """A chunked prefill finished: the slot joins the decode batch."""
+        if not slot.prefilling:
+            raise RuntimeError(f"slot {slot.index} is not prefilling")
+        slot.phase = "decode"
+        slot.t = start_pos
+        slot.emitted = 1
+        slot.prefill_pos = 0
 
     def release(self, slot: Slot) -> Request:
         req = slot.request
@@ -84,13 +137,16 @@ class ContinuousBatcher:
         slot.request = None
         slot.t = self.park_pos
         slot.emitted = 0
+        slot.phase = "decode"
+        slot.prefill_pos = 0
+        slot.seq = -1
         self._free.append(slot.index)
         return req
 
     # ------------------------------------------------------- step arrays
     def t_vector(self) -> np.ndarray:
-        """Per-slot write positions; inactive slots parked out of range so
-        their cache writes mask away."""
+        """Per-slot write positions; inactive (free or still-prefilling)
+        slots parked out of range so their cache writes mask away."""
         return np.array(
             [s.t if s.active else self.park_pos for s in self.slots],
             dtype=np.int32,

@@ -1,4 +1,5 @@
-"""Tier-aware continuous-batching serving engine.
+"""Tier-aware continuous-batching serving engine over a physical paged-KV
+runtime.
 
 The engine turns the one-shot prefill+decode loop of `launch/serve.py` into
 an event loop over fixed-shape jitted cells (`runtime.serve.
@@ -6,13 +7,23 @@ make_engine_cells`):
 
   admit   — pop arrived requests while slots are free AND the admission
             controller projects the pool link below the M/D/1 knee; run
-            the bucketed prefill cell, splice the request's caches into
-            the slot batch, emit its first greedy token;
+            the bucketed prefill cell and scatter the request's caches
+            into the slot batch (or, with `prefill_chunk` set, park the
+            request in a prefilling slot), emit its first greedy token;
   decode  — one step of the whole slot batch with per-slot positions
             (inactive slots are masked by parked write cursors);
+  chunk   — with chunked prefill enabled, at most one page-aligned prompt
+            chunk advances between decode steps, so a long prompt never
+            stalls in-flight decode for more than one chunk (the
+            prefill-serializes-against-decode fix; `ServeStats` reports
+            the p95 inter-decode-step stall this is for);
   retire  — completed requests free their slot and their KV pages.
 
-Tier awareness lives in two places:
+In paged mode (the default) the KV cache IS a physical page pool: the
+`KVPager` is the single allocator — its free list hands out physical
+pages, its `block_table()` is what every decode/insert/chunk cell reads
+and writes the cache through, and its tier tags price every byte. Tier
+awareness lives in two places:
 
 * the `KVPager` keeps each slot's hot KV tail in the local tier and evicts
   the cold prefix to the pool tier (hot/cold per `core.access`'s decode
@@ -21,16 +32,18 @@ Tier awareness lives in two places:
 * the `AdmissionController` consults the catalog profile (cached
   `core.quantify.profile_for`, the paper's §7.2 submission-time metrics)
   for a prior per-slot injected LoI, refines it with the pager's measured
-  traffic, and throttles batch growth when the projected pool-link LoI
-  would cross the corridor budget (`core.interference.corridor_budget`,
-  the M/D/1 knee).
+  traffic, and throttles batch growth when the projected pool-link LoI —
+  plus the pager's measured prefetch EXCESS traffic (speculative
+  transfers that never paid off are still pool-link interference, the
+  paper's SuperLU 37% case) — would cross the corridor budget
+  (`core.interference.corridor_budget`, the M/D/1 knee).
 
 The clock is dual: wall time measures what this host actually does;
 virtual time prices each step on the target tier topology (compute from
-the decode roofline, local/pool bytes from the pager, pool transfers
-overlapped with compute because pool-resident pages are layer-ahead
-prefetchable — `runtime/prefetch.py`). Latency metrics (TTFT/TPOT) are
-virtual; throughput is reported on both clocks.
+the decode roofline, local/pool bytes from the pager, staged pool
+transfers overlapped with compute in the layer-ahead regime —
+`prefetch.static` — while demand page-ins serialize). Latency metrics
+(TTFT/TPOT/stall) are virtual; throughput is reported on both clocks.
 """
 
 from __future__ import annotations
@@ -63,6 +76,13 @@ class EngineConfig:
     n_slots: int = 8
     max_seq: int = 128              # prompt+gen per slot (excl. vision pfx)
     prefill_buckets: tuple = (32,)
+    # --- paged-KV runtime ---
+    paged: bool = True              # cache = physical page pool + block
+    # tables end-to-end (False keeps the per-slot contiguous layout — the
+    # refactor's safety net, token-for-token identical)
+    prefill_chunk: Optional[int] = None   # tokens per prefill chunk
+    # (paged, attention-only archs): interleave prompt chunks with decode
+    # steps instead of serializing whole prompts against the batch
     # --- pager ---
     page_tokens: int = 16
     local_budget_frac: Optional[float] = 0.5   # of peak KV bytes; None=all
@@ -93,9 +113,14 @@ class AdmissionController:
     computed once per workload exactly like PR 1's scheduler does at
     submission time) and refined online with an EMA of the pager's
     measured pool time per step. Admitting slot n+1 is allowed while
-    (n+1) * per_slot_loi stays under the corridor budget — the same
-    derived M/D/1-knee budget the rack scheduler's binpack policy packs
-    against."""
+    (n+1) * per_slot_loi PLUS the measured prefetch-excess LoI stays
+    under the corridor budget — the same derived M/D/1-knee budget the
+    rack scheduler's binpack policy packs against. Excess counts because
+    a speculative prefetcher's fetched-but-unused pages occupy the same
+    link the admitted slots must share (`PrefetchEngine`'s excess metric,
+    fed back here just as `core.access.with_prefetch_excess` feeds it
+    back into catalog profiles): the more the pager mispredicts, the
+    earlier admission closes."""
 
     EMA = 0.5
 
@@ -106,6 +131,7 @@ class AdmissionController:
         self.mode = mode
         self.budget = itf.corridor_budget(topo, knee_excess)
         self.per_slot_loi = float(prior_loi)
+        self.excess_loi = 0.0
         self.blocks = 0
 
     @classmethod
@@ -119,12 +145,19 @@ class AdmissionController:
             prior = prof.injected_loi() / SHAPES[shape_name].global_batch
         return cls(topo, prior_loi=prior, **kw)
 
-    def observe(self, n_active: int, t_pool: float, dt: float) -> None:
+    def observe(self, n_active: int, t_pool: float, dt: float,
+                t_excess: float = 0.0) -> None:
+        """`t_excess`: pool-link seconds this step spent on prefetched
+        pages that never became useful (the pager's excess traffic)."""
         if n_active < 1 or dt <= 0.0:
             return
         measured = min(1.0, t_pool / dt) / n_active
         self.per_slot_loi = (
             (1 - self.EMA) * self.per_slot_loi + self.EMA * measured
+        )
+        self.excess_loi = (
+            (1 - self.EMA) * self.excess_loi
+            + self.EMA * min(1.0, max(t_excess, 0.0) / dt)
         )
 
     def projected_loi(self, n_slots: int) -> float:
@@ -133,7 +166,8 @@ class AdmissionController:
     def admit(self, n_active: int) -> bool:
         if self.mode == "greedy" or n_active == 0:
             return True     # never deadlock an idle engine
-        ok = self.projected_loi(n_active + 1) <= self.budget
+        ok = (self.projected_loi(n_active + 1) + self.excess_loi
+              <= self.budget)
         if not ok:
             self.blocks += 1
         return ok
@@ -148,6 +182,9 @@ class ServeStats:
     virtual_s: float
     ttft: np.ndarray               # per request, virtual seconds
     tpot: np.ndarray               # per generated token (after the first)
+    decode_stall: np.ndarray       # virtual gap between consecutive decode
+    #             steps (admissions/prefill chunks land in these gaps — the
+    #             prefill-serializes-against-decode stall made measurable)
     pager: dict
     admission_blocks: int
     max_concurrency: int
@@ -165,6 +202,7 @@ class ServeStats:
             "ttft_p50_s": pct(self.ttft, 50),
             "tpot_p50_s": pct(self.tpot, 50),
             "tpot_p99_s": pct(self.tpot, 99),
+            "stall_p95_s": pct(self.decode_stall, 95),
             "remote_share": self.pager["remote_share"],
             "demand_share": self.pager.get("demand_share", 0.0),
             "admission_blocks": self.admission_blocks,
@@ -208,9 +246,14 @@ class ServingEngine:
         self.topo = topo or tr.v5e_topology()
 
         self.npfx = cells.n_prefix
+        # paged mode parks PAST the pool's page-aligned position space:
+        # a parked position inside the last partial logical page would
+        # pass the page-range guard and scribble into physical page 0
+        # through the slot's zeroed block-table row
+        park = (cells.n_pages * cells.page_tokens if cells.paged
+                else cells.max_seq_total)
         self.batcher = ContinuousBatcher(
-            ecfg.n_slots, ecfg.prefill_buckets,
-            park_pos=cells.max_seq_total,
+            ecfg.n_slots, ecfg.prefill_buckets, park_pos=park,
         )
         kv_tok = _kv_bytes_per_token(cells.abstract_caches)
         resident = _resident_bytes_per_slot(cells.abstract_caches)
@@ -235,9 +278,16 @@ class ServingEngine:
             self.topo, ecfg.catalog_arch, ecfg.catalog_shape,
             mode=ecfg.admission, knee_excess=ecfg.knee_excess,
         )
-        self.caches = M.make_decode_caches(
-            cfg, ecfg.n_slots, cells.max_seq_total, enc_len=self._enc_len()
-        )
+        if cells.paged:
+            self.caches = M.make_paged_decode_caches(
+                cfg, ecfg.n_slots, cells.max_seq_total, cells.page_tokens,
+                enc_len=self._enc_len(),
+            )
+        else:
+            self.caches = M.make_decode_caches(
+                cfg, ecfg.n_slots, cells.max_seq_total,
+                enc_len=self._enc_len(),
+            )
         if cells.cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cells.cache_shardings)
         self.tokens = np.zeros(ecfg.n_slots, dtype=np.int32)
@@ -245,6 +295,13 @@ class ServingEngine:
         self.steps = 0
         self.virtual_s = 0.0
         self._t_compute_s = 0.0
+        self._prev_excess_b = 0.0      # pager excess fed to admission
+        self._decode_gaps: List[float] = []
+        self._last_decode_end: Optional[float] = None
+        self._bt_host = None           # block-table upload cache: the
+        self._bt_dev = None            # pager returns the SAME array
+        # object until the mapping changes, so steady-state decode skips
+        # the per-step host->device transfer by identity
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -258,6 +315,8 @@ class ServingEngine:
             cfg, ctx, rules, mesh,
             n_slots=ecfg.n_slots, max_seq=ecfg.max_seq,
             buckets=ecfg.prefill_buckets, enc_len=enc_len,
+            paged=ecfg.paged, page_tokens=ecfg.page_tokens,
+            prefill_chunk=ecfg.prefill_chunk or 0,
         )
         if params is None:
             params, _ = M.init_model(cfg, jax.random.PRNGKey(seed))
@@ -289,60 +348,145 @@ class ServingEngine:
                 f"request {req.request_id} was already served — build a "
                 "fresh trace per run (Request objects are consumed)"
             )
-        bucket = self.batcher.bucket_for(req.prompt_len)
         if req.prompt_len + req.max_new_tokens > self.ecfg.max_seq:
             raise ValueError(
                 f"request {req.request_id}: prompt+gen exceeds max_seq "
                 f"{self.ecfg.max_seq}"
             )
+        if self.cells.chunk_fn is not None:
+            self._admit_chunked(req, now)
+            return
+        bucket = self.batcher.bucket_for(req.prompt_len)
         batch = {"tokens": jnp.asarray(req.tokens[None, :]),
                  **self._frontend_extras(req, bucket)}
         slot_caches, tok = self.cells.prefill_fns[bucket](self.params, batch)
         start = self.npfx + req.prompt_len
         slot = self.batcher.admit(req, start_pos=start)
-        self.caches = self.cells.insert_fns[bucket](
-            self.caches, slot_caches, np.int32(slot.index)
-        )
+        # the pager allocates BEFORE the insert: in paged mode the insert
+        # cell scatters through the block table, so the slot's pages must
+        # already be owned (in dense mode the order is irrelevant)
+        self.pager.admit(slot.index, start)
+        if self.cells.paged:
+            self.caches = self.cells.insert_fns[bucket](
+                self.caches, slot_caches, np.int32(slot.index),
+                self._block_table_dev(),
+            )
+        else:
+            self.caches = self.cells.insert_fns[bucket](
+                self.caches, slot_caches, np.int32(slot.index)
+            )
         self.virtual_s += self._prefill_dt(start)
         first = int(np.asarray(tok)[0])
         self.tokens[slot.index] = first
         req.admitted = now
         req.output.append(first)
         req.token_times.append(self.virtual_s)
-        self.pager.admit(slot.index, start)
         if req.done:                      # max_new_tokens == 1
             req.finished = self.virtual_s
             self._retire(slot)
 
-    def _prefill_dt(self, n_tokens: int) -> float:
+    def _admit_chunked(self, req: Request, now: float) -> None:
+        """Chunked admission: the request only claims a slot; its prompt
+        advances chunk-by-chunk in `_prefill_tick`, interleaved with
+        decode steps."""
+        C = self.cells.chunk
+        if req.prompt_len <= 0 or req.prompt_len % C:
+            raise ValueError(
+                f"request {req.request_id}: prompt_len {req.prompt_len} "
+                f"must be a positive multiple of prefill_chunk {C}"
+            )
+        self.batcher.admit(req, start_pos=0, phase="prefill")
+        req.admitted = now
+
+    def _prefill_tick(self) -> bool:
+        """Advance the oldest mid-prefill request by ONE chunk (chunked
+        mode only). Returns True if a chunk ran — at most one per engine
+        loop iteration, so prefill interleaves with decode instead of
+        serializing a whole prompt against the batch."""
+        if self.cells.chunk_fn is None:
+            return False
+        slots = self.batcher.prefilling_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        req = slot.request
+        C = self.cells.chunk
+        end = slot.prefill_pos + C
+        self.pager.extend(slot.index, end)      # own the pages first
+        toks = jnp.asarray(req.tokens[None, slot.prefill_pos:end])
+        tok, self.caches = self.cells.chunk_fn(
+            self.params, toks, self.caches, np.int32(slot.index),
+            np.int32(slot.prefill_pos // C),
+            self._block_table_dev(),
+        )
+        self.virtual_s += self._prefill_dt(C, final=(end == req.prompt_len))
+        slot.prefill_pos = end
+        if end == req.prompt_len:
+            first = int(np.asarray(tok)[0])
+            self.batcher.begin_decode(slot, start_pos=req.prompt_len)
+            self.tokens[slot.index] = first
+            req.output.append(first)
+            req.token_times.append(self.virtual_s)
+            if req.done:                  # max_new_tokens == 1
+                req.finished = self.virtual_s
+                self._retire(slot)
+        return True
+
+    def _prefill_dt(self, n_tokens: int, final: bool = True) -> float:
         """Virtual cost of prefilling `n_tokens` on the target topology:
-        prefill compute + writing the request's caches into the local
-        tier."""
+        prefill compute + writing the new KV into the local tier. The
+        resident-state write and the host dispatch floor are charged once
+        per prompt (on the final/only chunk): interleaved chunks ride the
+        engine's already-running step cadence, so chunking must not pay
+        the launch overhead per chunk — only the serialization it
+        actually removes."""
         t_comp = (
             rl.model_flops_decode(self._active_params, n_tokens)
             / hw.V5E.peak_flops_bf16
         )
         write = (
             self.pager.bytes_per_token * n_tokens
-            + self.pager.resident_bytes
+            + (self.pager.resident_bytes if final else 0.0)
         ) / self.topo.local.bandwidth
-        return max(t_comp, write) + self.ecfg.step_overhead_s
+        return max(t_comp, write) + (
+            self.ecfg.step_overhead_s if final else 0.0
+        )
 
     def _retire(self, slot) -> Request:
         req = self.batcher.release(slot)
         self.pager.release(slot.index)
         return req
 
+    def _block_table_dev(self):
+        bt = self.pager.block_table()
+        if bt is not self._bt_host:
+            self._bt_host = bt
+            self._bt_dev = jnp.asarray(bt)
+        return self._bt_dev
+
     # ------------------------------------------------------------- step
     def _step_decode(self) -> None:
         """One fixed-shape decode step over all slots + accounting."""
+        if self._last_decode_end is not None:
+            self._decode_gaps.append(
+                self.virtual_s - self._last_decode_end
+            )
         active = self.batcher.active_mask()
         n_active = int(active.sum())
         t_vec = self.batcher.t_vector()
-        next_tok, finite, self.caches = self.cells.decode_fn(
-            self.params, jnp.asarray(self.tokens), self.caches,
-            jnp.asarray(t_vec),
-        )
+        if self.cells.paged:
+            # the write-position page must be live BEFORE the cell runs:
+            # the block table it receives is the layout it writes through
+            self.pager.ensure_tail_pages(active)
+            next_tok, finite, self.caches = self.cells.decode_fn(
+                self.params, jnp.asarray(self.tokens), self.caches,
+                jnp.asarray(t_vec), self._block_table_dev(),
+            )
+        else:
+            next_tok, finite, self.caches = self.cells.decode_fn(
+                self.params, jnp.asarray(self.tokens), self.caches,
+                jnp.asarray(t_vec),
+            )
         next_np = np.asarray(next_tok)
         if not bool(np.asarray(finite)[active].all()):
             raise FloatingPointError(
@@ -367,9 +511,19 @@ class ServingEngine:
             itf.step_time_vec(t_staged, t_local, t_compute, 0.0)
         ) + t_demand + self.ecfg.step_overhead_s
         self.virtual_s += dt
+        self._last_decode_end = self.virtual_s
         self.steps += 1
         self._t_compute_s += t_compute
-        self.admission.observe(n_active, t_pool, dt)
+        # prefetch-excess feedback: pages staged over the link that never
+        # became useful are interference the admission budget must absorb
+        excess_b = (
+            (self.pager.prefetch_issued - self.pager.prefetch_useful)
+            * self.pager.page_bytes
+        )
+        t_excess = max(0.0, excess_b - self._prev_excess_b) \
+            / self.topo.pool.bandwidth
+        self._prev_excess_b = excess_b
+        self.admission.observe(n_active, t_pool, dt, t_excess=t_excess)
 
         self.batcher.advance()
         for slot in self.batcher.slots:
@@ -419,18 +573,27 @@ class ServingEngine:
         now0 = self.virtual_s
         steps0 = self.steps
         blocks0 = self.admission.blocks
+        gaps0 = len(self._decode_gaps)
         pager0 = self.pager.counters()
         wall0 = time.perf_counter()
         max_conc = 0
-        while len(q) or self.batcher.n_active:
+        while len(q) or self.batcher.n_busy:
             while (self.batcher.n_free and q.peek(self.virtual_s)
-                   and self.admission.admit(self.batcher.n_active)):
+                   and self.admission.admit(self.batcher.n_busy)):
                 self._admit(q.pop(self.virtual_s), self.virtual_s)
+            chunk_ran = self._prefill_tick()
             if self.batcher.n_active == 0:
+                if chunk_ran:
+                    continue
                 nxt = q.next_arrival()
                 if not np.isfinite(nxt):
                     break
+                # arrival-bounded idling is not decode stall: advance the
+                # gap origin past the wait so the next gap counts only
+                # the work (admissions/prefill) done after the arrival
                 self.virtual_s = max(self.virtual_s, nxt)
+                if self._last_decode_end is not None:
+                    self._last_decode_end = self.virtual_s
                 continue
             max_conc = max(max_conc, self.batcher.n_active)
             self._step_decode()
@@ -480,6 +643,7 @@ class ServingEngine:
             virtual_s=self.virtual_s - now0,
             ttft=ttft,
             tpot=tpot,
+            decode_stall=np.array(self._decode_gaps[gaps0:]),
             pager=pager_delta,
             admission_blocks=self.admission.blocks - blocks0,
             max_concurrency=max_conc,

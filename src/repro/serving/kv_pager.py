@@ -29,14 +29,18 @@ Policies:
             the Linux first-touch analogue the paper starts from.
   none    — no local budget (everything local; control case).
 
-The pager is a *logical* manager plus exact byte accounting, matching the
-rest of the framework: XLA memory kinds are tensor-grain (see
-runtime/capability.py), so physical page moves cannot be expressed on this
-backend — placement is tracked at page grain exactly like the paper tracks
-pages it cannot individually pin either. The page grain IS real at the
-kernel level, though: every valid (slot, page) owns a physical page id
-from a shared free list, and `block_table()` emits the logical->physical
-map that `kernels/decode_attention/paged.py` gathers through.
+The pager is the serving stack's single PAGE ALLOCATOR: every valid
+(slot, page) owns a physical page id from a shared free list, and
+`block_table()` emits the logical->physical map that the engine's paged
+cells read and write the cache through end-to-end — the decode gather
+(`kernels/decode_attention/paged.py`), the prefill-insert scatter and the
+chunked-prefill kernel (`kernels/flash_attention/paged_prefill.py`) all
+chase this one table, so the (slots, pages) grain is the real data
+layout, not bookkeeping. TIER placement stays accounting-grade on this
+backend: XLA memory kinds are tensor-grain (see runtime/capability.py),
+so a page's local-vs-pool tag (`phys_tiers()`) prices traffic exactly —
+like the paper's pages it cannot individually pin — without issuing a
+physical move.
 
 Pool-read accounting has two modes:
 
@@ -92,7 +96,8 @@ class PagerConfig:
         if self.page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
         if self.prefetch is not None and self.prefetch not in (
-                "demand", "next_line", "stride", "stream", "markov"):
+                "demand", "next_line", "stride", "stream", "markov",
+                "ghb"):
             raise ValueError(
                 f"pager prefetch {self.prefetch!r} must be a stream-"
                 "learnable predictor (or 'demand'); 'static'/'frontier' "
@@ -150,6 +155,7 @@ class KVPager:
         # kernel's block-index map exists for
         self.phys = np.full((n_slots, self.n_pages), -1, dtype=np.int64)
         self._free_phys = list(range(n_slots * self.n_pages))
+        self._bt_cache: Optional[np.ndarray] = None
 
         self._steps = 0
         self.total_local_bytes = 0.0
@@ -199,6 +205,7 @@ class KVPager:
         newly = ~self.valid[slot, :upto_page]
         if not newly.any():
             return
+        self._bt_cache = None
         for p in np.nonzero(newly)[0]:
             self.phys[slot, p] = self._free_phys.pop()
         if self.cfg.policy == "static":
@@ -219,12 +226,36 @@ class KVPager:
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
         self.release(slot)
+        self.extend(slot, length)
+
+    def extend(self, slot: int, length: int) -> None:
+        """Grow `slot` to `length` cached tokens without releasing it —
+        the chunked-prefill path: each chunk extends the slot by one
+        page-aligned chunk BEFORE the chunk cell writes through the block
+        table, so the pages it scatters into are always live."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if length <= self.lengths[slot]:
+            return
         self.lengths[slot] = length
         self._alloc_pages(slot, self._page_of(length - 1) + 1)
         if self.cfg.policy == "hotness":
             self.rebalance()
 
+    def ensure_tail_pages(self, active: np.ndarray) -> None:
+        """Allocate the write-position page of every active slot — called
+        by the engine BEFORE the paged decode cell so the block table it
+        passes already names a physical page for the token about to be
+        written (`step` allocates lazily otherwise, which is too late for
+        a layout that is real on device)."""
+        for s in np.nonzero(np.asarray(active, dtype=bool))[0]:
+            p = self._page_of(int(self.lengths[s]))
+            if p < self.n_pages and not self.valid[s, p]:
+                self._alloc_pages(int(s), p + 1)
+
     def release(self, slot: int) -> None:
+        if self.valid[slot].any():
+            self._bt_cache = None
         for p in np.nonzero(self.valid[slot])[0]:
             self._free_phys.append(int(self.phys[slot, p]))
         self.phys[slot, :] = -1
@@ -237,10 +268,28 @@ class KVPager:
 
     def block_table(self) -> np.ndarray:
         """(n_slots, n_pages) logical->physical page map for the paged
-        decode kernel (`kernels.decode_attention.ops.paged_decode_mha`).
-        Invalid entries are 0 — the kernel's length mask keeps them out
-        of the math (ops clamps identically)."""
-        return np.where(self.valid, self.phys, 0).astype(np.int32)
+        kernels (`kernels.decode_attention.ops.paged_decode_mha`,
+        `kernels.flash_attention.ops.paged_prefill_mha`) AND the engine's
+        paged cache-write cells. Invalid entries are 0 — the kernels'
+        length/causal masks keep them out of the math (ops clamps
+        identically). The returned array is cached until the mapping
+        changes (steady-state decode re-reads the same object, so the
+        engine can skip the device upload by identity); treat it as
+        read-only."""
+        if self._bt_cache is None:
+            self._bt_cache = np.where(self.valid, self.phys, 0).astype(
+                np.int32)
+        return self._bt_cache
+
+    def phys_tiers(self) -> np.ndarray:
+        """(n_slots * n_pages,) tier tag of every PHYSICAL page: LOCAL /
+        POOL for owned pages, -1 for free-list pages. The physical-pool
+        view of the tier split — what the byte accounting charges and
+        what a memory-kind-capable backend would pin each page to."""
+        out = np.full(self.n_slots * self.n_pages, -1, dtype=np.int8)
+        s, p = np.nonzero(self.valid)
+        out[self.phys[s, p]] = self.tier[s, p]
+        return out
 
     # ------------------------------------------------------ access model
     def _page_weights(self) -> np.ndarray:

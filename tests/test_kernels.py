@@ -10,9 +10,11 @@ from repro.kernels.decode_attention import ops as dops
 from repro.kernels.decode_attention import ref as dref
 from repro.kernels.decode_attention.decode_attention import flash_decode
 from repro.kernels.decode_attention.paged import paged_flash_decode
+from repro.kernels.flash_attention import ops as fops
 from repro.kernels.flash_attention import ref as fref
 from repro.kernels.flash_attention.chunked import mha_chunked
 from repro.kernels.flash_attention.flash_attention import flash_mha
+from repro.kernels.flash_attention.paged_prefill import paged_prefill_flash
 from repro.kernels.lbench import ref as lref
 from repro.kernels.lbench.lbench import lbench_pallas
 from repro.kernels.ssd_scan import ref as sref
@@ -324,3 +326,97 @@ def test_ssd_decode_matches_scan():
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
                                atol=1e-5)
+
+
+# ----------------------------------------------- paged chunked prefill
+@pytest.mark.parametrize("page", [16, 64, 128])
+@pytest.mark.parametrize(
+    "B,S,C,H,KV,D,dtype",
+    [
+        (2, 512, 128, 8, 2, 64, jnp.float32),
+        (1, 256, 128, 4, 4, 128, jnp.float32),
+        (2, 512, 128, 8, 2, 64, jnp.bfloat16),
+    ],
+)
+def test_paged_prefill_matches_dense_ref(page, B, S, C, H, KV, D, dtype):
+    """The chunked paged-prefill kernel == dense causal attention with a
+    kv offset, across page sizes {16, 64, 128}, chunk offsets and
+    scattered physical pages."""
+    ks = jax.random.split(jax.random.PRNGKey(S + D + page + 1), 3)
+    q = _rand(ks[0], (B, C, H, D), dtype)
+    k = _rand(ks[1], (B, S, KV, D), dtype)
+    v = _rand(ks[2], (B, S, KV, D), dtype)
+    kp, vp, bt = _paged_layout(k, v, page, seed=page + 1)
+    tol = TOL[dtype]
+    for c0 in (0, C, S - C):                  # first / middle / last chunk
+        r = fref.mha(q, k[:, : c0 + C], v[:, : c0 + C], causal=True,
+                     kv_offset=c0)
+        c0v = jnp.full((B,), c0, jnp.int32)
+        p = paged_prefill_flash(q, kp, vp, bt, c0v, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(p, np.float32), np.asarray(r, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+def test_paged_prefill_ops_clamps_frontier_entries():
+    """ops.paged_prefill_mha must tolerate garbage block-table entries
+    above the causal frontier (pages the prompt has not reached yet)."""
+    B, S, C, H, KV, D, page = 2, 256, 64, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (B, C, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    kp, vp, bt = _paged_layout(k, v, page)
+    c0 = 64
+    bt = np.asarray(bt).copy()
+    live = np.arange(bt.shape[1])[None, :] * page < c0 + C
+    bt[np.broadcast_to(~live, bt.shape)] = kp.shape[0] + 10_000
+    r = fref.mha(q, k[:, : c0 + C], v[:, : c0 + C], causal=True,
+                 kv_offset=c0)
+    for impl in ("reference", "interpret"):
+        out = fops.paged_prefill_mha(q, kp, vp, jnp.asarray(bt),
+                                     jnp.full((B,), c0, jnp.int32),
+                                     impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_chunk_walk_over_live_pager_table():
+    """Chunked prefill against a LIVE KVPager block table: extend() the
+    slot one chunk at a time, scatter each chunk's K/V through the
+    table (`models.attention.paged_chunk_insert`), and every chunk's
+    paged attention must equal the dense causal reference over the
+    prefix — the end-to-end write-then-gather loop the serving engine
+    runs."""
+    from repro.models.attention import paged_chunk_insert
+    from repro.serving.kv_pager import KVPager, PagerConfig
+
+    B, H, KV, D = 1, 4, 2, 64
+    page_tokens, C, S = 16, 32, 128
+    pager = KVPager(
+        2, S, bytes_per_token=2.0 * KV * D * 2, resident_bytes=0.0,
+        pcfg=PagerConfig(page_tokens=page_tokens, policy="none"),
+    )
+    pager.admit(1, 40)                       # co-resident slot scatters
+    slot = 0
+    ks = jax.random.split(jax.random.PRNGKey(21), 3)
+    k = _rand(ks[0], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    n_phys = 2 * (S // page_tokens)
+    kp = jnp.zeros((n_phys, page_tokens, KV, D), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    for c0 in range(0, S, C):
+        pager.extend(slot, c0 + C)
+        row = jnp.asarray(pager.block_table()[slot][None, :])
+        kp = paged_chunk_insert(kp, k[:, c0:c0 + C], c0, row, page_tokens)
+        vp = paged_chunk_insert(vp, v[:, c0:c0 + C], c0, row, page_tokens)
+        q = _rand(jax.random.fold_in(ks[2], c0), (B, C, H, D), jnp.float32)
+        r = fref.mha(q, k[:, : c0 + C], v[:, : c0 + C], causal=True,
+                     kv_offset=c0)
+        for impl in ("reference", "interpret"):
+            out = fops.paged_prefill_mha(q, kp, vp, row,
+                                         jnp.full((B,), c0, jnp.int32),
+                                         impl=impl)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                       rtol=2e-5, atol=2e-5)

@@ -259,3 +259,55 @@ def test_excess_feedback_inflates_pool_traffic():
     out = with_prefetch_excess(prof, 500.0)
     assert sum(a.traffic for a in out) == 1500
     assert with_prefetch_excess(prof, 0.0) == prof
+
+
+# ------------------------------------------------------------------ GHB
+def test_ghb_learns_second_order_delta_pattern():
+    """An alternating +1/+3 delta walk defeats the single-stride
+    confirmer (it never sees the same stride twice in a row) but is a
+    period-2 delta chain the GHB's two-delta index learns exactly."""
+    steps, page = [], 100
+    for i in range(96):
+        page += 1 if i % 2 == 0 else 3
+        steps.append([page])
+    ghb = _run(steps, make_predictor("ghb"))
+    stride = _run(steps, make_predictor("stride"))
+    assert ghb.accuracy > 0.85
+    assert ghb.coverage > 0.8
+    assert stride.coverage < 0.2          # stride never confirms
+    assert ghb.remote_accesses < stride.remote_accesses
+
+
+def test_ghb_runs_delta_chain_deep():
+    """predict(degree) replays the learned chain ahead, not just one
+    step: on a constant stride the GHB covers like the stride
+    prefetcher despite its second-order index."""
+    steps = [[7 * i] for i in range(64)]
+    r = _run(steps, make_predictor("ghb"), degree=4)
+    assert r.accuracy > 0.85
+    assert r.coverage > 0.8
+
+
+def test_ghb_in_zoo_sweep_and_pager():
+    """The GHB rides the shared protocol end-to-end: evaluate_zoo scores
+    it by default and the serving pager accepts it as a page-in
+    predictor."""
+    from repro.serving import KVPager, PagerConfig
+
+    t = _trace([[10 * i, 10 * i + 1] for i in range(48)], n_pages=1024)
+    reports = evaluate_zoo(
+        t, PrefetchConfig(local_pages=16, bw_pages_per_step=8, degree=4)
+    )
+    assert any(r.predictor == "ghb" for r in reports)
+    pcfg = PagerConfig(page_tokens=8, local_budget_bytes=4 * 8 * 100.0,
+                       policy="hotness", hot_window=16, cold_touch=0.1,
+                       prefetch="ghb", prefetch_degree=8)
+    p = KVPager(2, 400, bytes_per_token=100.0, resident_bytes=0.0,
+                pcfg=pcfg)
+    p.admit(0, 256)
+    p.admit(1, 256)
+    for _ in range(120):
+        p.step(np.array([True, True]))
+    c = p.counters()
+    assert c["prefetch_useful"] > 0
+    assert c["demand_share"] < 1.0

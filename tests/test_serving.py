@@ -461,3 +461,255 @@ def test_engine_long_context_pager_beats_static():
     assert hot_toks == st_toks             # placement never changes tokens
     assert hot.steps == st.steps           # equal schedule -> equal tok/s
     assert hot.pager["remote_share"] < st.pager["remote_share"]
+
+
+# ---------------------------------------------- paged physical runtime
+def test_pager_phys_tiers_partitions_pool():
+    p = _pager("hotness")
+    p.admit(0, 48)
+    p.admit(1, 24)
+    tiers = p.phys_tiers()
+    assert tiers.shape == (p.n_slots * p.n_pages,)
+    owned = int(p.valid.sum())
+    assert int((tiers >= 0).sum()) == owned
+    assert int((tiers == -1).sum()) == len(p._free_phys)
+    # the tier tags match the per-(slot,page) accounting view exactly
+    for s, pg in zip(*np.nonzero(p.valid)):
+        assert tiers[p.phys[s, pg]] == p.tier[s, pg]
+
+
+def _pager_invariants(p):
+    """Free-list / block-table consistency under churn."""
+    owned = p.phys[p.valid]
+    assert (owned >= 0).all()
+    assert len(set(owned.tolist())) == len(owned)         # unique owners
+    free = set(p._free_phys)
+    assert len(free) == len(p._free_phys)                 # no dup frees
+    assert free.isdisjoint(owned.tolist())                # disjoint
+    assert len(free) + len(owned) == p.n_slots * p.n_pages
+    bt = p.block_table()
+    assert (bt[~p.valid] == 0).all()
+    assert (bt[p.valid] == owned).all()
+    assert (p.phys[~p.valid] == -1).all()
+    used = p.local_bytes_used() + p.pool_bytes_used()
+    assert used == pytest.approx(len(owned) * p.page_bytes)
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    churn_ops = st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=4),    # op kind
+            st.integers(min_value=0, max_value=2),    # slot
+            st.integers(min_value=1, max_value=64),   # length
+        ),
+        min_size=1, max_size=60,
+    )
+
+    @given(churn_ops)
+    @settings(max_examples=60, deadline=None)
+    def test_pager_allocator_churn(ops):
+        """Free-list reuse and block-table consistency hold under any
+        randomized admit/release/extend/step/rebalance sequence."""
+        pcfg = PagerConfig(page_tokens=8, local_budget_bytes=4 * 8 * 100.0,
+                           policy="hotness", hot_window=16, cold_touch=0.1)
+        p = KVPager(3, 64, bytes_per_token=100.0, resident_bytes=0.0,
+                    pcfg=pcfg)
+        for kind, slot, length in ops:
+            if kind == 0:
+                p.admit(slot, min(length, p.max_seq))
+            elif kind == 1 and p.valid[slot].any():
+                p.release(slot)
+            elif kind == 2 and p.lengths[slot] > 0:
+                p.extend(slot, min(p.lengths[slot] + length, p.max_seq))
+            elif kind == 3:
+                active = p.lengths > 0
+                # step writes one token per active slot; stay in range
+                active &= p.lengths < p.max_seq
+                p.step(active)
+            else:
+                p.rebalance()
+            _pager_invariants(p)
+except ImportError:  # pragma: no cover - conftest registers a fallback
+    pass
+
+
+def _gather_slot(leaf, bt_row, length):
+    """Dense (nb, length, KV, hd) view of one slot's paged K/V leaf."""
+    nb, _, page, kv, hd = leaf.shape
+    dense = np.asarray(leaf)[:, bt_row]            # (nb, n_pages, page, ..)
+    return dense.reshape(nb, -1, kv, hd)[:, :length]
+
+
+def test_paged_cache_write_parity_with_contiguous():
+    """The refactor's safety net at the BYTES level, not just tokens:
+    after identical admissions and decode steps, gathering the physical
+    page pool through the live block table must reproduce the contiguous
+    engine's cache contents bit-for-bit over every valid token."""
+    cfg = _cfg()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    engines = {}
+    for paged in (False, True):
+        ecfg = EngineConfig(
+            n_slots=2, max_seq=48, prefill_buckets=(16,), page_tokens=8,
+            hot_window=8, local_budget_frac=0.5, admission="greedy",
+            paged=paged,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg, params=params)
+        reqs = _burst(2, cfg.vocab_size, 16, 24, seed=7)
+        eng.run(reqs, max_steps=9)             # stop mid-flight
+        assert eng.batcher.n_active == 2       # slots still live
+        engines[paged] = eng
+    dense_eng, paged_eng = engines[False], engines[True]
+    pager = paged_eng.pager
+    bt = pager.block_table()
+    assert pager.lengths.tolist() == [25, 25]  # 16 prefill + 9 decode
+    for pos, c in dense_eng.caches.items():
+        for key in ("k", "v"):
+            if key not in c:
+                continue
+            dense = np.asarray(c[key])
+            pool = paged_eng.caches[pos][key]
+            for s in range(pager.n_slots):
+                L = int(pager.lengths[s])
+                np.testing.assert_array_equal(
+                    _gather_slot(pool, bt[s], L), dense[:, s, :L],
+                )
+
+
+def test_paged_default_and_block_table_threading():
+    """EngineConfig defaults to the paged layout and the cells carry it."""
+    ecfg = EngineConfig()
+    assert ecfg.paged
+    cfg = _cfg()
+    eng = ServingEngine.build(cfg, CTX, EngineConfig(
+        n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+        admission="greedy",
+    ))
+    assert eng.cells.paged and eng.cells.n_pages == 4
+    for pos, c in eng.caches.items():
+        for key in ("k", "v"):
+            if key in c:
+                assert c[key].shape[1] == 2 * 4          # n_slots*n_pages
+                assert c[key].shape[2] == 8              # page_tokens
+
+
+def test_chunked_prefill_config_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), paged=False,
+            prefill_chunk=8,
+        ))
+    with pytest.raises(ValueError, match="multiple"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            prefill_chunk=4,
+        ))
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine.build(_cfg("mamba2_780m"), CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            prefill_chunk=8,
+        ))
+
+
+def test_engine_chunked_prefill_matches_serialized():
+    """Chunked prefill must be invisible to the sampled tokens and must
+    land its admissions in smaller inter-decode-step gaps (the stall the
+    chunking exists to kill)."""
+    cfg = _cfg()
+    out = {}
+    for chunk in (None, 8):
+        ecfg = EngineConfig(
+            n_slots=2, max_seq=48, prefill_buckets=(32,), page_tokens=8,
+            hot_window=8, local_budget_frac=0.5, admission="greedy",
+            prefill_chunk=chunk,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg)
+        reqs = chat_stream(6, cfg.vocab_size, seed=11,
+                           prompt_buckets=(32,), gen_range=(4, 10),
+                           arrival_rate=3e4)
+        stats = eng.run(reqs)
+        out[chunk] = (stats, [list(r.output) for r in reqs])
+        counts = eng.compile_counts()
+        assert all(v <= 1 for v in counts.values())
+        if chunk:
+            assert "prefill_chunk" in counts
+    (serial, serial_toks), (chunked, chunked_toks) = out[None], out[8]
+    assert serial_toks == chunked_toks
+    # a serialized 32-token prefill is one big gap; chunks of 8 are
+    # several small ones
+    assert chunked.decode_stall.max() < serial.decode_stall.max()
+
+
+# ------------------------------------------ prefetch-excess admission
+def test_admission_tightens_when_excess_rises():
+    """Satellite acceptance: the same projected load that admits under a
+    clean link is rejected once measured prefetch-excess traffic eats
+    into the corridor budget."""
+    topo = tr.v5e_topology()
+    ac = AdmissionController(topo, prior_loi=0.1)
+    assert ac.admit(4)                       # 0.5 < ~0.59 budget
+    ac.EMA = 1.0                             # deterministic: no smoothing
+    ac.observe(n_active=4, t_pool=0.4, dt=1.0, t_excess=0.2)
+    assert ac.per_slot_loi == pytest.approx(0.1)   # load unchanged
+    assert ac.excess_loi == pytest.approx(0.2)
+    assert not ac.admit(4)                   # 0.5 + 0.2 > budget
+    assert ac.blocks == 1
+    # excess decaying back to zero re-opens admission
+    ac.observe(n_active=4, t_pool=0.4, dt=1.0, t_excess=0.0)
+    assert ac.admit(4)
+
+
+def test_engine_feeds_pager_excess_to_admission():
+    """Wiring: a speculative pager predictor's excess bytes must show up
+    in the admission controller's excess LoI."""
+    cfg = _cfg()
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=96, prefill_buckets=(64,), page_tokens=8,
+        hot_window=16, local_budget_frac=0.3, admission="greedy",
+        prefetch="next_line", cold_touch=0.2,
+    )
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    reqs = long_context_stream(3, cfg.vocab_size, seed=2, prompt_bucket=64,
+                               gen_range=(8, 16), arrival_rate=1e9)
+    eng.run(reqs)
+    c = eng.pager.counters()
+    assert c["prefetch_excess_bytes"] > 0     # next_line mispredicts
+    assert eng.admission.excess_loi > 0.0
+
+
+def test_paged_park_position_clears_partial_last_page():
+    """Regression: when page_tokens does not divide max_seq_total, the
+    parked write cursor must land PAST the pool's page-aligned position
+    space — a park inside the last partial logical page passes the
+    page-range guard and corrupts physical page 0 through the freed
+    slot's zeroed block-table row. Uneven generation lengths keep one
+    slot parked while the other decodes, and the paged stream must still
+    match the contiguous engine token-for-token."""
+    cfg = _cfg()
+    S, page = 14, 4                       # n_pages=4: park=14 is IN page 3
+    outs = {}
+    for paged in (False, True):
+        ecfg = EngineConfig(
+            n_slots=2, max_seq=S, prefill_buckets=(8,), page_tokens=page,
+            hot_window=8, local_budget_frac=None, admission="greedy",
+            paged=paged,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg)
+        rng = np.random.default_rng(13)
+        reqs = [
+            Request(request_id=i,
+                    tokens=rng.integers(0, cfg.vocab_size, 8).astype(
+                        np.int32),
+                    max_new_tokens=gen, arrival=0.0)
+            for i, gen in enumerate((2, 6))   # slot 0 parks early
+        ]
+        eng.run(reqs)
+        outs[paged] = [list(r.output) for r in reqs]
+        if paged:
+            assert eng.batcher.park_pos == eng.cells.n_pages * page
+            assert eng.batcher.park_pos > S
+    assert outs[True] == outs[False]

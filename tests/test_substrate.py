@@ -188,7 +188,7 @@ def test_elastic_restore_structure_check(ckpt_dir):
 
 # ------------------------------------------------------------ prefetch
 def test_scan_with_prefetch_matches_plain_scan():
-    from repro.runtime.prefetch import scan_with_prefetch
+    from repro.prefetch.static import scan_with_prefetch
 
     L, d = 6, 16
     ws = jax.random.normal(jax.random.PRNGKey(0), (L, d, d))
@@ -211,7 +211,7 @@ def test_scan_with_prefetch_matches_plain_scan():
 
 
 def test_scan_with_prefetch_jits():
-    from repro.runtime.prefetch import scan_with_prefetch
+    from repro.prefetch.static import scan_with_prefetch
 
     L, d = 4, 8
     stacked = {"w": jnp.ones((L, d, d))}
