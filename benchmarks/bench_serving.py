@@ -14,6 +14,22 @@ paged physical-page-pool cache layout, the engine default):
                     decode steps. The acceptance row asserts chunking
                     cuts the p95 inter-decode-step stall at (near-)equal
                     tokens/s — the prefill-serializes-against-decode fix.
+  serve_int8      — block-quantized pool lane: the fp16-class paged
+                    engine (`pool_dtype="bf16"`) vs the int8 per-page
+                    quantized engine on an identical trace at the SAME
+                    ABSOLUTE local-tier budget (same HBM — the physically
+                    meaningful comparison: int8 shrinks the pooled
+                    footprint, so the same budget keeps far more pages
+                    local AND each remaining pool touch moves ~4x fewer
+                    bytes). The acceptance row asserts remote pool bytes
+                    <= 0.30x of the fp16 lane at >= 0.95x virtual
+                    tokens/s and equal tokens, plus a lockstep
+                    teacher-forced logit-drift probe against the fp
+                    paged caches staying under `INT8_LOGIT_DRIFT`.
+
+Every serving row records `pool_bytes_per_token` (the pager's dtype-aware
+per-cached-token pool footprint, scale arrays included), so the BENCH
+json artifacts track the pool-byte trajectory across PRs.
 
 The long-context lane additionally runs the acceptance comparison of the
 brief: tier-aware pager (`hotness`) vs the no-paging first-touch baseline
@@ -54,8 +70,12 @@ def _engine(ecfg, cfg):
     return ServingEngine.build(cfg, ParallelCtx(remat="none"), ecfg)
 
 
-def _emit_scenario(tag, stats, extra=""):
+def _emit_scenario(tag, stats, engine=None, extra=""):
     s = stats.summary()
+    if engine is not None:
+        s["pool_bytes_per_token"] = engine.pager.bytes_per_token
+        extra = (f" pool_bytes_per_token="
+                 f"{engine.pager.bytes_per_token:.1f}{extra}")
     emit(
         tag, 1e6 * stats.wall_s / max(stats.steps, 1),
         f"tok_s_wall={s['tok_per_s_wall']:.1f} "
@@ -82,7 +102,7 @@ def run_chat(cfg):
     reqs = chat_stream(n, cfg.vocab_size, seed=1, prompt_buckets=(16, 32),
                        gen_range=(8, 24), arrival_rate=3e4)
     stats = engine.run(reqs)
-    return [_emit_scenario("serve_chat", stats)]
+    return [_emit_scenario("serve_chat", stats, engine)]
 
 
 def run_long_context(cfg):
@@ -105,7 +125,7 @@ def run_long_context(cfg):
         stats = engine.run(reqs)
         results[policy] = stats
         rows.append(_emit_scenario(
-            f"serve_long32k_{policy}", stats,
+            f"serve_long32k_{policy}", stats, engine,
             extra=(f" evictions={engine.pager.evictions}"
                    f" promotions={engine.pager.promotions}"),
         ))
@@ -148,7 +168,7 @@ def run_bursty(cfg):
     stats = engine.run(reqs)
     counts = engine.compile_counts()
     steady = all(v <= 1 for v in counts.values())  # 0 = unused bucket
-    return [_emit_scenario("serve_bursty", stats,
+    return [_emit_scenario("serve_bursty", stats, engine,
                            extra=f" steady_state_compiles={steady}")]
 
 
@@ -173,7 +193,7 @@ def run_chunked_prefill(cfg):
         )
         stats = engine.run(reqs)
         results[mode] = stats
-        rows.append(_emit_scenario(f"serve_chunked_{mode}", stats))
+        rows.append(_emit_scenario(f"serve_chunked_{mode}", stats, engine))
 
     ser, chk = results["serial"], results["chunked"]
     stall_ser = ser.summary()["stall_p95_s"]
@@ -211,7 +231,127 @@ def run_chunked_prefill(cfg):
     return rows
 
 
+# documented int8 drift bound for the lockstep logit probe: max abs logit
+# difference, teacher-forced fp vs int8 paged caches over a full decode
+# stream (per-page error <= scale/2 keeps this in the 1e-1 regime on the
+# reduced models; greedy margins are typically wider)
+INT8_LOGIT_DRIFT = 0.5
+
+
+def _logit_drift_probe(cfg, steps=24, page_tokens=16):
+    """Teacher-forced lockstep decode over fp vs int8 paged caches: the
+    SAME token stream feeds both cache dtypes (no greedy cascade), so
+    the max abs logit gap isolates pure quantization drift vs the dense
+    fp oracle path."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.serving.kv_pager import KVPager, PagerConfig
+
+    ctx = ParallelCtx(remat="none")
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    max_seq = -(-steps // page_tokens) * page_tokens
+    pager = KVPager(1, max_seq, bytes_per_token=1.0, resident_bytes=0.0,
+                    pcfg=PagerConfig(page_tokens=page_tokens,
+                                     policy="none"))
+    caches = {
+        dt: M.make_paged_decode_caches(cfg, 1, max_seq, page_tokens,
+                                       pool_dtype=dt)
+        for dt in ("fp", "int8")
+    }
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (steps,), 0, cfg.vocab_size))
+    drift = 0.0
+    for t in range(steps):
+        pager.ensure_tail_pages(np.array([True]))
+        pager.extend(0, t + 1)
+        bt = jnp.asarray(pager.block_table())
+        tok = jnp.asarray(toks[t:t + 1], jnp.int32)
+        tv = jnp.full((1,), t, jnp.int32)
+        logits = {}
+        for dt in ("fp", "int8"):
+            logits[dt], caches[dt] = M.decode_step(
+                params, tok, caches[dt], tv, cfg, ctx,
+                block_table=bt, page_tokens=page_tokens,
+            )
+        drift = max(drift, float(jnp.abs(
+            logits["int8"] - logits["fp"]).max()))
+    return drift
+
+
+def run_int8(cfg):
+    """fp16-class pool vs int8 block-quantized pool on an identical trace
+    at the same ABSOLUTE local-tier budget (see module docstring)."""
+    n = 4 if SMOKE else 8
+    base = dict(
+        n_slots=4, max_seq=192, prefill_buckets=(128,), page_tokens=16,
+        hot_window=32, pager_policy="hotness", admission="greedy",
+    )
+    rows, results, engines = [], {}, {}
+    budget = None
+    for lane, pool_dtype in (("fp16", "bf16"), ("int8", "int8")):
+        ecfg = EngineConfig(
+            **base, pool_dtype=pool_dtype,
+            # 0.3x of the fp16 peak: tight enough that BOTH lanes spill
+            # to the pool tier (the int8 lane's cut must come from
+            # smaller pooled bytes, not from quantization fitting the
+            # whole working set locally)
+            local_budget_frac=0.3 if budget is None else None,
+            local_budget_bytes=budget,
+        )
+        engine = _engine(ecfg, cfg)
+        if budget is None:
+            # the fp16 lane's absolute budget carries over: same HBM
+            budget = engine.pager.budget
+        reqs = long_context_stream(
+            n, cfg.vocab_size, seed=7, prompt_bucket=128,
+            gen_range=(16, 48), arrival_rate=1e9,
+        )
+        stats = engine.run(reqs)
+        results[lane], engines[lane] = stats, engine
+        rows.append(_emit_scenario(f"serve_int8_{lane}", stats, engine))
+
+    fp, i8 = results["fp16"], results["int8"]
+    pool_ratio = i8.pager["pool_bytes"] / max(fp.pager["pool_bytes"], 1e-9)
+    tok_ratio = (i8.summary()["tok_per_s_virtual"]
+                 / max(fp.summary()["tok_per_s_virtual"], 1e-12))
+    bpt_ratio = (engines["int8"].pager.bytes_per_token
+                 / engines["fp16"].pager.bytes_per_token)
+    drift = _logit_drift_probe(cfg)
+    emit(
+        "serve_int8_vs_fp16", 0.0,
+        f"pool_bytes_ratio={pool_ratio:.3f} tok_s_ratio={tok_ratio:.3f} "
+        f"bytes_per_token_ratio={bpt_ratio:.3f} "
+        f"logit_drift={drift:.3e} "
+        f"equal_tokens={i8.tokens == fp.tokens} tokens={i8.tokens}",
+    )
+    rows.append({
+        "tag": "serve_int8_vs_fp16",
+        "pool_bytes_ratio": float(pool_ratio),
+        "tok_s_ratio": float(tok_ratio),
+        "bytes_per_token_ratio": float(bpt_ratio),
+        "logit_drift": float(drift),
+        "equal_tokens": bool(i8.tokens == fp.tokens),
+        "pool_bytes_fp16": float(fp.pager["pool_bytes"]),
+        "pool_bytes_int8": float(i8.pager["pool_bytes"]),
+    })
+    assert i8.tokens == fp.tokens, "lanes must serve equal tokens"
+    assert pool_ratio <= 0.30, (
+        f"int8 pool must move <= 0.30x of the fp16 lane's pool bytes "
+        f"(got {pool_ratio:.3f})"
+    )
+    assert tok_ratio >= 0.95, (
+        f"int8 must hold >= 0.95x virtual tokens/s (got {tok_ratio:.3f})"
+    )
+    assert drift <= INT8_LOGIT_DRIFT, (
+        f"int8 logit drift {drift:.3e} exceeds bound {INT8_LOGIT_DRIFT}"
+    )
+    return rows
+
+
 def run():
     cfg = _cfg()
     return (run_chat(cfg) + run_long_context(cfg) + run_bursty(cfg)
-            + run_chunked_prefill(cfg))
+            + run_chunked_prefill(cfg) + run_int8(cfg))

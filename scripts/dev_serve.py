@@ -11,11 +11,25 @@
    chunks between decode steps. Slot batching, per-slot positions, page
    scatter/gather, tier paging and chunking must all be invisible to the
    sampled tokens.
+3. with `--pool-dtype int8` the engine lanes run over BLOCK-QUANTIZED
+   page pools (per-page int8 payload + (scale, zero) arrays,
+   quantize-on-insert / dequantize-in-kernel). Quantization is lossy by
+   design, so the gate is the documented drift bound rather than
+   equality: at least `INT8_TOKEN_AGREEMENT` of the greedy tokens must
+   match the fp naive stream in lockstep position (greedy divergence
+   cascades, so agreement is dominated by how late the first flip
+   happens; archs without self-attention KV quantize nothing and must
+   stay exact). `--pool-dtype fp` (the default) is the bit-exact safety
+   net and keeps the strict token-for-token gate on all 10 archs.
 
     PYTHONPATH=src python scripts/dev_serve.py [arch ...]
     PYTHONPATH=src python scripts/dev_serve.py --paged --interpret a b
         # the CI paged-engine-parity lane: paged/chunked engines only,
         # pallas kernels in interpret mode
+    PYTHONPATH=src python scripts/dev_serve.py --paged --pool-dtype int8 \
+        --interpret a b
+        # the CI quantized lane: same engines over int8 pools,
+        # drift-bounded token agreement
 """
 
 import dataclasses
@@ -38,6 +52,13 @@ B, S, GEN = 2, 8, 6
 MAXS = S + GEN
 PAGE = 4
 
+# documented int8 drift bound: greedy token agreement vs the fp naive
+# loop, in lockstep position over all B*GEN tokens. Per-page int8 KV
+# error is <= scale/2 (~0.4% of each page's range), which perturbs
+# logits by O(1e-2) — most argmax margins survive that, but a close
+# top-2 pair may flip and the stream diverges from there on.
+INT8_TOKEN_AGREEMENT = 0.5
+
 
 def naive_greedy(cfg, params, prompts, extras):
     """The pre-engine serve loop: batched prefill, scalar-t decode."""
@@ -55,11 +76,13 @@ def naive_greedy(cfg, params, prompts, extras):
     return np.asarray(jnp.stack(out, axis=1))
 
 
-def engine_greedy(cfg, params, prompts, *, paged, chunk=None):
+def engine_greedy(cfg, params, prompts, *, paged, chunk=None,
+                  pool_dtype="fp"):
     ecfg = EngineConfig(
         n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
         page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
         admission="greedy", paged=paged, prefill_chunk=chunk,
+        pool_dtype=pool_dtype,
     )
     engine = ServingEngine.build(cfg, ctx, ecfg, params=params)
     reqs = [
@@ -93,6 +116,11 @@ def main():
     paged_only = "--paged" in args
     if "--interpret" in args:
         kernels.force_backend("interpret")
+    pool_dtype = "fp"
+    if "--pool-dtype" in args:
+        i = args.index("--pool-dtype")
+        pool_dtype = args[i + 1]
+        del args[i:i + 2]
     archs = [a for a in args if not a.startswith("--")]
     archs = archs or configs.list_archs()
     for arch in archs:
@@ -115,11 +143,12 @@ def main():
             tf_ok = err_pre < 2e-2 and err_dec < 2e-2
 
         prompts = np.asarray(toks[:, :S])
-        lanes = [("paged", dict(paged=True))]
+        lanes = [("paged", dict(paged=True, pool_dtype=pool_dtype))]
         if not paged_only:
             lanes.append(("dense", dict(paged=False)))
         if chunked_prefill_supported(cfg):
-            lanes.append(("chunked", dict(paged=True, chunk=PAGE)))
+            lanes.append(("chunked", dict(paged=True, chunk=PAGE,
+                                          pool_dtype=pool_dtype)))
 
         if extras:
             # engine equivalence needs per-request frontend embeds; the
@@ -130,13 +159,21 @@ def main():
         else:
             naive = naive_greedy(cfg, params, jnp.asarray(prompts), {})
 
-        eq_ok, eq_err, compiles = True, 0, 0
+        eq_ok, eq_err, compiles, agree_min = True, 0, 0, 1.0
         for name, kw in lanes:
             eng_out, engine = engine_greedy(cfg, params, prompts, **kw)
             counts = engine.compile_counts()
             compiles += sum(v for v in counts.values() if v > 0)
             if naive is None:
                 eq_ok &= eng_out.shape == (B, GEN)
+                continue
+            agree = float((naive == eng_out).mean())
+            quantized = kw.get("pool_dtype", "fp") == "int8"
+            if quantized:
+                # lossy pool: drift-bounded agreement, not equality
+                agree_min = min(agree_min, agree)
+                eq_ok &= agree >= INT8_TOKEN_AGREEMENT
+                eq_err += int((naive != eng_out).sum())
             else:
                 bad = int((naive != eng_out).sum())
                 eq_ok &= bad == 0
@@ -144,11 +181,14 @@ def main():
         eq_err = "n/a" if naive is None else eq_err
 
         status = "OK " if (tf_ok and eq_ok) else "FAIL"
+        drift = (f" agree_min={agree_min:.2f}"
+                 if pool_dtype == "int8" and naive is not None else "")
         print(
             f"{arch:28s} prefill_err={err_pre:9.2e} "
             f"decode_err={err_dec:9.2e} "
             f"lanes={'+'.join(n for n, _ in lanes)} "
-            f"engine_mismatch={eq_err} compiles={compiles} {status}"
+            f"pool={pool_dtype} "
+            f"engine_mismatch={eq_err}{drift} compiles={compiles} {status}"
         )
         assert status == "OK ", arch
     print("ALL OK")

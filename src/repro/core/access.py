@@ -73,6 +73,36 @@ DECODE_HOT_WINDOW = 4096   # tokens of KV tail read at full rate each step
 DECODE_COLD_TOUCH = 0.05   # effective per-step touch of the cold prefix
 
 
+# --- paged-pool payload dtypes (mirrors models.blocks.POOL_DTYPES) ---
+# int8 pools carry one float32 (scale, zero) pair per (page, KV head) per
+# K and per V — the "k_sz"/"v_sz" leaves — amortized over the page's
+# tokens in the bytes-per-token accounting.
+POOL_PAYLOAD_BYTES = {"bf16": 2, "int8": 1}
+POOL_SZ_BYTES = 8               # float32 (scale, zero)
+
+
+def kv_pool_token_bytes(n_attn_layers: int, kv_heads: int, head_dim: int,
+                        page_tokens: int, pool_dtype: str,
+                        fp_bytes: int = 4) -> float:
+    """Self-attention K/V bytes per cached token under a paged pool of
+    `pool_dtype` — the closed-form twin of the serving engine's
+    cache-tree walk (`serving.engine._kv_bytes_per_token`):
+
+        2 (K and V) * kv_heads * head_dim * payload_bytes * n_layers
+        [+ 2 * kv_heads * 8 / page_tokens * n_layers   when int8]
+
+    `fp_bytes` is the compute dtype's itemsize (the "fp" safety-net pool
+    stores it unchanged). This is what makes the pager, `phys_tiers()`
+    and the admission corridor see the real ~4x pool-byte cut of int8
+    pools instead of pricing fp bytes that never cross the link."""
+    payload = POOL_PAYLOAD_BYTES.get(pool_dtype, fp_bytes)
+    per_tok = 2.0 * kv_heads * head_dim * payload * n_attn_layers
+    if pool_dtype == "int8":
+        per_tok += (2.0 * kv_heads * POOL_SZ_BYTES * n_attn_layers
+                    / page_tokens)
+    return per_tok
+
+
 def decode_cache_split(seq_len: int) -> list[tuple[str, float, float]]:
     """(suffix, byte_fraction, touches) portions of a seq-indexed KV leaf
     for one decode step under the hot-tail/cold-prefix traffic model."""
@@ -164,10 +194,13 @@ def serve_profile(params, caches, cfg: ModelConfig, shape: ShapeConfig,
             b = leaf_bytes(leaf)
             if b == 0:
                 continue
-            # seq-indexed self-attention K/V: hot tail at full rate, cold
-            # prefix at the reduced paged-decode rate (Fig 10 spread); SSM
-            # state / conv tails / cross-KV are read whole every step.
-            if shape.kind == "decode" and re.search(r"(^|/)(k|v)$", name):
+            # seq-indexed self-attention K/V (and an int8 pool's per-page
+            # scale arrays, which ride with their pages): hot tail at full
+            # rate, cold prefix at the reduced paged-decode rate (Fig 10
+            # spread); SSM state / conv tails / cross-KV are read whole
+            # every step.
+            if shape.kind == "decode" and re.search(
+                    r"(^|/)(k|v)(_sz)?$", name):
                 for sfx, frac, touches in decode_cache_split(shape.seq_len):
                     out.append(TensorAccess(
                         f"cache/{name}{sfx}", int(b * frac), touches, "cache"

@@ -31,3 +31,19 @@ def backend() -> str:
         return _FORCED
     platform = jax.default_backend()
     return "pallas" if platform == "tpu" else "reference"
+
+
+def select_impl(impl: str | None = None) -> tuple[str, bool]:
+    """Resolve an op's implementation request to ``(kind, interpret)``.
+
+    ``kind`` is ``"reference"`` (run the pure-jnp oracle) or ``"pallas"``
+    (run the kernel, with ``interpret=True`` when the resolved backend is
+    ``"interpret"``). Every ops.py dispatcher shares this one helper so a
+    new kernel variant never re-copies the backend/interpret boilerplate.
+    """
+    impl = impl or backend()
+    if impl == "reference":
+        return "reference", False
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown kernel impl {impl!r}")
+    return "pallas", impl == "interpret"

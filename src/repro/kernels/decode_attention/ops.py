@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import kernels
+from repro.kernels import select_impl
 from repro.kernels.decode_attention import ref
 
 
@@ -23,14 +23,26 @@ def decode_mha(
     impl: Optional[str] = None,
 ):
     """q (B,H,D) vs cache k/v (B,S,KV,D) with valid `length`."""
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         return ref.decode_mha(q, k, v, length, scale=scale)
     from repro.kernels.decode_attention import decode_attention as da
 
-    return da.flash_decode(
-        q, k, v, length, scale=scale, interpret=(impl == "interpret")
+    return da.flash_decode(q, k, v, length, scale=scale,
+                           interpret=interpret)
+
+
+def clamp_dead_entries(block_tables, n_pages, page, frontier):
+    """Clamp block-table entries at/past the per-sequence `frontier`
+    (valid token count for decode; the causal frontier c0+C for chunked
+    prefill — `flash_attention.ops` shares this helper) to physical page
+    0 so the gather stays in bounds on every backend; the kernels' masks
+    keep them out of the math."""
+    live = (
+        jnp.arange(n_pages, dtype=jnp.int32)[None, :] * page
+        < frontier[:, None]
     )
+    return jnp.where(live, jnp.asarray(block_tables, jnp.int32), 0)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "impl"))
@@ -41,6 +53,8 @@ def paged_decode_mha(
     block_tables,
     lengths,
     *,
+    k_sz=None,
+    v_sz=None,
     scale: Optional[float] = None,
     impl: Optional[str] = None,
 ):
@@ -48,24 +62,26 @@ def paged_decode_mha(
     pool + (B, n_logical) block tables (`KVPager.block_table` layout) with
     per-sequence valid `lengths`. Block-table entries past the valid
     length are clamped to physical page 0 so the gather stays in bounds
-    on every backend; the length mask keeps them out of the math."""
+    on every backend; the length mask keeps them out of the math.
+
+    `k_sz`/`v_sz` (P_phys, KV, 2) float32 switch the pool to int8 block
+    quantization (`repro.kernels.quant`): the payload is int8 and the
+    kernel (or oracle) dequantizes each gathered page with its per-page
+    (scale, zero) pair."""
     n_pages = block_tables.shape[1]
     page = k_pages.shape[1]
     lengths = jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32), (q.shape[0],)
     )
-    live = (
-        jnp.arange(n_pages, dtype=jnp.int32)[None, :] * page
-        < lengths[:, None]
-    )
-    block_tables = jnp.where(live, jnp.asarray(block_tables, jnp.int32), 0)
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    block_tables = clamp_dead_entries(block_tables, n_pages, page, lengths)
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         return ref.paged_decode_mha(q, k_pages, v_pages, block_tables,
-                                    lengths, scale=scale)
+                                    lengths, k_sz=k_sz, v_sz=v_sz,
+                                    scale=scale)
     from repro.kernels.decode_attention import paged as pg
 
     return pg.paged_flash_decode(
-        q, k_pages, v_pages, block_tables, lengths, scale=scale,
-        interpret=(impl == "interpret"),
+        q, k_pages, v_pages, block_tables, lengths, k_sz=k_sz, v_sz=v_sz,
+        scale=scale, interpret=interpret,
     )

@@ -12,6 +12,14 @@ previous page's flash update is still computing — the same
 fetch-one-page-ahead overlap the prefetch subsystem models at the tier
 level, here done by Mosaic's double-buffered pipeline at the VMEM level.
 
+Block-quantized pools (`repro.kernels.quant`): with int8 page payloads the
+per-page float32 (scale, zero) arrays ride the SAME scalar-prefetch
+channel next to the block table, and the kernel applies the dequant
+epilogue `q * scale + zero` right after each page's gather — the fp
+values never exist in HBM, only in the VMEM tile the flash update is
+about to consume, so the pool-link bytes are the int8 payload plus the
+per-page scalars and nothing else.
+
 Grid (B, H, n_logical_pages); the page dimension is sequential
 ("arbitrary") so the online-softmax accumulators live in VMEM scratch
 across iterations, exactly like the dense `decode_attention.py` kernel.
@@ -32,8 +40,26 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc,
-            *, page: int, scale: float, n_pages: int):
+def _flash_update(s, v, acc, m_sc, l_sc):
+    """One page's online-softmax update of the (1, D) accumulator.
+    s: (page,) masked logits; v: (page, D) float32 values."""
+    m_prev = m_sc[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[0] = l_sc[0] * alpha + p.sum()
+    m_sc[0] = m_new
+    acc[...] = acc[...] * alpha + (p[:, None] * v).sum(axis=0)[None, :]
+
+
+def _kernel(*refs, page: int, scale: float, n_pages: int, rep: int,
+            quantized: bool):
+    if quantized:
+        (bt_ref, len_ref, ksz_ref, vsz_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
+    else:
+        (bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -46,19 +72,19 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc,
     q = q_ref[0, 0, :].astype(jnp.float32)            # (D,)
     k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        # fused dequant epilogue: the page's (scale, zero) scalars sit in
+        # SMEM next to the block table entry that fetched it
+        pid = bt_ref[b, pi]
+        kvh = pl.program_id(1) // rep
+        k = k * ksz_ref[pid, kvh, 0] + ksz_ref[pid, kvh, 1]
+        v = v * vsz_ref[pid, kvh, 0] + vsz_ref[pid, kvh, 1]
 
     s = (k @ q) * scale                               # (page,)
     pos = pi * page + jax.lax.iota(jnp.int32, page)   # logical positions
     valid = pos < len_ref[b]
     s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_sc[0]
-    m_new = jnp.maximum(m_prev, s.max())
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_sc[0] = l_sc[0] * alpha + p.sum()
-    m_sc[0] = m_new
-    acc[...] = acc[...] * alpha + (p[:, None] * v).sum(axis=0)[None, :]
+    _flash_update(s, v, acc, m_sc, l_sc)
 
     @pl.when(pi == n_pages - 1)
     def _done():
@@ -69,53 +95,62 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc,
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
-                       scale=None, interpret: bool = False):
+                       k_sz=None, v_sz=None, scale=None,
+                       interpret: bool = False):
     """q (B,H,D) vs paged cache k/v (P_phys, page, KV, D) through
     block_tables (B, n_logical_pages) int32 physical-page ids; `lengths`
     (B,) valid token counts. Logical page `i` of sequence `b` holds
     tokens [i*page, (i+1)*page) and lives at physical page
     `block_tables[b, i]`. Entries past the valid length must be in
-    [0, P_phys) — use ops.paged_decode_mha, which clamps."""
+    [0, P_phys) — use ops.paged_decode_mha, which clamps.
+
+    With `k_sz`/`v_sz` (P_phys, KV, 2) float32 per-page (scale, zero)
+    arrays, the pool payload is int8 and the kernel dequantizes each
+    gathered page in the epilogue (`repro.kernels.quant` layout)."""
     from jax.experimental.pallas import tpu as pltpu
 
     B, H, D = q.shape
     _, page, KV, _ = k_pages.shape
     n_pages = block_tables.shape[1]
     rep = H // KV
+    quantized = k_sz is not None
     scale = scale if scale is not None else D ** -0.5
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     block_tables = jnp.asarray(block_tables, jnp.int32)
 
+    page_spec = pl.BlockSpec(
+        (1, page, 1, D),
+        (lambda b, h, pi, bt, ln, *sz, rep=rep: (bt[b, pi], 0, h // rep, 0)),
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                   # block tables + lengths
+        # block tables + lengths (+ per-page k/v (scale, zero) when int8)
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, H, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, D), lambda b, h, pi, bt, ln: (b, h, 0)),
-            pl.BlockSpec(
-                (1, page, 1, D),
-                lambda b, h, pi, bt, ln, rep=rep: (bt[b, pi], 0, h // rep,
-                                                   0),
-            ),
-            pl.BlockSpec(
-                (1, page, 1, D),
-                lambda b, h, pi, bt, ln, rep=rep: (bt[b, pi], 0, h // rep,
-                                                   0),
-            ),
+            pl.BlockSpec((1, 1, D),
+                         lambda b, h, pi, bt, ln, *sz: (b, h, 0)),
+            page_spec,
+            page_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, D),
-                               lambda b, h, pi, bt, ln: (b, h, 0)),
+                               lambda b, h, pi, bt, ln, *sz: (b, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, D), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
     )
+    scalars = (block_tables, lengths)
+    if quantized:
+        scalars += (jnp.asarray(k_sz, jnp.float32),
+                    jnp.asarray(v_sz, jnp.float32))
     return pl.pallas_call(
-        functools.partial(_kernel, page=page, scale=scale, n_pages=n_pages),
+        functools.partial(_kernel, page=page, scale=scale, n_pages=n_pages,
+                          rep=rep, quantized=quantized),
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ) if not interpret else None,
-    )(block_tables, lengths, q, k_pages, v_pages)
+    )(*scalars, q, k_pages, v_pages)

@@ -25,11 +25,32 @@ def gather_pages(pages: jnp.ndarray, block_tables) -> jnp.ndarray:
     return g.reshape(B, n * page, KV, D)
 
 
+def gather_pages_q8(pages: jnp.ndarray, sz: jnp.ndarray, block_tables,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """`gather_pages` for a block-quantized pool: int8 payload
+    (P_phys, page, KV, D) plus per-page (scale, zero) ``sz``
+    (P_phys, KV, 2) float32 (`repro.kernels.quant` layout), dequantized
+    to a dense (B, S, KV, D) cache."""
+    from repro.kernels import quant
+
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    g = pages[block_tables]                 # (B, n_logical, page, KV, D)
+    s = sz[block_tables]                    # (B, n_logical, KV, 2)
+    d = quant.dequantize_pages(g, s, dtype=dtype)
+    B, n, page, KV, D = d.shape
+    return d.reshape(B, n * page, KV, D)
+
+
 def paged_decode_mha(q, k_pages, v_pages, block_tables, lengths, *,
-                     scale=None) -> jnp.ndarray:
-    """Paged oracle: gather to dense, then the dense oracle."""
-    k = gather_pages(k_pages, block_tables)
-    v = gather_pages(v_pages, block_tables)
+                     k_sz=None, v_sz=None, scale=None) -> jnp.ndarray:
+    """Paged oracle: gather to dense (dequantizing int8 pools through the
+    per-page (scale, zero) arrays when given), then the dense oracle."""
+    if k_sz is not None:
+        k = gather_pages_q8(k_pages, k_sz, block_tables, dtype=q.dtype)
+        v = gather_pages_q8(v_pages, v_sz, block_tables, dtype=q.dtype)
+    else:
+        k = gather_pages(k_pages, block_tables)
+        v = gather_pages(v_pages, block_tables)
     return decode_mha(q, k, v, lengths, scale=scale)
 
 

@@ -1,5 +1,18 @@
 """Public attention ops (dense prefill + paged chunked prefill).
-Dispatches pallas / interpret / reference."""
+Dispatches pallas / interpret / reference via `kernels.select_impl`.
+
+The paged chunked-prefill surface has two tiers:
+
+* `paged_prefill_mha` — gather-only attention over a pool whose chunk
+  K/V was already scattered (the PR-4 contract; the parity oracle).
+* `paged_prefill_insert_mha` / `paged_prefill_insert_mha_q8` — the FUSED
+  ops: the chunk's K/V (int8: pre-quantized payload + (scale, zero)
+  rows) goes in as an operand and comes back inside the updated pool
+  arrays, written by the kernel through `input_output_aliases`. On the
+  reference backend the same ops run the unfused scatter-then-attend
+  oracle, so either dispatch target satisfies the one-call contract the
+  serving chunk cell is built on.
+"""
 
 from __future__ import annotations
 
@@ -9,7 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import kernels
+from repro.kernels import select_impl
+from repro.kernels.decode_attention.ops import clamp_dead_entries
 from repro.kernels.flash_attention import ref
 
 
@@ -27,8 +41,8 @@ def mha(
     impl: Optional[str] = None,
 ):
     """Multi-head (GQA) attention: q (B,Sq,H,D), k/v (B,Skv,KV,D)."""
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         if q.shape[1] * k.shape[1] <= 256 * 256:
             return ref.mha(
                 q, k, v, causal=causal, scale=scale, kv_offset=kv_offset
@@ -47,8 +61,16 @@ def mha(
         causal=causal,
         scale=scale,
         kv_offset=kv_offset,
-        interpret=(impl == "interpret"),
+        interpret=interpret,
     )
+
+
+def _clamp_frontier(block_tables, n_pages, page, c0, C):
+    """Clamp block-table entries above the causal frontier c0+C to
+    physical page 0 (shared in-bounds-gather invariant:
+    `decode_attention.ops.clamp_dead_entries`); the causal mask keeps
+    them out of the math."""
+    return clamp_dead_entries(block_tables, n_pages, page, c0 + C)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "impl"))
@@ -59,6 +81,8 @@ def paged_prefill_mha(
     block_tables,
     c0,
     *,
+    k_sz=None,
+    v_sz=None,
     scale: Optional[float] = None,
     impl: Optional[str] = None,
 ):
@@ -66,27 +90,104 @@ def paged_prefill_mha(
     at absolute positions [c0, c0+C) — against k/v (P_phys, page, KV, D)
     physical page pool + (B, n_logical) block tables (`KVPager.
     block_table` layout), causal. The chunk's own K/V must already be
-    written into the pool (see `models.attention.paged_chunk_insert`).
-    `c0` (B,) may be traced. Block-table entries above the causal
-    frontier are clamped to physical page 0 so the gather stays in
-    bounds on every backend; the causal mask keeps them out of the
-    math."""
+    written into the pool (see `paged_prefill_insert_mha` for the fused
+    write+attend op). `c0` (B,) may be traced. `k_sz`/`v_sz`
+    (P_phys, KV, 2) float32 switch the pool to int8 block quantization
+    with the dequant epilogue on the gather side."""
     B, C = q.shape[0], q.shape[1]
     n_pages = block_tables.shape[1]
     page = k_pages.shape[1]
     c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
-    live = (
-        jnp.arange(n_pages, dtype=jnp.int32)[None, :] * page
-        < (c0 + C)[:, None]
-    )
-    block_tables = jnp.where(live, jnp.asarray(block_tables, jnp.int32), 0)
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    block_tables = _clamp_frontier(block_tables, n_pages, page, c0, C)
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         return ref.paged_prefill_mha(q, k_pages, v_pages, block_tables,
-                                     c0, scale=scale)
+                                     c0, k_sz=k_sz, v_sz=v_sz, scale=scale)
     from repro.kernels.flash_attention import paged_prefill as pp
 
     return pp.paged_prefill_flash(
-        q, k_pages, v_pages, block_tables, c0, scale=scale,
-        interpret=(impl == "interpret"),
+        q, k_pages, v_pages, block_tables, c0, k_sz=k_sz, v_sz=v_sz,
+        scale=scale, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_prefill_insert_mha(
+    q,
+    k_pages,
+    v_pages,
+    k_new,
+    v_new,
+    block_tables,
+    c0,
+    *,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """FUSED chunk insert + attention (fp pools): write the chunk's K/V
+    (B, C, KV, D) into the pool at the block table's pages AND flash-
+    attend the chunk queries in one pass. Returns (o, k_pages, v_pages).
+    On the pallas/interpret backends the write happens inside the kernel
+    via `input_output_aliases` (zero standalone scatters); the reference
+    backend runs the unfused scatter-then-attend oracle. C and c0 must be
+    page-aligned and the chunk's block-table entries live."""
+    B, C = q.shape[0], q.shape[1]
+    n_pages = block_tables.shape[1]
+    page = k_pages.shape[1]
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    block_tables = _clamp_frontier(block_tables, n_pages, page, c0, C)
+    # pre-cast so the in-chunk attention sees exactly the stored values
+    k_new = k_new.astype(k_pages.dtype)
+    v_new = v_new.astype(v_pages.dtype)
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
+        return ref.paged_prefill_insert_mha(
+            q, k_pages, v_pages, k_new, v_new, block_tables, c0,
+            scale=scale)
+    from repro.kernels.flash_attention import paged_prefill as pp
+
+    return pp.paged_prefill_insert_flash(
+        q, k_pages, v_pages, k_new, v_new, block_tables, c0,
+        scale=scale, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_prefill_insert_mha_q8(
+    q,
+    k_pages,
+    v_pages,
+    k_sz,
+    v_sz,
+    k8_new,
+    v8_new,
+    ksz_new,
+    vsz_new,
+    block_tables,
+    c0,
+    *,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """FUSED chunk insert + attention for int8 pools: the pre-quantized
+    chunk payload (B, C, KV, D) int8 and its per-page (scale, zero) rows
+    (B, C//page, KV, 2) land in the pool while the chunk attends —
+    previous pages dequantize through `k_sz`/`v_sz`, the chunk's own
+    pages through the fresh rows. Returns
+    (o, k_pages, v_pages, k_sz, v_sz)."""
+    B, C = q.shape[0], q.shape[1]
+    n_pages = block_tables.shape[1]
+    page = k_pages.shape[1]
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    block_tables = _clamp_frontier(block_tables, n_pages, page, c0, C)
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
+        return ref.paged_prefill_insert_mha_q8(
+            q, k_pages, v_pages, k_sz, v_sz, k8_new, v8_new, ksz_new,
+            vsz_new, block_tables, c0, scale=scale)
+    from repro.kernels.flash_attention import paged_prefill as pp
+
+    return pp.paged_prefill_insert_flash_q8(
+        q, k_pages, v_pages, k_sz, v_sz, k8_new, v8_new, ksz_new, vsz_new,
+        block_tables, c0, scale=scale, interpret=interpret,
     )

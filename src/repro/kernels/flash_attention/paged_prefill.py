@@ -1,10 +1,36 @@
-"""Paged chunked-prefill Pallas kernel: a fixed-size chunk of C prompt
+"""Paged chunked-prefill Pallas kernels: a fixed-size chunk of C prompt
 tokens attends causally to everything already written to a KV cache laid
 out as a physical page pool, gathered per logical page through a
 per-sequence block table — the prefill-side twin of
 `kernels/decode_attention/paged.py`, and the kernel the serving engine's
 chunked prefill rides so a long prompt never serializes against in-flight
 decode for more than one chunk.
+
+Two entry points:
+
+* `paged_prefill_flash` — gather-only attention: the chunk's K/V must
+  already be in the pool (the PR-4 contract; kept as the parity oracle
+  and for callers that scatter separately).
+* `paged_prefill_insert_flash` — the FUSED fast path: the chunk's K/V
+  tiles are INPUTS, the pool arrays are aliased input->output
+  (`input_output_aliases`), and the kernel writes each chunk page into
+  the pool while computing the chunk's attention in the same pass. The
+  separate jnp page-scatter op — one full extra read+write of the
+  chunk's K/V through HBM — disappears; non-chunk pages survive
+  untouched because the output buffer IS the input buffer. Grid steps
+  below the chunk re-write the chunk's first page with identical data
+  (index maps clamp into the chunk's page range), so the write is
+  idempotent; the H grid dimension is sequential ("arbitrary") in the
+  fused kernels because GQA query heads of one KV head target the same
+  output page block.
+
+Block-quantized pools (`repro.kernels.quant`): int8 page payloads with
+per-page float32 (scale, zero) pairs. On the gather side the previous
+pages' (scale, zero) arrays ride the scalar-prefetch channel next to the
+block table and the dequant epilogue runs right after each page's DMA; on
+the insert side the fused kernel writes the chunk's pre-quantized int8
+tiles AND their (scale, zero) rows through the same aliasing, so a
+quantized chunked prefill also issues zero standalone scatters.
 
 The block tables and the chunk's start position ride the scalar-prefetch
 channel (`pltpu.PrefetchScalarGridSpec`): both are resident in SMEM before
@@ -19,13 +45,10 @@ Grid (B, H, n_logical_pages); the page dimension is sequential
 scratch across pages. Pages entirely above the causal frontier
 (`page_start > c0 + C - 1`) are skipped via `pl.when` — the same
 fully-masked-tile elision the dense flash kernel does for the causal
-upper triangle. The chunk's own K/V must already be in the pool (the
-paged cache-write path in `models/attention.py` scatters it through the
-block table before calling this), so queries attend to their own chunk
-through the same gather as the prefix — one code path, no concat.
-Block-table entries past the frontier must still name a real physical
-page (ops.py clamps them to 0); the causal mask keeps them out of the
-math.
+upper triangle. Block-table entries past the frontier must still name a
+real physical page (ops.py clamps them to 0); the causal mask keeps them
+out of the math. `c0` and C must be page-aligned in the fused kernels
+(the engine enforces `prefill_chunk % page_tokens == 0`).
 """
 
 from __future__ import annotations
@@ -39,9 +62,52 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, c0_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
-            page: int, chunk: int, scale: float, n_pages: int):
+def _tile_update(q, k, v, c0, pi, *, page: int, chunk: int, scale: float,
+                 acc, m_sc, l_sc):
+    """One page's causal online-softmax update of the (C, D) accumulator.
+    q: (C, D), k/v: (page, D), all float32."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # (C, page)
+    qpos = c0 + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+    kpos = pi * page + jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, page), 1
+    )
+    s = jnp.where(qpos >= kpos, s, NEG_INF)
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_sc[...] = m_new
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _finalize(o_ref, acc, l_sc, pi, n_pages):
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l_sc[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _gather_kernel(*refs, page: int, chunk: int, scale: float,
+                   n_pages: int, rep: int, quantized: bool):
+    """Attention only; the chunk's K/V is already in the pool."""
+    if quantized:
+        (bt_ref, c0_ref, ksz_ref, vsz_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
+    else:
+        (bt_ref, c0_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
     b = pl.program_id(0)
+    # program_id must be read at body top level (pl.when bodies lower
+    # through lax.cond, outside the interpreter's grid context)
+    kvh = pl.program_id(1) // rep
     pi = pl.program_id(2)
 
     @pl.when(pi == 0)
@@ -58,84 +124,317 @@ def _kernel(bt_ref, c0_ref, q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
         q = q_ref[0, :, 0, :].astype(jnp.float32)      # (C, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ) * scale                                      # (C, page)
-        qpos = c0 + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
-        kpos = pi * page + jax.lax.broadcasted_iota(
-            jnp.int32, (chunk, page), 1
-        )
-        s = jnp.where(qpos >= kpos, s, NEG_INF)
-        m_prev = m_sc[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
-        m_sc[...] = m_new
-        acc[...] = acc[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        if quantized:
+            pid = bt_ref[b, pi]
+            k = k * ksz_ref[pid, kvh, 0] + ksz_ref[pid, kvh, 1]
+            v = v * vsz_ref[pid, kvh, 0] + vsz_ref[pid, kvh, 1]
+        _tile_update(q, k, v, c0, pi, page=page, chunk=chunk, scale=scale,
+                     acc=acc, m_sc=m_sc, l_sc=l_sc)
 
-    @pl.when(pi == n_pages - 1)
-    def _done():
-        o_ref[0, :, 0, :] = (
-            acc[...] / jnp.maximum(l_sc[...], 1e-30)
-        ).astype(o_ref.dtype)
+    _finalize(o_ref, acc, l_sc, pi, n_pages)
+
+
+def _fused_kernel(*refs, page: int, chunk: int, scale: float,
+                  n_pages: int, rep: int, quantized: bool):
+    """Attention + aliased chunk write: pool outputs alias pool inputs,
+    and every grid step writes its (clamped) chunk page tile — identical
+    data on re-visits, so the write is idempotent and the chunk's pages
+    hold exactly the chunk K/V when the kernel completes."""
+    if quantized:
+        (bt_ref, c0_ref, ksz_ref, vsz_ref, q_ref, kn_ref, vn_ref,
+         kszn_ref, vszn_ref, kp_ref, vp_ref, _kszal, _vszal,
+         o_ref, ko_ref, vo_ref, kszo_ref, vszo_ref,
+         acc, m_sc, l_sc) = refs
+    else:
+        (bt_ref, c0_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+         o_ref, ko_ref, vo_ref, acc, m_sc, l_sc) = refs
+    b = pl.program_id(0)
+    kvh = pl.program_id(1) // rep
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    c0 = c0_ref[b]
+    p0 = c0 // page
+    # the fused scatter: kn/vn blocks and ko/vo blocks both chase the
+    # clamped chunk page for this grid step (see the index maps), so this
+    # plain copy lands each chunk tile at its block-table page
+    ko_ref[...] = kn_ref[...]
+    vo_ref[...] = vn_ref[...]
+    if quantized:
+        kszo_ref[...] = kszn_ref[0]
+        vszo_ref[...] = vszn_ref[0]
+
+    needed = pi * page <= c0 + chunk - 1
+
+    @pl.when(needed)
+    def _tile():
+        in_chunk = pi >= p0
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        # the chunk's own pages attend to the tile being written (the
+        # pool block holds stale data until this kernel's write lands);
+        # earlier chunks' pages gather from the pool as usual
+        k = jnp.where(in_chunk, kn_ref[...], kp_ref[...])
+        k = k[0, :, 0, :].astype(jnp.float32)
+        v = jnp.where(in_chunk, vn_ref[...], vp_ref[...])
+        v = v[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            pid = bt_ref[b, pi]
+            ks = jnp.where(in_chunk, kszn_ref[0, 0, 0, 0],
+                           ksz_ref[pid, kvh, 0])
+            kz = jnp.where(in_chunk, kszn_ref[0, 0, 0, 1],
+                           ksz_ref[pid, kvh, 1])
+            vs = jnp.where(in_chunk, vszn_ref[0, 0, 0, 0],
+                           vsz_ref[pid, kvh, 0])
+            vz = jnp.where(in_chunk, vszn_ref[0, 0, 0, 1],
+                           vsz_ref[pid, kvh, 1])
+            k = k * ks + kz
+            v = v * vs + vz
+        _tile_update(q, k, v, c0, pi, page=page, chunk=chunk, scale=scale,
+                     acc=acc, m_sc=m_sc, l_sc=l_sc)
+
+    _finalize(o_ref, acc, l_sc, pi, n_pages)
+
+
+def _scratch(C, D):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((C, D), jnp.float32),
+        pltpu.VMEM((C, 1), jnp.float32),
+        pltpu.VMEM((C, 1), jnp.float32),
+    ]
+
+
+def _fused_specs(page: int, C: int, D: int, rep: int):
+    """BlockSpecs shared by the fp and int8 fused insert+attend kernels
+    (the `*sz` tail absorbs the int8 variant's two extra scalar-prefetch
+    operands). `rel` maps a grid page to its tile inside the chunk and
+    `wpage` to the pool page the aliased write targets — both clamped
+    into the chunk's page range, which is what makes out-of-chunk grid
+    steps idempotent re-writes of a chunk tile."""
+    n_wp = C // page
+
+    def rel(pi, c0b):
+        return jnp.clip(pi - c0b // page, 0, n_wp - 1)
+
+    def wpage(pi, btb, c0b):
+        p0 = c0b // page
+        return btb[jnp.clip(pi, p0, p0 + n_wp - 1)]
+
+    return {
+        "q": pl.BlockSpec(
+            (1, C, 1, D),
+            lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
+        "chunk": pl.BlockSpec(
+            (1, page, 1, D),
+            lambda b, h, pi, bt, c0, *sz: (b, rel(pi, c0[b]), h // rep, 0)),
+        "chunk_sz": pl.BlockSpec(
+            (1, 1, 1, 2),
+            lambda b, h, pi, bt, c0, *sz: (b, rel(pi, c0[b]), h // rep, 0)),
+        "pool_in": pl.BlockSpec(
+            (1, page, 1, D),
+            lambda b, h, pi, bt, c0, *sz: (bt[b, pi], 0, h // rep, 0)),
+        "pool_out": pl.BlockSpec(
+            (1, page, 1, D),
+            lambda b, h, pi, bt, c0, *sz:
+            (wpage(pi, bt[b], c0[b]), 0, h // rep, 0)),
+        "pool_sz": pl.BlockSpec(
+            (1, 1, 2),
+            lambda b, h, pi, bt, c0, *sz:
+            (wpage(pi, bt[b], c0[b]), h // rep, 0)),
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_prefill_flash(q, k_pages, v_pages, block_tables, c0, *,
-                        scale=None, interpret: bool = False):
+                        k_sz=None, v_sz=None, scale=None,
+                        interpret: bool = False):
     """q (B, C, H, D) — chunk of C prompt tokens at absolute positions
     [c0[b], c0[b]+C) — vs paged cache k/v (P_phys, page, KV, D) through
     block_tables (B, n_logical_pages) int32 physical-page ids; `c0` (B,)
     int32 chunk starts. Causal: query i attends to positions <= c0+i.
     The chunk's own K/V must already be written into the pool. Entries
     past the causal frontier must be in [0, P_phys) — use
-    ops.paged_prefill_mha, which clamps."""
+    ops.paged_prefill_mha, which clamps. `k_sz`/`v_sz` (P_phys, KV, 2)
+    float32 switch on the int8 dequant epilogue."""
     from jax.experimental.pallas import tpu as pltpu
 
     B, C, H, D = q.shape
     _, page, KV, _ = k_pages.shape
     n_pages = block_tables.shape[1]
     rep = H // KV
+    quantized = k_sz is not None
     scale = scale if scale is not None else D ** -0.5
     c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
     block_tables = jnp.asarray(block_tables, jnp.int32)
 
+    page_spec = pl.BlockSpec(
+        (1, page, 1, D),
+        (lambda b, h, pi, bt, c0, *sz, rep=rep:
+         (bt[b, pi], 0, h // rep, 0)),
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                   # block tables + c0
+        # block tables + c0 (+ per-page k/v (scale, zero) when int8)
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, H, n_pages),
         in_specs=[
-            pl.BlockSpec((1, C, 1, D), lambda b, h, pi, bt, c0: (b, 0, h, 0)),
-            pl.BlockSpec(
-                (1, page, 1, D),
-                lambda b, h, pi, bt, c0, rep=rep: (bt[b, pi], 0, h // rep,
-                                                   0),
-            ),
-            pl.BlockSpec(
-                (1, page, 1, D),
-                lambda b, h, pi, bt, c0, rep=rep: (bt[b, pi], 0, h // rep,
-                                                   0),
-            ),
+            pl.BlockSpec((1, C, 1, D),
+                         lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
+            page_spec,
+            page_spec,
         ],
         out_specs=pl.BlockSpec((1, C, 1, D),
-                               lambda b, h, pi, bt, c0: (b, 0, h, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((C, D), jnp.float32),
-            pltpu.VMEM((C, 1), jnp.float32),
-            pltpu.VMEM((C, 1), jnp.float32),
-        ],
+                               lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
+        scratch_shapes=_scratch(C, D),
     )
+    scalars = (block_tables, c0)
+    if quantized:
+        scalars += (jnp.asarray(k_sz, jnp.float32),
+                    jnp.asarray(v_sz, jnp.float32))
     return pl.pallas_call(
-        functools.partial(_kernel, page=page, chunk=C, scale=scale,
-                          n_pages=n_pages),
+        functools.partial(_gather_kernel, page=page, chunk=C, scale=scale,
+                          n_pages=n_pages, rep=rep, quantized=quantized),
         out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ) if not interpret else None,
-    )(block_tables, c0, q, k_pages, v_pages)
+    )(*scalars, q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_insert_flash(q, k_pages, v_pages, k_new, v_new,
+                               block_tables, c0, *, scale=None,
+                               interpret: bool = False):
+    """FUSED fp chunk insert + attention. k_new/v_new (B, C, KV, D) in the
+    POOL dtype (pre-cast by the caller so the in-chunk attention reads
+    exactly the values the pool will hold). Returns (o, k_pages, v_pages)
+    with the pool arrays updated in place via input_output_aliases —
+    zero standalone scatter ops. C and c0 must be page-aligned, and the
+    chunk's block-table entries must be live."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, C, H, D = q.shape
+    P_phys, page, KV, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    sp = _fused_specs(page, C, D, rep)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block tables + c0
+        grid=(B, H, n_pages),
+        in_specs=[
+            sp["q"],
+            sp["chunk"],                         # k_new
+            sp["chunk"],                         # v_new
+            sp["pool_in"],                       # k_pages
+            sp["pool_in"],                       # v_pages
+        ],
+        out_specs=[
+            sp["q"],
+            sp["pool_out"],                      # k_pages (aliased)
+            sp["pool_out"],                      # v_pages (aliased)
+        ],
+        scratch_shapes=_scratch(C, D),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, page=page, chunk=C, scale=scale,
+                          n_pages=n_pages, rep=rep, quantized=False),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        grid_spec=grid_spec,
+        # inputs count the scalar-prefetch operands: bt(0) c0(1) q(2)
+        # k_new(3) v_new(4) k_pages(5) v_pages(6)
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            # H sequential: GQA query heads of one KV head re-write the
+            # same output page block (identical data)
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ) if not interpret else None,
+    )(block_tables, c0, q, k_new, v_new, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_insert_flash_q8(q, k_pages, v_pages, k_sz, v_sz,
+                                  k8_new, v8_new, ksz_new, vsz_new,
+                                  block_tables, c0, *, scale=None,
+                                  interpret: bool = False):
+    """FUSED int8 chunk insert + attention. The chunk arrives
+    pre-quantized (`repro.kernels.quant.quantize_pages` — elementwise, no
+    scatter): k8/v8_new (B, C, KV, D) int8 payload, ksz/vsz_new
+    (B, C//page, KV, 2) float32 per-page (scale, zero) rows. Previous
+    pages dequantize through the scalar-prefetch `k_sz`/`v_sz`
+    (P_phys, KV, 2); the chunk's pages dequantize from their own fresh
+    rows, so attention sees exactly what a later gather of the written
+    pool would see. Returns (o, k_pages, v_pages, k_sz, v_sz) — payload
+    AND (scale, zero) arrays updated through input_output_aliases."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, C, H, D = q.shape
+    P_phys, page, KV, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    k_sz = jnp.asarray(k_sz, jnp.float32)
+    v_sz = jnp.asarray(v_sz, jnp.float32)
+
+    sp = _fused_specs(page, C, D, rep)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # block tables, c0, k_sz, v_sz (read)
+        grid=(B, H, n_pages),
+        in_specs=[
+            sp["q"],
+            sp["chunk"],                         # k8_new
+            sp["chunk"],                         # v8_new
+            sp["chunk_sz"],                      # ksz_new
+            sp["chunk_sz"],                      # vsz_new
+            sp["pool_in"],                       # k_pages
+            sp["pool_in"],                       # v_pages
+            sp["pool_sz"],                       # k_sz (alias carrier)
+            sp["pool_sz"],                       # v_sz (alias carrier)
+        ],
+        out_specs=[
+            sp["q"],
+            sp["pool_out"],                      # k_pages (aliased)
+            sp["pool_out"],                      # v_pages (aliased)
+            sp["pool_sz"],                       # k_sz (aliased)
+            sp["pool_sz"],                       # v_sz (aliased)
+        ],
+        scratch_shapes=_scratch(C, D),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, page=page, chunk=C, scale=scale,
+                          n_pages=n_pages, rep=rep, quantized=True),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+            jax.ShapeDtypeStruct(k_sz.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v_sz.shape, jnp.float32),
+        ],
+        grid_spec=grid_spec,
+        # inputs count the scalar-prefetch operands: bt(0) c0(1) ksz(2)
+        # vsz(3) q(4) k8(5) v8(6) kszn(7) vszn(8) kp(9) vp(10)
+        # ksz_alias(11) vsz_alias(12)
+        input_output_aliases={9: 1, 10: 2, 11: 3, 12: 4},
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ) if not interpret else None,
+    )(block_tables, c0, k_sz, v_sz, q, k8_new, v8_new, ksz_new, vsz_new,
+      k_pages, v_pages, k_sz, v_sz)

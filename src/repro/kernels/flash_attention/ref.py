@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for blocked causal GQA attention (dense and paged)."""
+"""Pure-jnp oracle for blocked causal GQA attention (dense and paged),
+including the UNFUSED insert-then-attend reference for the fused
+chunk-scatter kernels (`paged_prefill.paged_prefill_insert_flash*`): the
+oracle scatters the chunk's pages with a plain jnp `.at[].set` and then
+runs the gather-only attention — exactly the two-op sequence the fused
+kernel collapses, so fused-vs-reference parity is the acceptance check
+for the aliased write."""
 
 from __future__ import annotations
 
@@ -6,7 +12,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ref import gather_pages
+from repro.kernels.decode_attention.ref import gather_pages, gather_pages_q8
 
 
 def mha(
@@ -42,16 +48,83 @@ def mha(
     return out.astype(q.dtype)
 
 
+def scatter_chunk_pages(pool: jnp.ndarray, new: jnp.ndarray, block_tables,
+                        c0, page_tokens: int) -> jnp.ndarray:
+    """Write a page-aligned chunk `new` (B, C, ...) into the physical pool
+    (P_phys, page_tokens, ...) at the pages `block_tables` (B, n_pages)
+    assigns to [c0, c0+C) — the standalone jnp page scatter the fused
+    kernel eliminates (kept as the parity oracle). `c0` (B,) page-aligned
+    chunk starts; the chunks' physical pages must be uniquely owned."""
+    B, C = new.shape[:2]
+    n_wp = C // page_tokens
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    pages = c0[:, None] // page_tokens + jnp.arange(n_wp)[None, :]
+    phys = jnp.take_along_axis(
+        jnp.asarray(block_tables, jnp.int32), pages, axis=1
+    )                                              # (B, n_wp)
+    tiles = new.reshape((B, n_wp, page_tokens) + new.shape[2:])
+    return pool.at[phys].set(tiles.astype(pool.dtype))
+
+
+def scatter_chunk_sz(pool_sz: jnp.ndarray, sz_new: jnp.ndarray,
+                     block_tables, c0, page_tokens: int) -> jnp.ndarray:
+    """Scatter the chunk's per-page (scale, zero) rows (B, n_wp, KV, 2)
+    into the pool-wide array (P_phys, KV, 2)."""
+    B, n_wp = sz_new.shape[:2]
+    c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
+    pages = c0[:, None] // page_tokens + jnp.arange(n_wp)[None, :]
+    phys = jnp.take_along_axis(
+        jnp.asarray(block_tables, jnp.int32), pages, axis=1
+    )
+    return pool_sz.at[phys].set(sz_new.astype(pool_sz.dtype))
+
+
+def paged_prefill_insert_mha(q, k_pages, v_pages, k_new, v_new,
+                             block_tables, c0, *,
+                             scale: Optional[float] = None):
+    """UNFUSED reference for the fused fp insert+attend kernel: scatter,
+    then gather-attend. Returns (o, k_pages, v_pages)."""
+    page = k_pages.shape[1]
+    k_pages = scatter_chunk_pages(k_pages, k_new, block_tables, c0, page)
+    v_pages = scatter_chunk_pages(v_pages, v_new, block_tables, c0, page)
+    o = paged_prefill_mha(q, k_pages, v_pages, block_tables, c0,
+                          scale=scale)
+    return o, k_pages, v_pages
+
+
+def paged_prefill_insert_mha_q8(q, k_pages, v_pages, k_sz, v_sz,
+                                k8_new, v8_new, ksz_new, vsz_new,
+                                block_tables, c0, *,
+                                scale: Optional[float] = None):
+    """UNFUSED reference for the fused int8 insert+attend kernel: scatter
+    payload + (scale, zero) rows, then dequant-gather-attend. Returns
+    (o, k_pages, v_pages, k_sz, v_sz)."""
+    page = k_pages.shape[1]
+    k_pages = scatter_chunk_pages(k_pages, k8_new, block_tables, c0, page)
+    v_pages = scatter_chunk_pages(v_pages, v8_new, block_tables, c0, page)
+    k_sz = scatter_chunk_sz(k_sz, ksz_new, block_tables, c0, page)
+    v_sz = scatter_chunk_sz(v_sz, vsz_new, block_tables, c0, page)
+    o = paged_prefill_mha(q, k_pages, v_pages, block_tables, c0,
+                          k_sz=k_sz, v_sz=v_sz, scale=scale)
+    return o, k_pages, v_pages, k_sz, v_sz
+
+
 def paged_prefill_mha(q, k_pages, v_pages, block_tables, c0, *,
+                      k_sz=None, v_sz=None,
                       scale: Optional[float] = None) -> jnp.ndarray:
     """Paged chunked-prefill oracle: gather the page pool to a dense
-    cache, then causal attention of the chunk q (B, C, H, D) at absolute
+    cache (dequantizing int8 pools through `k_sz`/`v_sz` when given),
+    then causal attention of the chunk q (B, C, H, D) at absolute
     positions [c0[b], c0[b]+C) against it. `c0` may be traced (the chunk
     offset is a runtime scalar in the serving engine), so the causal mask
     is built per batch row instead of through `mha`'s static kv_offset."""
     B, C, H, D = q.shape
-    k = gather_pages(k_pages, block_tables)        # (B, Skv, KV, D)
-    v = gather_pages(v_pages, block_tables)
+    if k_sz is not None:
+        k = gather_pages_q8(k_pages, k_sz, block_tables, dtype=q.dtype)
+        v = gather_pages_q8(v_pages, v_sz, block_tables, dtype=q.dtype)
+    else:
+        k = gather_pages(k_pages, block_tables)    # (B, Skv, KV, D)
+        v = gather_pages(v_pages, block_tables)
     Skv, KV = k.shape[1], k.shape[2]
     rep = H // KV
     scale = scale if scale is not None else D ** -0.5

@@ -7,18 +7,18 @@ from typing import Optional
 
 import jax
 
-from repro import kernels
+from repro.kernels import select_impl
 from repro.kernels.lbench import ref
 
 
 @functools.partial(jax.jit, static_argnames=("nflop", "alpha", "impl"))
 def lbench(a, nflop: int, alpha: float = 0.5, *, impl: Optional[str] = None):
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         return ref.lbench(a, nflop, alpha)
     from repro.kernels.lbench import lbench as kl
 
-    return kl.lbench_pallas(a, nflop, alpha, interpret=(impl == "interpret"))
+    return kl.lbench_pallas(a, nflop, alpha, interpret=interpret)
 
 
 flops = ref.flops

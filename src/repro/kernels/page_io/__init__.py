@@ -1,0 +1,1 @@
+from repro.kernels.page_io.ops import write_pages  # noqa: F401

@@ -1,0 +1,38 @@
+"""Public page-writer op: land page tiles in the physical pool.
+
+Reference backend scatters with jnp (`ref.write_pages`); pallas/interpret
+run the aliased in-place kernel, so the serving prefill-insert cell
+issues zero standalone page-scatter ops on the kernel backends. Arbitrary
+trailing dims are flattened to one lane dim around the kernel (the
+reshapes are layout no-ops on contiguous pools)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import select_impl
+from repro.kernels.page_io import ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def write_pages(pool, tiles, phys, *, impl: Optional[str] = None):
+    """pool (nb, P_phys, *page_dims), tiles (nb, n_wp, *page_dims), phys
+    (n_wp,) int32 unique physical page ids (live block-table entries).
+    Returns the pool with the tiles landed at their physical pages."""
+    tiles = tiles.astype(pool.dtype)
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
+        return ref.write_pages(pool, tiles, phys)
+    from repro.kernels.page_io import page_io
+
+    nb, P = pool.shape[:2]
+    n_wp = tiles.shape[1]
+    out = page_io.write_pages_pallas(
+        pool.reshape(nb, P, -1), tiles.reshape(nb, n_wp, -1), phys,
+        interpret=interpret,
+    )
+    return out.reshape(pool.shape)

@@ -1,0 +1,61 @@
+"""Aliased page-writer Pallas kernel: land whole page tiles in a physical
+page pool IN PLACE via `input_output_aliases` — the kernel-level
+replacement for the standalone jnp page scatter (`pool.at[:, phys].set`)
+the prefill-insert cell used to issue per K/V leaf, which costs one full
+extra read+write of the pool through HBM on every admission.
+
+The physical page ids ride the scalar-prefetch channel, so the output
+BlockSpec index map chases `phys[j]` exactly like the paged attention
+kernels chase the block table. Grid (nb, n_wp): one step per (stack
+level, written page); each step copies its tile into the aliased pool
+block, and every block the grid never names keeps the input pool's bytes
+— aliasing turns "rewrite the whole pool" into "DMA just the chunk's
+pages". Pages must be uniquely owned (the pager's free-list contract),
+so no two grid steps target the same block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(phys_ref, t_ref, pool_ref, o_ref):
+    del phys_ref, pool_ref          # phys is chased by the index maps;
+    # the pool input exists only to alias the output buffer
+    o_ref[...] = t_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def write_pages_pallas(pool3, tiles3, phys, *, interpret: bool = False):
+    """pool3 (nb, P_phys, M), tiles3 (nb, n_wp, M) in the pool dtype,
+    phys (n_wp,) int32 unique physical page ids. Returns the pool with
+    `pool3[:, phys[j]] = tiles3[:, j]` applied in place (aliased)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    nb, _, M = pool3.shape
+    n_wp = tiles3.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                   # the physical page ids
+        grid=(nb, n_wp),
+        in_specs=[
+            pl.BlockSpec((1, 1, M), lambda i, j, phys: (i, j, 0)),
+            pl.BlockSpec((1, 1, M), lambda i, j, phys: (i, phys[j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M),
+                               lambda i, j, phys: (i, phys[j], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(pool3.shape, pool3.dtype),
+        grid_spec=grid_spec,
+        # inputs count the scalar-prefetch operand: phys(0) tiles(1) pool(2)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(jnp.asarray(phys, jnp.int32), tiles3, pool3)

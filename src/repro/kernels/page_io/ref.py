@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the aliased page writer: the standalone page
+scatter the fused kernel eliminates."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def write_pages(pool: jnp.ndarray, tiles: jnp.ndarray,
+                phys) -> jnp.ndarray:
+    """pool (nb, P_phys, ...), tiles (nb, n_wp, ...), phys (n_wp,) int32:
+    `pool[:, phys[j]] = tiles[:, j]`."""
+    return pool.at[:, jnp.asarray(phys, jnp.int32)].set(
+        tiles.astype(pool.dtype)
+    )

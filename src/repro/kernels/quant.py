@@ -1,0 +1,78 @@
+"""Per-page int8 block quantization for the paged KV pool.
+
+The pool payload is stored as int8 with one float32 (scale, zero) pair per
+(physical page, KV head) — the ``*_sz`` arrays that ride next to every
+quantized ``k``/``v`` pool leaf, laid out ``(..., n_phys_pages, KV, 2)``
+with ``[..., 0] = scale`` and ``[..., 1] = zero``. Quantization is
+affine mid-range: for a page-head tile ``x``
+
+    zero  = (max(x) + min(x)) / 2
+    scale = max((max(x) - min(x)) / (2 * 127), MIN_SCALE)
+    q     = round((x - zero) / scale)            # always in [-127, 127]
+    x_hat = q * scale + zero                     # |x_hat - x| <= scale/2
+
+The mid-range zero point centres the int8 grid on the tile's actual range,
+so no value ever clips and the round-trip error is bounded by half a
+quantization step — including the adversarial cases (an all-zero page
+dequantizes exactly; a single-outlier page widens ``scale`` but stays
+within the bound). These helpers are the single source of the quantization
+math: the insert paths quantize with them, the kernels' oracles dequantize
+with them, and the pallas kernels inline the same ``q * scale + zero``
+epilogue on the gather side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_QMAX = 127
+# floor keeps constant pages exact: (x - zero) == 0 -> q == 0 -> zero
+MIN_SCALE = 1e-8
+SZ_CHANNELS = 2                      # [scale, zero]
+
+
+def page_sz(x: jnp.ndarray, axis) -> jnp.ndarray:
+    """(scale, zero) over the reduction ``axis`` of ``x``, stacked on a
+    trailing size-2 channel: returns ``x.shape`` minus ``axis`` plus
+    ``(2,)`` in float32."""
+    x = x.astype(jnp.float32)
+    hi = x.max(axis=axis)
+    lo = x.min(axis=axis)
+    zero = (hi + lo) * 0.5
+    scale = jnp.maximum((hi - lo) / (2.0 * INT8_QMAX), MIN_SCALE)
+    return jnp.stack([scale, zero], axis=-1)
+
+
+def quantize(x: jnp.ndarray, sz: jnp.ndarray) -> jnp.ndarray:
+    """Quantize ``x`` (float) to int8 with broadcastable ``sz`` whose
+    trailing dim is the (scale, zero) channel."""
+    scale, zero = sz[..., 0], sz[..., 1]
+    q = jnp.round((x.astype(jnp.float32) - zero) / scale)
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, sz: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize int8 ``q`` with broadcastable ``sz``."""
+    scale, zero = sz[..., 0], sz[..., 1]
+    return (q.astype(jnp.float32) * scale + zero).astype(dtype)
+
+
+def _per_page(sz: jnp.ndarray) -> jnp.ndarray:
+    """(..., KV, 2) -> (..., 1, KV, 1, 2): broadcast over (page, hd)."""
+    return sz[..., None, :, None, :]
+
+
+def quantize_pages(pages: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize whole page tiles ``(..., page_tokens, KV, hd)`` with one
+    (scale, zero) per (page, KV head). Returns ``(q8, sz)`` where ``q8``
+    matches ``pages.shape`` in int8 and ``sz`` is ``(..., KV, 2)``."""
+    sz = page_sz(pages, axis=(-3, -1))                  # (..., KV, 2)
+    return quantize(pages, _per_page(sz)), sz
+
+
+def dequantize_pages(q8: jnp.ndarray, sz: jnp.ndarray,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of `quantize_pages`: ``q8`` ``(..., page, KV, hd)``,
+    ``sz`` ``(..., KV, 2)``."""
+    return dequantize(q8, _per_page(sz), dtype=dtype)

@@ -7,7 +7,7 @@ from typing import Optional
 
 import jax
 
-from repro import kernels
+from repro.kernels import select_impl
 from repro.kernels.ssd_scan import ref
 
 
@@ -25,8 +25,8 @@ def ssd(
     impl: Optional[str] = None,
 ):
     """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
-    impl = impl or kernels.backend()
-    if impl == "reference":
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
         if x.shape[1] <= 64:
             return ref.ssd(x, dt, A, Bmat, Cmat, D, init_state)
         from repro.kernels.ssd_scan import chunked
@@ -38,7 +38,7 @@ def ssd(
 
     return ks.ssd_pallas(
         x, dt, A, Bmat, Cmat, D, init_state,
-        chunk=chunk, interpret=(impl == "interpret"),
+        chunk=chunk, interpret=interpret,
     )
 
 

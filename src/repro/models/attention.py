@@ -187,6 +187,19 @@ def encode_cross_kv(params, enc_out, cfg: ModelConfig):
 
 
 # ------------------------------------------------------- paged KV cache
+def _page_coords(t_vec, block_table, page_tokens: int):
+    """Per-slot (physical page, in-range mask, in-page offset) of write
+    position(s) `t_vec` through the block table."""
+    n_pages = block_table.shape[1]
+    pidx = t_vec // page_tokens
+    off = t_vec % page_tokens
+    in_range = pidx < n_pages
+    phys = jnp.take_along_axis(
+        block_table, jnp.clip(pidx, 0, n_pages - 1)[:, None], axis=1
+    )[:, 0]
+    return phys, in_range, off
+
+
 def paged_cache_insert(pool, new, t, block_table, page_tokens: int):
     """Write one token of K or V per slot into a PHYSICAL page pool.
 
@@ -198,18 +211,45 @@ def paged_cache_insert(pool, new, t, block_table, page_tokens: int):
     masked no-op. Physical pages are uniquely owned, so the scatter never
     collides."""
     B = new.shape[0]
-    n_pages = block_table.shape[1]
     t = jnp.asarray(t)
     t_vec = (t if t.ndim else jnp.full((B,), t)).astype(jnp.int32)
-    pidx = t_vec // page_tokens
-    off = t_vec % page_tokens
-    in_range = pidx < n_pages
-    phys = jnp.take_along_axis(
-        block_table, jnp.clip(pidx, 0, n_pages - 1)[:, None], axis=1
-    )[:, 0]
+    phys, in_range, off = _page_coords(t_vec, block_table, page_tokens)
     phys = jnp.where(in_range, phys, pool.shape[0])   # OOB -> dropped
     return pool.at[phys, off].set(new[:, 0].astype(pool.dtype),
                                   mode="drop")
+
+
+def paged_quant_cache_insert(pool, sz, new, t, block_table,
+                             page_tokens: int):
+    """int8 twin of `paged_cache_insert`: write one fp token per slot
+    into a BLOCK-QUANTIZED page pool. Per-page (scale, zero) quantization
+    cannot splice a single int8 row into a page whose range it may move,
+    so the insert is a read-modify-write of the slot's tail page:
+    dequantize it, zero the rows past the write cursor (fresh free-list
+    pages carry stale payload — the garbage must not pollute the range),
+    land the token, and requantize the page with a fresh (scale, zero).
+    One page per slot per step — the hot tail the pager keeps local —
+    and rows whose range did not move requantize onto the identical int8
+    grid, so steady pages round-trip bit-stably. Parked positions drop
+    exactly like the fp path. Returns (pool, sz)."""
+    from repro.kernels import quant
+
+    B = new.shape[0]
+    t = jnp.asarray(t)
+    t_vec = (t if t.ndim else jnp.full((B,), t)).astype(jnp.int32)
+    phys, in_range, off = _page_coords(t_vec, block_table, page_tokens)
+    phys_r = jnp.where(in_range, phys, 0)        # safe gather, discarded
+    page_q = pool[phys_r]                        # (B, page, KV, hd) int8
+    page_f = quant.dequantize_pages(page_q, sz[phys_r])
+    iota = jax.lax.iota(jnp.int32, page_tokens)[None, :, None, None]
+    off_b = off[:, None, None, None]
+    page_f = jnp.where(iota < off_b, page_f, 0.0)
+    page_f = jnp.where(iota == off_b, new.astype(jnp.float32), page_f)
+    q8, new_sz = quant.quantize_pages(page_f)
+    phys_w = jnp.where(in_range, phys, pool.shape[0])   # OOB -> dropped
+    pool = pool.at[phys_w].set(q8, mode="drop")
+    sz = sz.at[phys_w].set(new_sz, mode="drop")
+    return pool, sz
 
 
 def paged_chunk_insert(pool, new, c0, block_row, page_tokens: int):
@@ -232,8 +272,9 @@ def paged_decode_self_attention(
     params,
     x,                      # (B, 1, d) the new token
     cfg: ModelConfig,
-    k_pool,                 # (P_phys, page, KV, hd) physical page pool
-    v_pool,
+    cache,                  # attention cache dict: "k"/"v" physical page
+    #                         pools (P_phys, page, KV, hd), plus
+    #                         "k_sz"/"v_sz" (P_phys, KV, 2) when int8
     t,                      # scalar or (B,): current position(s)
     block_table,            # (B, n_pages) int32
     page_tokens: int,
@@ -243,46 +284,87 @@ def paged_decode_self_attention(
     the block table, gather-attend via the paged decode kernel. Same
     contract as `decode_self_attention` — per-slot `t`, parked positions
     write nothing — but the cache IS the physical page pool the serving
-    pager allocates from, so tier placement is real at the data layout."""
+    pager allocates from, so tier placement is real at the data layout.
+    Block-quantized pools (the "k_sz"/"v_sz" leaves) quantize on insert
+    and dequantize inside the kernel. Returns (out, cache_updates)."""
     B = x.shape[0]
     t = jnp.asarray(t)
     t_vec = t if t.ndim else jnp.full((B,), t)
     positions = t_vec[:, None]
     q, k, v = _qkv(params, x, cfg, positions, rope)
-    k_pool = paged_cache_insert(k_pool, k, t_vec, block_table, page_tokens)
-    v_pool = paged_cache_insert(v_pool, v, t_vec, block_table, page_tokens)
-    out = decode_ops.paged_decode_mha(
-        q[:, 0], k_pool, v_pool, block_table, t_vec + 1
-    )
+    quantized = "k_sz" in cache
+    if quantized:
+        k_pool, k_sz = paged_quant_cache_insert(
+            cache["k"], cache["k_sz"], k, t_vec, block_table, page_tokens)
+        v_pool, v_sz = paged_quant_cache_insert(
+            cache["v"], cache["v_sz"], v, t_vec, block_table, page_tokens)
+        out = decode_ops.paged_decode_mha(
+            q[:, 0], k_pool, v_pool, block_table, t_vec + 1,
+            k_sz=k_sz, v_sz=v_sz,
+        )
+        updates = {"k": k_pool, "v": v_pool, "k_sz": k_sz, "v_sz": v_sz}
+    else:
+        k_pool = paged_cache_insert(cache["k"], k, t_vec, block_table,
+                                    page_tokens)
+        v_pool = paged_cache_insert(cache["v"], v, t_vec, block_table,
+                                    page_tokens)
+        out = decode_ops.paged_decode_mha(
+            q[:, 0], k_pool, v_pool, block_table, t_vec + 1
+        )
+        updates = {"k": k_pool, "v": v_pool}
     out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x.dtype))
-    return out[:, None, :], (k_pool, v_pool)
+    return out[:, None, :], updates
 
 
 def paged_prefill_chunk_attention(
     params,
     x,                      # (1, C, d) one chunk of one request's prompt
     cfg: ModelConfig,
-    k_pool,
-    v_pool,
+    cache,                  # attention cache dict (see
+    #                         `paged_decode_self_attention`)
     c0,                     # (traced) absolute position of the chunk start
     block_row,              # (1, n_pages) the slot's block-table row
     page_tokens: int,
     rope: bool = True,
 ):
-    """One prompt chunk against the paged cache: write the chunk's KV
-    through the block table, then causal flash attention over everything
-    prefilled so far (previous chunks + this one) via the paged-prefill
-    kernel. C and c0 must be page-aligned (the engine enforces
-    `prefill_chunk % page_tokens == 0`)."""
+    """One prompt chunk against the paged cache via the FUSED
+    insert+attend kernel: the chunk's K/V (int8 pools: pre-quantized
+    payload + per-page (scale, zero) rows — elementwise math, no
+    scatter) goes into the paged-prefill kernel as an operand and lands
+    in the pool through `input_output_aliases` while the same pass
+    flash-attends over everything prefilled so far. The standalone jnp
+    page-scatter of the chunk's K/V — one full extra read+write of the
+    chunk through HBM per layer — does not exist on the kernel backends
+    (the reference backend runs the unfused oracle). C and c0 must be
+    page-aligned (the engine enforces `prefill_chunk % page_tokens ==
+    0`). Returns (out, cache_updates)."""
     B, C, _ = x.shape
     c0 = jnp.asarray(c0, jnp.int32)
     positions = c0 + jnp.broadcast_to(jnp.arange(C)[None, :], (B, C))
     q, k, v = _qkv(params, x, cfg, positions, rope)
-    k_pool = paged_chunk_insert(k_pool, k, c0, block_row, page_tokens)
-    v_pool = paged_chunk_insert(v_pool, v, c0, block_row, page_tokens)
-    out = flash_ops.paged_prefill_mha(q, k_pool, v_pool, block_row, c0)
+    quantized = "k_sz" in cache
+    if quantized:
+        from repro.kernels import quant
+
+        n_wp = C // page_tokens
+        KV, hd = k.shape[2], k.shape[3]
+        k8, ksz = quant.quantize_pages(
+            k.reshape(B, n_wp, page_tokens, KV, hd))
+        v8, vsz = quant.quantize_pages(
+            v.reshape(B, n_wp, page_tokens, KV, hd))
+        out, k_pool, v_pool, k_sz, v_sz = flash_ops.paged_prefill_insert_mha_q8(
+            q, cache["k"], cache["v"], cache["k_sz"], cache["v_sz"],
+            k8.reshape(B, C, KV, hd), v8.reshape(B, C, KV, hd),
+            ksz, vsz, block_row, c0,
+        )
+        updates = {"k": k_pool, "v": v_pool, "k_sz": k_sz, "v_sz": v_sz}
+    else:
+        out, k_pool, v_pool = flash_ops.paged_prefill_insert_mha(
+            q, cache["k"], cache["v"], k, v, block_row, c0,
+        )
+        updates = {"k": k_pool, "v": v_pool}
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
-    return out, (k_pool, v_pool)
+    return out, updates
 
 
 def decode_cross_attention(params, x, cross_kv, cfg: ModelConfig):

@@ -141,12 +141,33 @@ def stack_apply(params, x, cfg: ModelConfig, ctx: ParallelCtx,
 
 
 # --------------------------------------------------------------- caches
+# pool payload dtypes for the paged KV cache: "fp" stores cfg.dtype
+# exactly (the bit-identical safety net), "bf16" is a 2-byte cast-only
+# pool, "int8" adds per-page float32 (scale, zero) arrays ("k_sz"/"v_sz"
+# leaves, `repro.kernels.quant` layout) with quantize-on-insert and
+# dequantize-in-kernel
+POOL_DTYPES = ("fp", "bf16", "int8")
+
+
+def pool_kv_dtype(cfg: ModelConfig, pool_dtype: str):
+    """Resolve a pool-dtype name to the K/V payload jnp dtype."""
+    if pool_dtype not in POOL_DTYPES:
+        raise ValueError(f"unknown pool_dtype {pool_dtype!r}; "
+                         f"expected one of {POOL_DTYPES}")
+    if pool_dtype == "fp":
+        return jnp.dtype(cfg.dtype)
+    return jnp.dtype({"bf16": jnp.bfloat16, "int8": jnp.int8}[pool_dtype])
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
-                cross: bool = False, enc_len: int = 0, kv_shape=None):
-    """Decode caches, mirroring the stacked-params structure. `kv_shape`
-    overrides the self-attention K/V leaf shape (the paged pool layout —
-    see `init_paged_caches`); the K/V buffers are the engine's largest
-    arrays, so they are allocated directly in their final shape."""
+                cross: bool = False, enc_len: int = 0, kv_shape=None,
+                kv_dtype=None, kv_sz_shape=None):
+    """Decode caches, mirroring the stacked-params structure. `kv_shape`/
+    `kv_dtype` override the self-attention K/V leaf shape and dtype (the
+    paged pool layout — see `init_paged_caches`); the K/V buffers are the
+    engine's largest arrays, so they are allocated directly in their
+    final shape. `kv_sz_shape` adds the per-page float32 (scale, zero)
+    leaves of an int8 block-quantized pool."""
     descs = pattern(cfg, cross)
     nb = cfg.num_layers // len(descs)
     dtype = jnp.dtype(cfg.dtype)
@@ -156,8 +177,11 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
         if desc.kind == "attn":
             shape = kv_shape or (nb, batch, max_seq, cfg.num_kv_heads,
                                  cfg.head_dim)
-            c["k"] = jnp.zeros(shape, dtype)
-            c["v"] = jnp.zeros(shape, dtype)
+            c["k"] = jnp.zeros(shape, kv_dtype or dtype)
+            c["v"] = jnp.zeros(shape, kv_dtype or dtype)
+            if kv_sz_shape is not None:
+                c["k_sz"] = jnp.zeros(kv_sz_shape, jnp.float32)
+                c["v_sz"] = jnp.zeros(kv_sz_shape, jnp.float32)
         else:
             H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
             gn = ssm_mod.NGROUPS * N
@@ -176,14 +200,19 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
 
 def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
                       page_tokens: int, cross: bool = False,
-                      enc_len: int = 0):
+                      enc_len: int = 0, pool_dtype: str = "fp"):
     """Decode caches with self-attention K/V laid out as a PHYSICAL page
     pool: (nb, n_slots * n_pages, page_tokens, KV, hd) instead of the
     per-slot contiguous (nb, n_slots, max_seq, KV, hd). Each valid
     (slot, logical page) owns one physical page handed out by the serving
     pager's free list; the (n_slots, n_pages) block table maps between
     them at every cache read/write. Non-attention state (SSM state, conv
-    tails, cross-KV) is resident per slot and keeps the dense layout."""
+    tails, cross-KV) is resident per slot and keeps the dense layout.
+
+    `pool_dtype` picks the pool payload (see `POOL_DTYPES`): "fp" keeps
+    cfg.dtype bit-identically; "bf16" stores a 2-byte cast; "int8" stores
+    int8 payload plus per-page (nb, n_phys_pages, KV, 2) float32
+    (scale, zero) arrays as "k_sz"/"v_sz" leaves."""
     descs = pattern(cfg, cross)
     nb = cfg.num_layers // len(descs)
     n_pages = -(-max_seq // page_tokens)       # ceil
@@ -191,6 +220,9 @@ def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
     return init_caches(
         cfg, n_slots, max_seq, cross=cross, enc_len=enc_len,
         kv_shape=(nb, p_phys, page_tokens, cfg.num_kv_heads, cfg.head_dim),
+        kv_dtype=pool_kv_dtype(cfg, pool_dtype),
+        kv_sz_shape=((nb, p_phys, cfg.num_kv_heads, 2)
+                     if pool_dtype == "int8" else None),
     )
 
 
@@ -199,21 +231,24 @@ def _apply_layer_decode(p, c, x, t, cfg: ModelConfig, desc: LayerDesc,
                         page_tokens: int = 0, attn_override=None):
     """One layer, one token (or, via `attn_override`, one prompt chunk).
     Returns (x, new_cache). With a block table the attention K/V lives in
-    the physical page pool layout; `attn_override(p_attn, h, c) ->
-    (h, (k, v))` swaps the attention contraction while the rest of the
-    layer body stays shared (the chunked-prefill path — one body, so a
-    layer change cannot silently diverge the chunked and serialized
-    streams)."""
+    the physical page pool layout (fp or block-quantized — the paged
+    paths read and return the whole attention cache dict, so the int8
+    "k_sz"/"v_sz" leaves ride along invisibly); `attn_override(p_attn,
+    h, c) -> (h, cache_updates)` swaps the attention contraction while
+    the rest of the layer body stays shared (the chunked-prefill path —
+    one body, so a layer change cannot silently diverge the chunked and
+    serialized streams)."""
     nc = dict(c)
     h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
     if desc.kind == "attn":
         if attn_override is not None:
-            h, (nc["k"], nc["v"]) = attn_override(p["attn"], h, c)
+            h, updates = attn_override(p["attn"], h, c)
+            nc.update(updates)
         elif block_table is not None:
-            h, (nc["k"], nc["v"]) = attn.paged_decode_self_attention(
-                p["attn"], h, cfg, c["k"], c["v"], t, block_table,
-                page_tokens,
+            h, updates = attn.paged_decode_self_attention(
+                p["attn"], h, cfg, c, t, block_table, page_tokens,
             )
+            nc.update(updates)
         else:
             h, (nc["k"], nc["v"]) = attn.decode_self_attention(
                 p["attn"], h, cfg, c["k"], c["v"], t
@@ -276,7 +311,7 @@ def stack_prefill_chunk(params, caches, x, c0, cfg: ModelConfig,
 
     def chunk_attn(p_attn, h, c):
         return attn.paged_prefill_chunk_attention(
-            p_attn, h, cfg, c["k"], c["v"], c0, block_row, page_tokens
+            p_attn, h, cfg, c, c0, block_row, page_tokens
         )
 
     def body(x, inp):

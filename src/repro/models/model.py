@@ -190,10 +190,14 @@ def make_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def make_paged_decode_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
-                             page_tokens: int, enc_len: int = 0):
+                             page_tokens: int, enc_len: int = 0,
+                             pool_dtype: str = "fp"):
     """Decode caches with self-attention K/V as a physical page pool
-    (see blocks.init_paged_caches); the serving engine's paged layout."""
+    (see blocks.init_paged_caches); the serving engine's paged layout.
+    `pool_dtype` ("fp" | "bf16" | "int8") picks the pool payload; int8
+    adds the per-page (scale, zero) leaves."""
     return blocks.init_paged_caches(
         cfg, n_slots, max_seq, page_tokens,
         cross=bool(cfg.num_encoder_layers), enc_len=enc_len,
+        pool_dtype=pool_dtype,
     )

@@ -22,15 +22,31 @@ KV, hd) and every cell takes the live (n_slots, n_pages) block table from
 free list and tier tags drive both the kernel gather and the byte
 accounting. The decode cell runs `kernels/decode_attention/paged.py`
 (interpret mode on CPU, compiled pallas on TPU) over that table; the
-insert cell scatters a prefilled request's pages into the pool; and on
-attention-only stacks (`chunked_prefill_supported`) a chunked-prefill
-cell (`kernels/flash_attention/paged_prefill.py`) processes one
-page-aligned prompt chunk per call — writing K/V through the table and
-flash-attending to everything prefilled so far — so the engine can
+insert cell lands a prefilled request's pages in the pool through the
+aliased page-writer kernel (`kernels.page_io.write_pages` — in-place via
+`input_output_aliases`, zero standalone scatters on the kernel
+backends); and on attention-only stacks (`chunked_prefill_supported`) a
+chunked-prefill cell (`kernels/flash_attention/paged_prefill.py`)
+processes one page-aligned prompt chunk per call — the chunk's K/V
+write is FUSED into the paged-prefill kernel itself (the chunk tiles
+are operands, the pool arrays alias input->output), so the cell
+flash-attends to everything prefilled so far without the separate jnp
+page-scatter's extra read+write of the chunk — and the engine can
 interleave prefill chunks with decode steps instead of stalling the
 whole slot batch for a long prompt. The block table and the chunk index
 are runtime arrays, never Python constants: slot churn, page churn and
 chunk progress all replay through the same compiled cells.
+
+`pool_dtype` makes the pool payload polymorphic ("fp" exact | "bf16"
+cast | "int8" per-page block quantization): with int8 the attention
+cache dicts carry per-page float32 (scale, zero) leaves ("k_sz"/"v_sz",
+(nb, n_slots * n_pages, KV, 2), `repro.kernels.quant`), the insert and
+chunk cells quantize whole pages on the way in (the decode cell
+requantizes the slot's tail page around each new token), and both paged
+kernels dequantize in their gather epilogue. Bytes per cached token =
+2 * KV * hd * payload_bytes * nb (+ 2 * KV * 8 * nb / page_tokens for
+the int8 scale arrays) — `core.access.kv_pool_token_bytes` — which is
+what the pager and admission corridor price.
 """
 
 from __future__ import annotations
@@ -148,10 +164,12 @@ def chunked_prefill_supported(cfg: ModelConfig) -> bool:
 
 
 def abstract_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
-                          page_tokens: int, enc_len: int = 0):
+                          page_tokens: int, enc_len: int = 0,
+                          pool_dtype: str = "fp"):
     return jax.eval_shape(
         lambda: M.make_paged_decode_caches(
-            cfg, n_slots, max_seq, page_tokens, enc_len
+            cfg, n_slots, max_seq, page_tokens, enc_len,
+            pool_dtype=pool_dtype,
         )
     )
 
@@ -222,18 +240,30 @@ def build_cache_insert():
     return insert
 
 
-def build_paged_cache_insert(bucket_total: int, page_tokens: int):
-    """Scatter a prefilled request's caches into the PAGED layout: the
+def build_paged_cache_insert(bucket_total: int, page_tokens: int,
+                             pool_dtype: str = "fp"):
+    """Land a prefilled request's caches in the PAGED layout: the
     request's `bucket_total` tokens of K/V (batch=1, dense from the
-    prefill cell) land whole-page in the physical pool at the pages the
-    block table assigns to the traced slot index; resident leaves (SSM
-    state, conv tails, cross-KV) keep the dense dynamic-update-slice.
-    The final partial page carries garbage beyond `bucket_total` — those
-    positions are >= the slot's length, so the kernels' masks exclude
-    them and decode overwrites them before the length ever reaches
-    them."""
+    prefill cell) go whole-page into the physical pool at the pages the
+    block table assigns to the traced slot index — through the aliased
+    page-writer kernel (`kernels.page_io.write_pages`), the same
+    in-place treatment the fused chunk kernel gives the chunked path,
+    so the insert cell issues zero standalone page-scatter ops on the
+    kernel backends. With `pool_dtype="int8"` the prompt pages are
+    block-quantized first (`kernels.quant.quantize_pages` — elementwise)
+    and the per-page (scale, zero) rows land through the same writer.
+    Resident leaves (SSM state, conv tails, cross-KV) keep the dense
+    dynamic-update-slice. The final partial page carries garbage beyond
+    `bucket_total` — those positions are >= the slot's length, so the
+    kernels' masks exclude them and decode overwrites them before the
+    length ever reaches them (the quantized insert zero-fills them so
+    they cannot pollute the page's range)."""
+    from repro.kernels import quant
+    from repro.kernels.page_io import ops as page_ops
+
     n_wp = -(-bucket_total // page_tokens)     # pages the prompt spans
     pad = n_wp * page_tokens - bucket_total
+    quantized = pool_dtype == "int8"
 
     def insert(caches, slot_caches, slot, block_table):
         slot = jnp.asarray(slot, jnp.int32)
@@ -248,21 +278,34 @@ def build_paged_cache_insert(bucket_total: int, page_tokens: int):
                 big, small.astype(big.dtype), idx
             )
 
-        def ins_paged(big, small):
+        def page_tiles(small):
             sm = small[:, 0]                   # (nb, bucket_total, KV, hd)
+            # zero-pad the partial-page tail: masked out of attention, and
+            # under int8 it cannot widen the last page's quantization range
             sm = jnp.pad(sm, ((0, 0), (0, pad), (0, 0), (0, 0)))
             nb, _, kv, hd = sm.shape
-            sm = sm.reshape(nb, n_wp, page_tokens, kv, hd)
-            return big.at[:, phys].set(sm.astype(big.dtype))
+            return sm.reshape(nb, n_wp, page_tokens, kv, hd)
 
         out = {}
         for pos, c in caches.items():
-            out[pos] = {
-                key: (ins_paged(big, slot_caches[pos][key])
-                      if key in ("k", "v")
-                      else ins_dense(big, slot_caches[pos][key]))
-                for key, big in c.items()
-            }
+            oc = {}
+            for key, big in c.items():
+                if key in ("k", "v", "k_sz", "v_sz"):
+                    continue
+                oc[key] = ins_dense(big, slot_caches[pos][key])
+            for key in ("k", "v"):
+                if key not in c:
+                    continue
+                tiles = page_tiles(slot_caches[pos][key])
+                if quantized:
+                    q8, sz_rows = quant.quantize_pages(tiles)
+                    oc[key] = page_ops.write_pages(c[key], q8, phys)
+                    oc[key + "_sz"] = page_ops.write_pages(
+                        c[key + "_sz"], sz_rows, phys
+                    )
+                else:
+                    oc[key] = page_ops.write_pages(c[key], tiles, phys)
+            out[pos] = oc
         return out
 
     return insert
@@ -311,6 +354,7 @@ class EngineCells:
     paged: bool = False            # physical page-pool cache layout
     page_tokens: int = 0           # tokens per page (paged mode)
     n_pages: int = 0               # logical pages per slot (paged mode)
+    pool_dtype: str = "fp"         # pool payload: fp | bf16 | int8
     chunk_fn: Any = None           # chunked-prefill cell (paged mode only)
     chunk: int = 0                 # tokens per prefill chunk
 
@@ -338,7 +382,7 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
                       n_slots: int, max_seq: int,
                       buckets: Sequence[int], enc_len: int = 0,
                       paged: bool = False, page_tokens: int = 16,
-                      prefill_chunk: int = 0,
+                      prefill_chunk: int = 0, pool_dtype: str = "fp",
                       ) -> EngineCells:
     """Build the engine's cells. With a mesh, shardings come from the same
     rules as `make_bundle` (this is the ServeBundle path refactored for
@@ -347,7 +391,15 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
     `paged=True` lays the self-attention KV cache out as the physical
     page pool the serving pager allocates from (see module docstring);
     `prefill_chunk > 0` (paged, attention-only archs) additionally builds
-    the chunked-prefill cell."""
+    the chunked-prefill cell. `pool_dtype` picks the pool payload
+    (models.blocks.POOL_DTYPES): "fp" is the exact safety net, "int8"
+    block-quantizes every pool page (quantize-on-insert in the insert/
+    chunk/decode cells, dequantize-in-kernel on the gather side)."""
+    from repro.models import blocks as blk
+
+    blk.pool_kv_dtype(cfg, pool_dtype)         # validate early
+    if pool_dtype != "fp" and not paged:
+        raise ValueError("pool_dtype applies to the paged layout only")
     npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
     if cfg.num_encoder_layers and len(set(buckets)) != 1:
         raise ValueError(
@@ -394,7 +446,8 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
             # is gathered through the block table — replicate the paged
             # leaves (multi-host slot sharding stays a ROADMAP item)
             acaches = abstract_paged_caches(
-                cfg, n_slots, max_seq_total, page_tokens, enc_len
+                cfg, n_slots, max_seq_total, page_tokens, enc_len,
+                pool_dtype=pool_dtype,
             )
             cache_sh = shd.named(
                 mesh, jax.tree.map(lambda _: P(), acaches)
@@ -418,7 +471,7 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         aparams, _ = abstract_params(cfg)
         acaches = (
             abstract_paged_caches(cfg, n_slots, max_seq_total, page_tokens,
-                                  enc_len)
+                                  enc_len, pool_dtype=pool_dtype)
             if paged else abstract_caches(cfg, n_slots, max_seq_total,
                                           enc_len)
         )
@@ -432,8 +485,8 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
     for b in sorted(set(buckets)):
         cell = build_prefill_greedy(cfg, ctx, b)
         ins_cell = (
-            build_paged_cache_insert(b + npfx, page_tokens) if paged
-            else build_cache_insert()
+            build_paged_cache_insert(b + npfx, page_tokens, pool_dtype)
+            if paged else build_cache_insert()
         )
         if mesh is not None:
             prefills[b] = jax.jit(cell, in_shardings=(param_sh, None))
@@ -477,6 +530,7 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         paged=paged,
         page_tokens=page_tokens if paged else 0,
         n_pages=n_pages,
+        pool_dtype=pool_dtype if paged else "fp",
         chunk_fn=chunk_fn,
         chunk=prefill_chunk,
     )

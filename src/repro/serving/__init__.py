@@ -14,6 +14,46 @@ therefore real at the data-layout level, not an accounting overlay: the
 paper's three-level local/pool byte split prices exactly the pages the
 kernels gather.
 
+POOL DTYPE (`EngineConfig.pool_dtype`): the pool payload is polymorphic.
+
+* "fp" (default) stores cfg.dtype bit-identically — the exact safety
+  net; the engine is token-for-token equal to the contiguous layout.
+* "bf16" stores a 2-byte cast of the payload (fp16-class pooling).
+* "int8" BLOCK-QUANTIZES every page: the payload pool is int8 and each
+  attention cache dict grows per-page float32 (scale, zero) leaves
+  "k_sz"/"v_sz" of shape (stack, n_slots * n_pages, kv_heads, 2)
+  (`repro.kernels.quant` layout, affine mid-range: q = round((x -
+  zero)/scale), |dequant(q) - x| <= scale/2 per element). Inserts
+  quantize (bucket-insert and chunk cells quantize whole pages; the
+  decode cell requantizes the slot's tail page around the new token) and
+  the paged kernels dequantize each gathered page in their epilogue, so
+  only int8 payload plus the per-page scalars ever cross the pool link.
+
+  Bytes per cached token (the pager's dtype-aware accounting, also in
+  closed form as `core.access.kv_pool_token_bytes`):
+
+      2 (K and V) * kv_heads * head_dim * payload_bytes * n_attn_layers
+      + 2 * kv_heads * 8 / page_tokens * n_attn_layers     [int8 only]
+
+  i.e. ~4x fewer pool bytes than an fp32 pool (~2x vs bf16) at a
+  bounded logit drift — and under a FIXED local-tier byte budget the
+  remote share drops further because the same HBM holds ~4x more pages
+  (the serve_int8 bench lane asserts <= 0.30x of the fp16 lane's pool
+  bytes at >= 0.95x tokens/s).
+
+FUSED-SCATTER CONTRACT: on the kernel backends (pallas / interpret) no
+serving cell issues a standalone jnp page-scatter over the pool. The
+chunked-prefill cell's chunk K/V write is fused into the paged-prefill
+kernel itself — the chunk tiles (int8: pre-quantized payload +
+(scale, zero) rows) are kernel operands and the pool arrays are aliased
+input->output (`input_output_aliases`), killing the one-full-extra
+read+write of the chunk's K/V the separate scatter cost — and the
+bucket prefill-insert cell lands whole pages through the same aliased
+page-writer kernel (`kernels.page_io`). The reference backend keeps the
+unfused scatter-then-attend oracle, and fp-mode fused-vs-unfused cache
+parity is bit-for-bit (`tests/test_kernels.py` checks both, plus a
+jaxpr scan asserting the fused cells contain zero scatter ops).
+
 Architecture (one module per concern):
 
   queue.py    — `Request` / `RequestQueue` and deterministic arrival

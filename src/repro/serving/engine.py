@@ -59,7 +59,7 @@ import numpy as np
 from repro.common import hw
 from repro.common.config import SHAPES, ModelConfig
 from repro.common.parallel import ParallelCtx
-from repro.common.pytree import leaf_bytes, named_leaves
+from repro.common.pytree import leaf_bytes
 from repro.core import interference as itf
 from repro.core import roofline as rl
 from repro.core import tiers as tr
@@ -80,12 +80,21 @@ class EngineConfig:
     paged: bool = True              # cache = physical page pool + block
     # tables end-to-end (False keeps the per-slot contiguous layout — the
     # refactor's safety net, token-for-token identical)
+    pool_dtype: str = "fp"          # pool payload (models.blocks.
+    # POOL_DTYPES): "fp" stores cfg.dtype bit-identically (the exact
+    # safety net), "bf16" a 2-byte cast, "int8" per-page block
+    # quantization — ~4x fewer pool bytes per cached token at a bounded
+    # logit drift (quantize-on-insert, dequantize-in-kernel)
     prefill_chunk: Optional[int] = None   # tokens per prefill chunk
     # (paged, attention-only archs): interleave prompt chunks with decode
     # steps instead of serializing whole prompts against the batch
     # --- pager ---
     page_tokens: int = 16
     local_budget_frac: Optional[float] = 0.5   # of peak KV bytes; None=all
+    local_budget_bytes: Optional[float] = None  # ABSOLUTE local budget,
+    # overriding the fraction — the knob for cross-pool-dtype comparisons
+    # (same HBM, smaller pooled footprint: an int8 pool fits ~4x more
+    # pages locally than fp32 under the same byte budget)
     pager_policy: str = "hotness"              # hotness | static | none
     hot_window: int = 32
     cold_touch: float = 0.05
@@ -210,14 +219,27 @@ class ServeStats:
         }
 
 
+_PAGED_KEYS = ("k", "v", "k_sz", "v_sz")
+
+
 def _kv_bytes_per_token(acaches) -> float:
     """Self-attention K/V bytes per cached token per slot, from the global
-    abstract cache tree (leaves (stack, slots, seq, ...))."""
+    abstract cache tree — DTYPE-AWARE: the payload contribution follows
+    each k/v leaf's dtype (4B fp32, 2B bf16, 1B int8), and an int8 pool's
+    per-page float32 (scale, zero) leaves are amortized over the page's
+    tokens, so the pager, `phys_tiers()` and the admission corridor all
+    price the real pooled footprint (`core.access.kv_pool_token_bytes`
+    is the closed-form twin of this walk)."""
     total = 0.0
-    for name, leaf in named_leaves(acaches):
-        if name.endswith("/k") or name.endswith("/v"):
-            slots, seq = leaf.shape[1], leaf.shape[2]
-            total += leaf_bytes(leaf) / (slots * seq)
+    for pos, c in acaches.items():
+        if "k" not in c:
+            continue
+        k = c["k"]
+        tokens = k.shape[1] * k.shape[2]   # paged: P_phys * page_tokens;
+        # dense: slots * max_seq — both are total cached token-slots
+        for key in _PAGED_KEYS:
+            if key in c:
+                total += leaf_bytes(c[key]) / tokens
     return total
 
 
@@ -225,9 +247,10 @@ def _resident_bytes_per_slot(acaches) -> float:
     """Per-slot bytes of the non-paged decode state (SSM state, conv
     tails, cross-attention KV) — pinned local, streamed every step."""
     total = 0.0
-    for name, leaf in named_leaves(acaches):
-        if not (name.endswith("/k") or name.endswith("/v")):
-            total += leaf_bytes(leaf) / leaf.shape[1]
+    for pos, c in acaches.items():
+        for key, leaf in c.items():
+            if key not in _PAGED_KEYS:
+                total += leaf_bytes(leaf) / leaf.shape[1]
     return total
 
 
@@ -258,7 +281,9 @@ class ServingEngine:
         kv_tok = _kv_bytes_per_token(cells.abstract_caches)
         resident = _resident_bytes_per_slot(cells.abstract_caches)
         budget = None
-        if ecfg.local_budget_frac is not None:
+        if ecfg.local_budget_bytes is not None:
+            budget = float(ecfg.local_budget_bytes)
+        elif ecfg.local_budget_frac is not None:
             peak = kv_tok * cells.max_seq_total * ecfg.n_slots
             budget = ecfg.local_budget_frac * peak
         self.pager = KVPager(
@@ -281,7 +306,7 @@ class ServingEngine:
         if cells.paged:
             self.caches = M.make_paged_decode_caches(
                 cfg, ecfg.n_slots, cells.max_seq_total, cells.page_tokens,
-                enc_len=self._enc_len(),
+                enc_len=self._enc_len(), pool_dtype=cells.pool_dtype,
             )
         else:
             self.caches = M.make_decode_caches(
@@ -317,6 +342,7 @@ class ServingEngine:
             buckets=ecfg.prefill_buckets, enc_len=enc_len,
             paged=ecfg.paged, page_tokens=ecfg.page_tokens,
             prefill_chunk=ecfg.prefill_chunk or 0,
+            pool_dtype=ecfg.pool_dtype,
         )
         if params is None:
             params, _ = M.init_model(cfg, jax.random.PRNGKey(seed))

@@ -206,8 +206,13 @@ class KVPager:
         if not newly.any():
             return
         self._bt_cache = None
-        for p in np.nonzero(newly)[0]:
-            self.phys[slot, p] = self._free_phys.pop()
+        pages = np.nonzero(newly)[0]
+        # one batched pop off the LIFO tail, in the same order the old
+        # per-page pop() walked it (determinism: block tables replay
+        # identically across runs)
+        taken = self._free_phys[-len(pages):]
+        del self._free_phys[-len(pages):]
+        self.phys[slot, pages] = taken[::-1]
         if self.cfg.policy == "static":
             # first-come local until the budget fills; permanent thereafter
             for p in np.nonzero(newly)[0]:
@@ -254,10 +259,13 @@ class KVPager:
                 self._alloc_pages(int(s), p + 1)
 
     def release(self, slot: int) -> None:
-        if self.valid[slot].any():
+        """Free a finished/evicted slot's pages back to the pool in ONE
+        batched call (the per-page append loop this replaces was O(pages)
+        list ops on every retirement)."""
+        owned = self.valid[slot]
+        if owned.any():
             self._bt_cache = None
-        for p in np.nonzero(self.valid[slot])[0]:
-            self._free_phys.append(int(self.phys[slot, p]))
+            self._free_phys.extend(self.phys[slot, owned].tolist())
         self.phys[slot, :] = -1
         self.valid[slot, :] = False
         self.lengths[slot] = 0

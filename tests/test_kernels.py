@@ -420,3 +420,228 @@ def test_paged_prefill_chunk_walk_over_live_pager_table():
                                          impl=impl)
             np.testing.assert_allclose(np.asarray(out), np.asarray(r),
                                        rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------- block-quantized (int8) page pools
+from repro.kernels import quant
+from repro.kernels.page_io import ops as pops
+
+
+@pytest.mark.parametrize("page", [16, 64, 128])
+def test_page_quant_roundtrip_error_bounded(page):
+    """Satellite acceptance: per-page int8 round-trip error <= scale/2
+    across page sizes {16, 64, 128} and adversarial ranges (all-zero
+    page, single-outlier page)."""
+    KV, D = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(page), (4, page, KV, D),
+                          jnp.float32) * 3.0
+    zero_page = jnp.zeros((1, page, KV, D), jnp.float32)
+    outlier = jnp.zeros((1, page, KV, D), jnp.float32
+                        ).at[0, page // 2, 1, 3].set(500.0)
+    for pages in (x, zero_page, outlier):
+        q8, sz = quant.quantize_pages(pages)
+        back = quant.dequantize_pages(q8, sz)
+        err = np.abs(np.asarray(back - pages))
+        # bound per (page, head): half a quantization step
+        bound = np.asarray(sz[..., 0])[:, None, :, None] / 2
+        assert (err <= bound + 1e-6).all()
+    # the all-zero page round-trips exactly
+    q8, sz = quant.quantize_pages(zero_page)
+    assert np.abs(np.asarray(quant.dequantize_pages(q8, sz))).max() == 0.0
+
+
+@pytest.mark.parametrize("page", [16, 64, 128])
+def test_paged_decode_quant_kernel_matches_quant_oracle(page):
+    """The int8 decode kernel (scales on the scalar-prefetch channel,
+    dequant epilogue) == the dequant-gather oracle exactly, and both
+    track the fp dense oracle within the quantization drift."""
+    B, S, H, KV, D = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(page), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    lengths = jnp.array([(S // 2 + 17 * i) % S + 1 for i in range(B)],
+                        jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, page, seed=page)
+    k8, ksz = quant.quantize_pages(kp)
+    v8, vsz = quant.quantize_pages(vp)
+    r = dops.paged_decode_mha(q, k8, v8, bt, lengths, k_sz=ksz, v_sz=vsz,
+                              impl="reference")
+    p = dops.paged_decode_mha(q, k8, v8, bt, lengths, k_sz=ksz, v_sz=vsz,
+                              impl="interpret")
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+    dense = dref.decode_mha(q, k, v, lengths)
+    assert float(jnp.abs(p - dense).max()) < 0.05
+
+
+def test_paged_prefill_quant_gather_matches_quant_oracle():
+    """The int8 gather-only prefill kernel == the dequant-gather oracle."""
+    B, S, C, H, KV, D, page = 1, 256, 64, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (B, C, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    kp, vp, bt = _paged_layout(k, v, page, seed=3)
+    k8, ksz = quant.quantize_pages(kp)
+    v8, vsz = quant.quantize_pages(vp)
+    for c0 in (0, 64, S - C):
+        c0v = jnp.full((B,), c0, jnp.int32)
+        r = fops.paged_prefill_mha(q, k8, v8, bt, c0v, k_sz=ksz, v_sz=vsz,
+                                   impl="reference")
+        p = fops.paged_prefill_mha(q, k8, v8, bt, c0v, k_sz=ksz, v_sz=vsz,
+                                   impl="interpret")
+        np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------- fused chunk insert+attend
+def test_fused_prefill_insert_bit_for_bit_cache_parity_fp():
+    """Acceptance: the fused insert+attend kernel (chunk write through
+    input_output_aliases) produces BIT-FOR-BIT the same pool as the
+    unfused scatter-then-attend reference in fp mode, with matching
+    attention output, over a full chunk walk."""
+    B, S, C, H, KV, D, page = 1, 256, 64, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    k = _rand(ks[0], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    n_log = S // page
+    n_phys = 2 * n_log
+    rng = np.random.default_rng(5)
+    bt = jnp.asarray(rng.permutation(n_phys)[:n_log]
+                     .reshape(B, n_log).astype(np.int32))
+    kp = jnp.zeros((n_phys, page, KV, D), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    kp_ref, vp_ref = kp, vp
+    for c0 in range(0, S, C):
+        qc = _rand(jax.random.fold_in(ks[2], c0), (B, C, H, D),
+                   jnp.float32)
+        kn, vn = k[:, c0:c0 + C], v[:, c0:c0 + C]
+        c0v = jnp.full((B,), c0, jnp.int32)
+        o, kp, vp = fops.paged_prefill_insert_mha(
+            qc, kp, vp, kn, vn, bt, c0v, impl="interpret")
+        o_ref, kp_ref, vp_ref = fops.paged_prefill_insert_mha(
+            qc, kp_ref, vp_ref, kn, vn, bt, c0v, impl="reference")
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(kp_ref))
+        np.testing.assert_array_equal(np.asarray(vp), np.asarray(vp_ref))
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   rtol=2e-5, atol=2e-5)
+        dense = fref.mha(qc, k[:, :c0 + C], v[:, :c0 + C], causal=True,
+                         kv_offset=c0)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(dense),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_fused_prefill_insert_q8_parity():
+    """The int8 fused kernel writes payload AND (scale, zero) arrays
+    exactly like the unfused quantize-scatter-attend reference."""
+    B, S, C, H, KV, D, page = 1, 128, 32, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    k = _rand(ks[0], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    n_log = S // page
+    n_phys = 2 * n_log
+    rng = np.random.default_rng(7)
+    bt = jnp.asarray(rng.permutation(n_phys)[:n_log]
+                     .reshape(B, n_log).astype(np.int32))
+    pools = {
+        impl: [jnp.zeros((n_phys, page, KV, D), jnp.int8),
+               jnp.zeros((n_phys, page, KV, D), jnp.int8),
+               jnp.zeros((n_phys, KV, 2), jnp.float32),
+               jnp.zeros((n_phys, KV, 2), jnp.float32)]
+        for impl in ("interpret", "reference")
+    }
+    n_wp = C // page
+    for c0 in range(0, S, C):
+        qc = _rand(jax.random.fold_in(ks[2], c0), (B, C, H, D),
+                   jnp.float32)
+        k8, ksz = quant.quantize_pages(
+            k[:, c0:c0 + C].reshape(B, n_wp, page, KV, D))
+        v8, vsz = quant.quantize_pages(
+            v[:, c0:c0 + C].reshape(B, n_wp, page, KV, D))
+        k8, v8 = k8.reshape(B, C, KV, D), v8.reshape(B, C, KV, D)
+        c0v = jnp.full((B,), c0, jnp.int32)
+        outs = {}
+        for impl in ("interpret", "reference"):
+            kp, vp, kszp, vszp = pools[impl]
+            outs[impl], kp, vp, kszp, vszp = \
+                fops.paged_prefill_insert_mha_q8(
+                    qc, kp, vp, kszp, vszp, k8, v8, ksz, vsz, bt, c0v,
+                    impl=impl)
+            pools[impl] = [kp, vp, kszp, vszp]
+        for a, b in zip(pools["interpret"], pools["reference"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(outs["interpret"]),
+                                   np.asarray(outs["reference"]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_page_writer_matches_scatter_and_is_scatter_free():
+    """kernels.page_io: the aliased writer == the jnp scatter oracle on
+    fp/int8 payloads and (scale, zero) rows, and its jaxpr contains no
+    scatter primitive."""
+    nb, P, page, KV, hd, n_wp = 2, 12, 8, 2, 16, 3
+    pool = _rand(jax.random.PRNGKey(0), (nb, P, page, KV, hd),
+                 jnp.float32)
+    tiles = _rand(jax.random.PRNGKey(1), (nb, n_wp, page, KV, hd),
+                  jnp.float32)
+    phys = jnp.array([9, 0, 4], jnp.int32)
+    a = pops.write_pages(pool, tiles, phys, impl="reference")
+    b = pops.write_pages(pool, tiles, phys, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sz = jnp.zeros((nb, P, KV, 2), jnp.float32)
+    szt = _rand(jax.random.PRNGKey(2), (nb, n_wp, KV, 2), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pops.write_pages(sz, szt, phys, impl="interpret")),
+        np.asarray(pops.write_pages(sz, szt, phys, impl="reference")))
+    jx = jax.make_jaxpr(
+        lambda *a: pops.write_pages(*a, impl="interpret")
+    )(pool, tiles, phys)
+    assert "scatter" not in repr(jx)
+
+
+def test_chunked_prefill_cell_issues_zero_page_scatters():
+    """Acceptance: with the kernels active (interpret backend, the same
+    dispatch TPU takes), the whole chunked-prefill CELL — embedding,
+    layer stack, paged attention, cache write — lowers to a jaxpr with
+    ZERO scatter ops in BOTH pool dtypes: the chunk's KV write rides the
+    paged-prefill kernel's output aliasing instead of a standalone jnp
+    page scatter. The fp fused path's bit-for-bit cache parity vs the
+    unfused oracle is asserted in
+    `test_fused_prefill_insert_bit_for_bit_cache_parity_fp`."""
+    import dataclasses
+
+    from repro import configs, kernels
+    from repro.common.parallel import ParallelCtx
+    from repro.models import model as M
+    from repro.runtime.serve import build_prefill_chunk
+
+    cfg = dataclasses.replace(configs.reduced("smollm_360m"),
+                              dtype="float32")
+    ctx = ParallelCtx(remat="none")
+    page, chunk, n_slots, max_seq = 4, 8, 2, 16
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, chunk), jnp.int32)
+    bt = jnp.zeros((n_slots, max_seq // page), jnp.int32)
+    kernels.force_backend("interpret")
+    try:
+        for pool_dtype in ("fp", "int8"):
+            caches = M.make_paged_decode_caches(
+                cfg, n_slots, max_seq, page, pool_dtype=pool_dtype)
+            cell = build_prefill_chunk(cfg, ctx, page)
+            jx = jax.make_jaxpr(cell)(
+                params, toks, caches, jnp.int32(0), jnp.int32(0), bt)
+            assert "scatter" not in repr(jx), pool_dtype
+    finally:
+        kernels.force_backend(None)
+
+
+def test_select_impl_dispatch():
+    """The shared dispatch helper all ops.py modules route through."""
+    from repro.kernels import select_impl
+
+    assert select_impl("reference") == ("reference", False)
+    assert select_impl("interpret") == ("pallas", True)
+    assert select_impl("pallas") == ("pallas", False)
+    with pytest.raises(ValueError):
+        select_impl("cuda")

@@ -713,3 +713,146 @@ def test_paged_park_position_clears_partial_last_page():
             assert eng.batcher.park_pos == eng.cells.n_pages * page
             assert eng.batcher.park_pos > S
     assert outs[True] == outs[False]
+
+
+# ------------------------------------------- block-quantized page pools
+def test_pool_dtype_fp_is_exact_pr4_layout():
+    """The pool_dtype="fp" safety net: byte-identical tree to the PR-4
+    paged caches — no (scale, zero) leaves, payload in cfg.dtype."""
+    cfg = _cfg()
+    caches = M.make_paged_decode_caches(cfg, 2, 32, 8)     # default "fp"
+    for pos, c in caches.items():
+        assert "k_sz" not in c and "v_sz" not in c
+        assert c["k"].dtype == jnp.dtype(cfg.dtype)
+        assert c["v"].dtype == jnp.dtype(cfg.dtype)
+
+
+def test_int8_cache_layout_and_bytes_accounting():
+    """Tree walk == closed-form `core.access.kv_pool_token_bytes`, for
+    both pool dtypes, and the int8 cut vs fp32 is < 0.3x."""
+    from repro.core.access import kv_pool_token_bytes
+    from repro.serving.engine import _kv_bytes_per_token
+
+    cfg = _cfg()
+    page, n_slots, max_seq = 8, 2, 32
+    n_phys = n_slots * (max_seq // page)
+    caches = M.make_paged_decode_caches(cfg, n_slots, max_seq, page,
+                                        pool_dtype="int8")
+    for pos, c in caches.items():
+        assert c["k"].dtype == jnp.int8 and c["v"].dtype == jnp.int8
+        assert c["k_sz"].shape == (cfg.num_layers, n_phys,
+                                   cfg.num_kv_heads, 2)
+        assert c["k_sz"].dtype == jnp.float32
+    walk = _kv_bytes_per_token(caches)
+    formula = kv_pool_token_bytes(cfg.num_layers, cfg.num_kv_heads,
+                                  cfg.head_dim, page, "int8")
+    assert walk == pytest.approx(formula)
+    fp_caches = M.make_paged_decode_caches(cfg, n_slots, max_seq, page)
+    fp_walk = _kv_bytes_per_token(fp_caches)
+    assert fp_walk == pytest.approx(kv_pool_token_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, page, "fp"))
+    assert walk < 0.3 * fp_walk
+
+
+def test_pool_dtype_validation():
+    with pytest.raises(ValueError, match="pool_dtype"):
+        ServingEngine.build(_cfg(), CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            pool_dtype="fp8",
+        ))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine.build(_cfg(), CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            paged=False, pool_dtype="int8",
+        ))
+
+
+def test_int8_engine_cuts_pool_bytes_at_equal_schedule():
+    """The tentpole's accounting end-to-end: identical trace, equal
+    steps, same ABSOLUTE local budget — the int8 engine must move far
+    fewer pool bytes than the fp32 engine (smaller pooled footprint
+    AND more pages fitting locally), recompile-free."""
+    cfg = _cfg()
+    outs = {}
+    budget = None
+    for pd in ("fp", "int8"):
+        ecfg = EngineConfig(
+            n_slots=2, max_seq=96, prefill_buckets=(64,), page_tokens=8,
+            hot_window=16, admission="greedy", pool_dtype=pd,
+            local_budget_frac=0.3 if budget is None else None,
+            local_budget_bytes=budget,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg)
+        if budget is None:
+            budget = eng.pager.budget
+        reqs = long_context_stream(3, cfg.vocab_size, seed=2,
+                                   prompt_bucket=64, gen_range=(8, 16),
+                                   arrival_rate=1e9)
+        stats = eng.run(reqs)
+        assert all(v <= 1 for v in eng.compile_counts().values())
+        outs[pd] = stats
+    fp, i8 = outs["fp"], outs["int8"]
+    assert fp.steps == i8.steps            # equal schedule (length-based)
+    assert i8.pager["pool_bytes"] < 0.35 * fp.pager["pool_bytes"]
+    assert i8.pager["local_bytes"] < fp.pager["local_bytes"]
+
+
+def test_int8_logit_drift_bounded_lockstep():
+    """Teacher-forced lockstep decode over fp vs int8 paged caches: the
+    same token stream feeds both pool dtypes, so the max logit gap
+    isolates pure quantization drift (no greedy cascade). Runs the
+    serve_int8 bench lane's own probe so the CI gate and the bench lane
+    measure drift with one methodology, against the one documented
+    bound."""
+    from benchmarks.bench_serving import INT8_LOGIT_DRIFT, \
+        _logit_drift_probe
+
+    drift = _logit_drift_probe(_cfg(), steps=12, page_tokens=4)
+    assert 0.0 < drift <= INT8_LOGIT_DRIFT
+
+
+try:
+    import hypothesis.strategies as st_q
+    from hypothesis import given as given_q, settings as settings_q
+
+    quant_churn_ops = st_q.lists(
+        st_q.tuples(
+            st_q.integers(min_value=0, max_value=3),   # op kind
+            st_q.integers(min_value=0, max_value=2),   # slot
+            st_q.integers(min_value=1, max_value=64),  # length
+        ),
+        min_size=1, max_size=50,
+    )
+
+    @given_q(quant_churn_ops)
+    @settings_q(max_examples=40, deadline=None)
+    def test_pager_allocator_churn_quantized_pools(ops):
+        """Satellite: under random admit/finish sequences with the int8
+        pool's (smaller, scale-carrying) bytes-per-token, the free list
+        never double-frees or leaks — the batched `release` hands every
+        owned page back exactly once."""
+        from repro.core.access import kv_pool_token_bytes
+
+        bpt = kv_pool_token_bytes(4, 2, 16, 8, "int8")
+        pcfg = PagerConfig(page_tokens=8,
+                           local_budget_bytes=4 * 8 * bpt,
+                           policy="hotness", hot_window=16,
+                           cold_touch=0.1)
+        p = KVPager(3, 64, bytes_per_token=bpt, resident_bytes=0.0,
+                    pcfg=pcfg)
+        for kind, slot, length in ops:
+            if kind == 0:
+                p.admit(slot, min(length, p.max_seq))
+            elif kind == 1 and p.valid[slot].any():
+                p.release(slot)               # request finish/eviction
+            elif kind == 2 and p.lengths[slot] > 0:
+                p.extend(slot, min(p.lengths[slot] + length, p.max_seq))
+            else:
+                active = (p.lengths > 0) & (p.lengths < p.max_seq)
+                p.step(active)
+            _pager_invariants(p)
+        for slot in range(p.n_slots):         # drain: everything returns
+            p.release(slot)
+        assert sorted(p._free_phys) == list(range(p.n_slots * p.n_pages))
+except ImportError:  # pragma: no cover - conftest registers a fallback
+    pass
