@@ -33,6 +33,7 @@ MODULES = [
     ("fig12", "benchmarks.bench_placement_case"),
     ("fig13", "benchmarks.bench_scheduler_case"),
     ("serve", "benchmarks.bench_serving"),
+    ("pager", "benchmarks.bench_pager_churn"),
     ("dryrun", "benchmarks.bench_dryrun_sweep"),
 ]
 

@@ -30,6 +30,12 @@
         --interpret a b
         # the CI quantized lane: same engines over int8 pools,
         # drift-bounded token agreement
+    PYTHONPATH=src python scripts/dev_serve.py --paged --prefix-cache \
+        --interpret a b
+        # the CI prefix-cache parity lane (attention-only archs): two
+        # waves of identical prompts through one engine — wave 2 must
+        # hit the radix trie (mapping the cached prompt pages instead
+        # of re-storing them) and replay wave 1's tokens bit-for-bit
 """
 
 import dataclasses
@@ -44,20 +50,18 @@ from repro.common.parallel import ParallelCtx
 from repro.models import model as M
 from repro.models.frontends import synthetic_frontend_embeds
 from repro.runtime.serve import chunked_prefill_supported
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    EngineConfig,
+    INT8_TOKEN_AGREEMENT,
+    Request,
+    ServingEngine,
+)
 
 ctx = ParallelCtx(remat="none")
 
 B, S, GEN = 2, 8, 6
 MAXS = S + GEN
 PAGE = 4
-
-# documented int8 drift bound: greedy token agreement vs the fp naive
-# loop, in lockstep position over all B*GEN tokens. Per-page int8 KV
-# error is <= scale/2 (~0.4% of each page's range), which perturbs
-# logits by O(1e-2) — most argmax margins survive that, but a close
-# top-2 pair may flip and the stream diverges from there on.
-INT8_TOKEN_AGREEMENT = 0.5
 
 
 def naive_greedy(cfg, params, prompts, extras):
@@ -94,6 +98,31 @@ def engine_greedy(cfg, params, prompts, *, paged, chunk=None,
     return np.stack([np.asarray(r.output) for r in reqs]), engine
 
 
+def engine_prefix_greedy(cfg, params, prompts, *, pool_dtype="fp"):
+    """Two waves of the SAME prompts through ONE engine with the shared-
+    prefix radix cache on: wave 1 populates the trie (cold misses), wave
+    2 must hit it — mapping the cached prompt pages instead of storing
+    duplicates — while emitting bit-identical greedy tokens."""
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
+        page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
+        admission="greedy", paged=True, pool_dtype=pool_dtype,
+        prefix_cache=True,
+    )
+    engine = ServingEngine.build(cfg, ctx, ecfg, params=params)
+    waves, hits = [], 0
+    for wave in range(2):
+        reqs = [
+            Request(request_id=wave * B + i, tokens=np.asarray(prompts[i]),
+                    max_new_tokens=GEN, arrival=0.0)
+            for i in range(B)
+        ]
+        stats = engine.run(reqs)
+        waves.append(np.stack([np.asarray(r.output) for r in reqs]))
+        hits = stats.prefix["hits"]
+    return waves, hits, engine
+
+
 def check_teacher_forcing(cfg, params, toks, extras):
     full = {"tokens": toks[:, : S + 1], **extras}
     logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg, ctx))(
@@ -114,6 +143,7 @@ def check_teacher_forcing(cfg, params, toks, extras):
 def main():
     args = sys.argv[1:]
     paged_only = "--paged" in args
+    prefix_cache = "--prefix-cache" in args
     if "--interpret" in args:
         kernels.force_backend("interpret")
     pool_dtype = "fp"
@@ -180,6 +210,26 @@ def main():
                 eq_err += bad
         eq_err = "n/a" if naive is None else eq_err
 
+        prefix_note = ""
+        if prefix_cache and chunked_prefill_supported(cfg):
+            waves, hits, engine = engine_prefix_greedy(
+                cfg, params, prompts, pool_dtype=pool_dtype)
+            counts = engine.compile_counts()
+            compiles += sum(v for v in counts.values() if v > 0)
+            # the cache must be invisible to the tokens: the hitting wave
+            # replays the populating wave exactly (and both match naive —
+            # drift-bounded when the pool is quantized)
+            eq_ok &= bool((waves[0] == waves[1]).all())
+            eq_ok &= hits >= B          # every wave-2 prompt hits the trie
+            if naive is not None:
+                agree = float((naive == waves[1]).mean())
+                if pool_dtype == "int8":
+                    agree_min = min(agree_min, agree)
+                    eq_ok &= agree >= INT8_TOKEN_AGREEMENT
+                else:
+                    eq_ok &= agree == 1.0
+            prefix_note = f" prefix_hits={hits}"
+
         status = "OK " if (tf_ok and eq_ok) else "FAIL"
         drift = (f" agree_min={agree_min:.2f}"
                  if pool_dtype == "int8" and naive is not None else "")
@@ -188,7 +238,8 @@ def main():
             f"decode_err={err_dec:9.2e} "
             f"lanes={'+'.join(n for n, _ in lanes)} "
             f"pool={pool_dtype} "
-            f"engine_mismatch={eq_err}{drift} compiles={compiles} {status}"
+            f"engine_mismatch={eq_err}{drift}{prefix_note} "
+            f"compiles={compiles} {status}"
         )
         assert status == "OK ", arch
     print("ALL OK")

@@ -103,6 +103,31 @@ def kv_pool_token_bytes(n_attn_layers: int, kv_heads: int, head_dim: int,
     return per_tok
 
 
+def kv_dedup_token_bytes(n_tokens: int, shared_tokens: int,
+                         n_sharers: int, token_bytes: float) -> float:
+    """Deduplicated pool bytes per cached token when `n_sharers` slots of
+    `n_tokens` each share a `shared_tokens`-long prefix (the serving
+    prefix cache, `serving.prefix_cache`): the shared prefix is stored
+    ONCE, every private suffix once each —
+
+        (n_sharers * (n_tokens - shared_tokens) + shared_tokens)
+            * token_bytes / (n_sharers * n_tokens)
+
+    The closed-form twin of `KVPager.phys_tiers()` under sharing: at
+    shared_tokens = 0 it degenerates to `token_bytes`; as the shared
+    prefix dominates, footprint per token tends to token_bytes /
+    n_sharers — the memory over-provisioning the paper quantifies,
+    reclaimed by refcounted pages instead of extra capacity."""
+    if n_sharers < 1:
+        raise ValueError("n_sharers must be >= 1")
+    if not 0 <= shared_tokens <= n_tokens:
+        raise ValueError("need 0 <= shared_tokens <= n_tokens")
+    if n_tokens == 0:
+        return 0.0
+    stored = n_sharers * (n_tokens - shared_tokens) + shared_tokens
+    return stored * token_bytes / (n_sharers * n_tokens)
+
+
 def decode_cache_split(seq_len: int) -> list[tuple[str, float, float]]:
     """(suffix, byte_fraction, touches) portions of a seq-indexed KV leaf
     for one decode step under the hot-tail/cold-prefix traffic model."""

@@ -47,6 +47,16 @@ kernels dequantize in their gather epilogue. Bytes per cached token =
 2 * KV * hd * payload_bytes * nb (+ 2 * KV * 8 * nb / page_tokens for
 the int8 scale arrays) — `core.access.kv_pool_token_bytes` — which is
 what the pager and admission corridor price.
+
+Block tables may ALIAS (shared prompt prefixes, `serving.prefix_cache`):
+the gather side reads an aliased page identically for every sharer, and
+the write side never sees one — the pager guarantees write targets are
+private, COW-splitting shared tail pages via `build_page_copy` (the
+one cell sharing adds; the kernels themselves need zero changes). The
+deduplicated footprint is then
+(n_sharers * (n_tokens - shared) + shared) * token_bytes instead of
+n_sharers * n_tokens * token_bytes — `core.access.kv_dedup_token_bytes`
+is the closed-form twin of `KVPager.phys_tiers()` under sharing.
 """
 
 from __future__ import annotations
@@ -311,6 +321,41 @@ def build_paged_cache_insert(bucket_total: int, page_tokens: int,
     return insert
 
 
+def build_page_copy():
+    """Copy one PHYSICAL page (payload + int8 scale/zero rows when
+    present) to another — the copy-on-write cell behind the prefix
+    cache's shared pages (`serving.prefix_cache`): when a slot is about
+    to write into a page whose refcount > 1, the pager repoints it at a
+    free page (`KVPager.cow_split`) and the engine runs this cell to
+    materialize the private duplicate BEFORE the decode cell's scatter —
+    so a shared page is never mutated, which is the whole COW contract.
+    One dynamic_slice + dynamic_update_slice per paged leaf along the
+    physical-page axis; resident leaves pass through untouched (they are
+    per-slot, never shared). `src`/`dst` are traced scalars: page churn
+    replays through one compiled cell."""
+
+    def copy(caches, src, dst):
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
+        def cp(big):
+            page = jax.lax.dynamic_slice_in_dim(big, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, page, dst, axis=1
+            )
+
+        out = {}
+        for pos, c in caches.items():
+            oc = dict(c)
+            for key in ("k", "v", "k_sz", "v_sz"):
+                if key in c:
+                    oc[key] = cp(c[key])
+            out[pos] = oc
+        return out
+
+    return copy
+
+
 def build_prefill_chunk(cfg: ModelConfig, ctx: ParallelCtx,
                         page_tokens: int):
     """Chunked-prefill cell: one page-aligned chunk of one request's
@@ -357,6 +402,8 @@ class EngineCells:
     pool_dtype: str = "fp"         # pool payload: fp | bf16 | int8
     chunk_fn: Any = None           # chunked-prefill cell (paged mode only)
     chunk: int = 0                 # tokens per prefill chunk
+    copy_fn: Any = None            # COW page-copy cell (paged mode):
+    #                     (caches, src_phys, dst_phys) -> caches [donates]
 
     def compile_counts(self) -> Dict[str, int]:
         """Executable-cache sizes of every cell — the no-recompile
@@ -374,6 +421,8 @@ class EngineCells:
             out[f"insert_{b}"] = size(fn)
         if self.chunk_fn is not None:
             out["prefill_chunk"] = size(self.chunk_fn)
+        if self.copy_fn is not None:
+            out["page_copy"] = size(self.copy_fn)
         return out
 
 
@@ -517,6 +566,19 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         else:
             chunk_fn = jax.jit(chunk_cell, donate_argnums=(2,))
 
+    copy_fn = None
+    if paged:
+        copy_cell = build_page_copy()
+        if mesh is not None:
+            copy_fn = jax.jit(
+                copy_cell,
+                in_shardings=(cache_sh, None, None),
+                out_shardings=cache_sh,
+                donate_argnums=(0,),
+            )
+        else:
+            copy_fn = jax.jit(copy_cell, donate_argnums=(0,))
+
     return EngineCells(
         decode_fn=decode,
         prefill_fns=prefills,
@@ -533,4 +595,5 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         pool_dtype=pool_dtype if paged else "fp",
         chunk_fn=chunk_fn,
         chunk=prefill_chunk,
+        copy_fn=copy_fn,
     )

@@ -41,6 +41,34 @@ POOL DTYPE (`EngineConfig.pool_dtype`): the pool payload is polymorphic.
   (the serve_int8 bench lane asserts <= 0.30x of the fp16 lane's pool
   bytes at >= 0.95x tokens/s).
 
+SHARED-PREFIX RADIX CACHE (`EngineConfig.prefix_cache`): requests behind
+the same system prompt share bit-identical prefix KV (K/V at position i
+depends on token i, the weights and the rotary phase — not the suffix),
+so the pager refcounts physical pages and `prefix_cache.py` keys a radix
+trie on page-granular token blocks (one full `page_tokens`-token tuple
+per edge; terminal partial-block nodes cover a prompt's trailing partial
+page). Lifecycle: on admission the prompt is matched against the trie
+and the hit's pages are guard-pinned, mapped into the slot's block table
+(bucketed prefill inserts into private pages then `remap_shared`
+deduplicates — the fused-scatter contract below demands uniquely owned
+write targets — while chunked prefill `map_shared`s up front and starts
+at the first divergent chunk, genuinely skipping the shared chunks'
+compute); the trie pins its pages (`KVPager.pin`) so they outlive the
+donor slot, `release` decrefs and frees only at refcount zero, and LRU
+leaves are reclaimed under free-list pressure. A shared page is NEVER
+written: the moment a slot's write cursor lands inside one (a shared
+partial tail), `KVPager.cow_split` repoints the writer at a fresh page
+and the engine's `page_copy` cell (`runtime.serve.build_page_copy`)
+materializes the private copy first. int8 pools share their per-page
+(scale, zero) leaves alongside the payload by construction (same
+physical page ids). Capacity accounting is deduplicated — a prefix
+shared by n slots occupies ONE page of budget (`phys_tiers()`,
+`local/pool_bytes_used`); per-token footprint in closed form is
+`core.access.kv_dedup_token_bytes`:
+
+    (n_sharers * (n_tokens - shared) + shared) * token_bytes
+        / (n_sharers * n_tokens)
+
 FUSED-SCATTER CONTRACT: on the kernel backends (pallas / interpret) no
 serving cell issues a standalone jnp page-scatter over the pool. The
 chunked-prefill cell's chunk K/V write is fused into the paged-prefill
@@ -57,7 +85,11 @@ jaxpr scan asserting the fused cells contain zero scatter ops).
 Architecture (one module per concern):
 
   queue.py    — `Request` / `RequestQueue` and deterministic arrival
-                scenarios (chat / long-context / bursty).
+                scenarios (chat / long-context / bursty /
+                shared-prefix).
+  prefix_cache.py — the shared-prefix radix trie over the pager's
+                physical pages: page-block keying, LRU leaf eviction,
+                free-list-pressure reclaim (see the section above).
   batcher.py  — fixed-slot continuous batching: requests flow through
                 `n_slots` decode lanes; admission on free slot, release on
                 completion; inactive slots mask their cache writes by
@@ -116,10 +148,12 @@ from repro.serving.batcher import ContinuousBatcher, Slot
 from repro.serving.engine import (
     AdmissionController,
     EngineConfig,
+    INT8_TOKEN_AGREEMENT,
     ServeStats,
     ServingEngine,
 )
 from repro.serving.kv_pager import KVPager, PagerConfig, StepTraffic
+from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.queue import (
     Request,
     RequestQueue,
@@ -128,14 +162,18 @@ from repro.serving.queue import (
     chat_stream,
     long_context_stream,
     make_scenario,
+    shared_prefix_stream,
 )
 
 __all__ = [
     "AdmissionController",
     "ContinuousBatcher",
     "EngineConfig",
+    "INT8_TOKEN_AGREEMENT",
     "KVPager",
     "PagerConfig",
+    "PrefixCache",
+    "PrefixHit",
     "Request",
     "RequestQueue",
     "SCENARIOS",
@@ -147,4 +185,5 @@ __all__ = [
     "chat_stream",
     "long_context_stream",
     "make_scenario",
+    "shared_prefix_stream",
 ]

@@ -105,7 +105,10 @@ class ContinuousBatcher:
         )
 
     def admit(self, request: Request, start_pos: int,
-              phase: str = "decode") -> Slot:
+              phase: str = "decode", prefill_pos: int = 0) -> Slot:
+        """`prefill_pos` (prefill phase only): first prompt token still to
+        be prefilled — a prefix-cache hit maps the leading pages shared
+        and starts chunking at the first divergent page instead of 0."""
         if not self._free:
             raise RuntimeError("no free slot")
         slot = self.slots[self._free.pop()]
@@ -118,7 +121,7 @@ class ContinuousBatcher:
         else:
             slot.t = self.park_pos  # masked until begin_decode
             slot.emitted = 0
-            slot.prefill_pos = 0
+            slot.prefill_pos = prefill_pos
         return slot
 
     def begin_decode(self, slot: Slot, start_pos: int) -> None:

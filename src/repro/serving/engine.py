@@ -68,7 +68,17 @@ from repro.models.frontends import synthetic_frontend_embeds
 from repro.runtime import serve as serve_rt
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_pager import KVPager, PagerConfig
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.queue import Request, RequestQueue
+
+# Minimum per-request greedy-token agreement an int8 pool must keep vs
+# the fp reference: per-page block quantization bounds logit drift, but a
+# near-tie can flip a token and diverge the suffix, so parity is measured
+# as prefix agreement, not exactness. Shared by dev_serve's CI lanes and
+# the prefix-cache parity tests (an int8 pool with the prefix cache ON
+# dequantizes the same shared (payload, scale, zero) pages every sharer,
+# so ON-vs-OFF drift stays inside the same bar).
+INT8_TOKEN_AGREEMENT = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +113,16 @@ class EngineConfig:
     # predictor name whose staged page-ins overlap compute
     prefetch: Optional[str] = None
     prefetch_degree: int = 8
+    # --- shared-prefix radix cache (serving.prefix_cache) ---
+    prefix_cache: bool = False      # dedup page-aligned shared prompt
+    # prefixes across requests: trie match on admission maps cached pages
+    # into the slot's block table (refcounted; prefill skipped for the
+    # matched prefix in virtual time — chunked prefill genuinely starts
+    # at the first divergent page), COW split on first write into a
+    # shared tail page. Paged mode only; frontend/encoder archs excluded
+    # (per-request embeds/cross-KV make "same tokens" != "same KV")
+    prefix_cache_pages: Optional[int] = None   # trie capacity cap (pages);
+    # None = bounded only by free-list pressure (LRU reclaim on demand)
     # --- admission ---
     admission: str = "loi"                     # loi | greedy
     knee_excess: float = 0.75
@@ -197,12 +217,14 @@ class ServeStats:
     pager: dict
     admission_blocks: int
     max_concurrency: int
+    prefix: dict = dataclasses.field(default_factory=dict)   # prefix-cache
+    # counter deltas for this run (empty when the cache is off)
 
     def summary(self) -> Dict[str, float]:
         def pct(a, q):
             return float(np.percentile(a, q)) if len(a) else float("nan")
 
-        return {
+        out = {
             "n_requests": self.n_requests,
             "tokens": self.tokens,
             "steps": self.steps,
@@ -217,6 +239,10 @@ class ServeStats:
             "admission_blocks": self.admission_blocks,
             "max_concurrency": self.max_concurrency,
         }
+        if self.prefix:
+            out["prefix_hit_rate"] = self.prefix["hit_rate"]
+            out["cow_splits"] = self.pager.get("cow_splits", 0)
+        return out
 
 
 _PAGED_KEYS = ("k", "v", "k_sz", "v_sz")
@@ -299,6 +325,33 @@ class ServingEngine:
             ),
             topo=self.topo,
         )
+        self.prefix_cache: Optional[PrefixCache] = None
+        if ecfg.prefix_cache:
+            if not cells.paged:
+                raise ValueError(
+                    "prefix_cache needs paged=True: sharing happens by "
+                    "aliasing block-table rows onto one physical page"
+                )
+            if cfg.frontend or cfg.num_encoder_layers:
+                raise ValueError(
+                    "prefix_cache requires token-only decoder archs: "
+                    "frontend embeds and encoder cross-KV are per-request "
+                    "state, so identical prompt tokens do not imply "
+                    "identical cached KV"
+                )
+            if not serve_rt.chunked_prefill_supported(cfg):
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache needs an attention-only "
+                    "decoder stack — SSM/conv state is a per-slot "
+                    "recurrence, not page-addressable KV, so aliasing "
+                    "block-table rows shares nothing there"
+                )
+            self.prefix_cache = PrefixCache(
+                ecfg.page_tokens, capacity_pages=ecfg.prefix_cache_pages,
+            )
+            # wire the free-list-pressure callback: the allocator evicts
+            # LRU trie leaves before declaring the pool exhausted
+            self.pager.prefix_cache = self.prefix_cache
         self.admission = AdmissionController.from_catalog(
             self.topo, ecfg.catalog_arch, ecfg.catalog_shape,
             mode=ecfg.admission, knee_excess=ecfg.knee_excess,
@@ -383,6 +436,14 @@ class ServingEngine:
             self._admit_chunked(req, now)
             return
         bucket = self.batcher.bucket_for(req.prompt_len)
+        # shared-prefix match BEFORE any allocation, guard-pinned so the
+        # admission's own page allocation cannot reclaim the matched trie
+        # pages out from under the hit
+        hit = None
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.match(req.tokens)
+            if hit is not None:
+                self.pager.pin(hit.all_pages)
         batch = {"tokens": jnp.asarray(req.tokens[None, :]),
                  **self._frontend_extras(req, bucket)}
         slot_caches, tok = self.cells.prefill_fns[bucket](self.params, batch)
@@ -401,7 +462,23 @@ class ServingEngine:
             self.caches = self.cells.insert_fns[bucket](
                 self.caches, slot_caches, np.int32(slot.index)
             )
-        self.virtual_s += self._prefill_dt(start)
+        n_matched = 0
+        if self.prefix_cache is not None:
+            if hit is not None:
+                # insert-then-dedupe: the fused insert scattered the full
+                # prompt into private pages (its kernel contract demands
+                # uniquely owned targets); the matched prefix now remaps
+                # onto the trie's bit-identical pages and the duplicates
+                # free — so the matched pages cost no pool capacity and,
+                # below, no prefill time
+                self.pager.remap_shared(slot.index, hit.all_pages)
+                self.pager.unpin(hit.all_pages)
+                n_matched = hit.n_tokens
+            self.prefix_cache.insert(
+                req.tokens, self.pager.phys[slot.index], self.pager,
+                include_partial=True,
+            )
+        self.virtual_s += self._prefill_dt(start - n_matched)
         first = int(np.asarray(tok)[0])
         self.tokens[slot.index] = first
         req.admitted = now
@@ -421,7 +498,30 @@ class ServingEngine:
                 f"request {req.request_id}: prompt_len {req.prompt_len} "
                 f"must be a positive multiple of prefill_chunk {C}"
             )
-        self.batcher.admit(req, start_pos=0, phase="prefill")
+        # prefix-cache hit: map the matched full pages shared and start
+        # chunking at the first divergent CHUNK — those chunks never tick,
+        # so their compute and virtual prefill time are genuinely skipped.
+        # The final chunk always runs (its logits emit the first token),
+        # so the slot's write frontier never lands inside a shared page
+        # from this path (COW comes from the bucket path's partial tails).
+        n_share = 0
+        shared_pages: List[int] = []
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.match(req.tokens)
+            if hit is not None:
+                n_share = (min(hit.n_full_tokens, req.prompt_len - C)
+                           // C) * C
+                if n_share > 0:
+                    shared_pages = hit.pages[
+                        :n_share // self.ecfg.page_tokens]
+                    self.pager.pin(shared_pages)   # guard pin
+                else:
+                    n_share = 0
+        slot = self.batcher.admit(req, start_pos=0, phase="prefill",
+                                  prefill_pos=n_share)
+        if n_share:
+            self.pager.map_shared(slot.index, shared_pages, n_share)
+            self.pager.unpin(shared_pages)
         req.admitted = now
 
     def _prefill_tick(self) -> bool:
@@ -448,6 +548,12 @@ class ServingEngine:
         self.virtual_s += self._prefill_dt(C, final=(end == req.prompt_len))
         slot.prefill_pos = end
         if end == req.prompt_len:
+            if self.prefix_cache is not None:
+                # chunked prompts are page-multiples: full blocks only
+                self.prefix_cache.insert(
+                    req.tokens, self.pager.phys[slot.index], self.pager,
+                    include_partial=False,
+                )
             first = int(np.asarray(tok)[0])
             self.batcher.begin_decode(slot, start_pos=req.prompt_len)
             self.tokens[slot.index] = first
@@ -501,9 +607,15 @@ class ServingEngine:
         n_active = int(active.sum())
         t_vec = self.batcher.t_vector()
         if self.cells.paged:
-            # the write-position page must be live BEFORE the cell runs:
-            # the block table it receives is the layout it writes through
-            self.pager.ensure_tail_pages(active)
+            # the write-position page must be live AND private BEFORE the
+            # cell runs: the block table it receives is the layout it
+            # writes through. A shared tail page splits here (COW) and
+            # the copy cell materializes the private duplicate — the
+            # shared page is never mutated.
+            for old, new in self.pager.ensure_tail_pages(active):
+                self.caches = self.cells.copy_fn(
+                    self.caches, np.int32(old), np.int32(new)
+                )
             next_tok, finite, self.caches = self.cells.decode_fn(
                 self.params, jnp.asarray(self.tokens), self.caches,
                 jnp.asarray(t_vec), self._block_table_dev(),
@@ -601,6 +713,8 @@ class ServingEngine:
         blocks0 = self.admission.blocks
         gaps0 = len(self._decode_gaps)
         pager0 = self.pager.counters()
+        prefix0 = (self.prefix_cache.counters()
+                   if self.prefix_cache is not None else None)
         wall0 = time.perf_counter()
         max_conc = 0
         while len(q) or self.batcher.n_busy:
@@ -660,7 +774,23 @@ class ServingEngine:
                                 - pager0["prefetch_useful"]),
             "local_used": pager1["local_used"],
             "pool_used": pager1["pool_used"],
+            "cow_splits": pager1["cow_splits"] - pager0["cow_splits"],
+            "shared_mapped_pages": (pager1["shared_mapped_pages"]
+                                    - pager0["shared_mapped_pages"]),
         }
+        prefix_delta: dict = {}
+        if prefix0 is not None:
+            prefix1 = self.prefix_cache.counters()
+            prefix_delta = {
+                k: prefix1[k] - prefix0[k]
+                for k in ("hits", "misses", "hit_tokens", "hit_pages",
+                          "inserted_pages", "evicted_pages")
+            }
+            n = prefix_delta["hits"] + prefix_delta["misses"]
+            prefix_delta["hit_rate"] = (
+                prefix_delta["hits"] / n if n else 0.0
+            )
+            prefix_delta["cached_pages"] = prefix1["cached_pages"]
         return ServeStats(
             n_requests=len(done),
             tokens=sum(len(r.output) for r in done),
@@ -673,4 +803,5 @@ class ServingEngine:
             pager=pager_delta,
             admission_blocks=self.admission.blocks - blocks0,
             max_concurrency=max_conc,
+            prefix=prefix_delta,
         )

@@ -42,6 +42,39 @@ so a page's local-vs-pool tag (`phys_tiers()`) prices traffic exactly —
 like the paper's pages it cannot individually pin — without issuing a
 physical move.
 
+SHARING (refcounted pages + copy-on-write). Block tables can alias: two
+slots may point the same logical page at one physical page, and the paged
+kernels never notice — the gather chases whatever the table says. The
+pager therefore keeps a per-PHYSICAL-page refcount (`ref`) and tier tag
+(`tier_phys`); the (slot, page) `tier` view is derived. Lifecycle:
+
+  * `_alloc_pages`  — private page, ref = 1;
+  * `map_shared`    — map already-cached prefix pages into a fresh slot's
+                      leading table entries (ref += 1 each), the
+                      prefix-cache hit path;
+  * `remap_shared`  — swap a slot's freshly written private duplicates
+                      onto cached pages (insert-then-dedupe, the bucketed
+                      prefill path), freeing the duplicates;
+  * `pin`/`unpin`   — a non-slot reference (the prefix trie's hold on its
+                      cached pages, plus the engine's short guard pin
+                      between trie match and remap). Counted in `pins` so
+                      the global invariant is
+                      `ref.sum() == valid.sum() + pins`;
+  * `release`       — decrement, free only at zero (batched and order-
+                      preserving exactly as the private path);
+  * `cow_split`     — the moment a slot is about to WRITE into a shared
+                      page (its non-full tail), split: take a free page,
+                      repoint the writer, decref the shared original, and
+                      report the (old, new) pair so the engine can run its
+                      page-copy cell. A page with ref > 1 is never
+                      mutated.
+
+Shared bytes are accounted ONCE: `local/pool_bytes_used` and
+`phys_tiers()` are physical-pool views, so a prefix cached under ten
+slots occupies ten table rows but one page of budget — the deduplicated
+footprint the paper's over-provisioning argument wants measured. Reads
+stay per-slot (every sharer really does gather the page each step).
+
 Pool-read accounting has two modes:
 
 * `prefetch=None` (default, the pre-subsystem model): expected-value
@@ -65,7 +98,7 @@ mode.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -89,6 +122,10 @@ class PagerConfig:
     # --- prediction-driven page-in (repro.prefetch) ---
     prefetch: Optional[str] = None   # predictor name | "demand" | None
     prefetch_degree: int = 8         # max pages staged ahead per step
+    # --- debug-mode consistency checking ---
+    validate: bool = False           # cross-check frees vs the block table
+    # (a freed page still mapped by a live slot raises instead of being
+    # silently recycled into a second owner)
 
     def __post_init__(self):
         if self.policy not in ("hotness", "static", "none"):
@@ -144,18 +181,27 @@ class KVPager:
         self.resident_bytes = float(resident_bytes)
         self.page_bytes = self.bytes_per_token * pcfg.page_tokens
         self.n_pages = -(-max_seq // pcfg.page_tokens)  # ceil
+        self.n_phys = n_slots * self.n_pages
         self.topo = topo or tr.v5e_topology()
 
         self.valid = np.zeros((n_slots, self.n_pages), dtype=bool)
-        self.tier = np.full((n_slots, self.n_pages), LOCAL, dtype=np.int8)
         self.lengths = np.zeros(n_slots, dtype=np.int64)
-        # physical page ids: every valid (slot, page) owns one from a
+        # physical page ids: every valid (slot, page) maps to one from a
         # shared LIFO free list — interleaved admissions scatter a slot's
         # pages through the pool, which is exactly what the paged decode
-        # kernel's block-index map exists for
+        # kernel's block-index map exists for. Tables may ALIAS: `ref`
+        # counts mappings (slot entries + pins) per physical page; a page
+        # returns to the free list only when its refcount hits zero.
         self.phys = np.full((n_slots, self.n_pages), -1, dtype=np.int64)
-        self._free_phys = list(range(n_slots * self.n_pages))
+        self.ref = np.zeros(self.n_phys, dtype=np.int32)
+        self.tier_phys = np.full(self.n_phys, LOCAL, dtype=np.int8)
+        self.pins = 0                 # non-slot refs (trie + guard pins)
+        self._free_phys = list(range(self.n_phys))
         self._bt_cache: Optional[np.ndarray] = None
+        # the engine wires a `serving.prefix_cache.PrefixCache` here; the
+        # allocator calls back into it to reclaim trie-only pages when the
+        # free list runs dry (LRU leaf eviction)
+        self.prefix_cache = None
 
         self._steps = 0
         self.total_local_bytes = 0.0
@@ -166,6 +212,14 @@ class KVPager:
         self.promotions = 0
         self.prefetch_issued = 0
         self.prefetch_useful = 0
+        self.cow_splits = 0
+        self.shared_mapped_pages = 0
+        # COW copy traffic (read old + write new) accumulates here and is
+        # charged by the next `step` at the page's tier — the engine COWs
+        # via `ensure_tail_pages` BEFORE the decode cell, so the bytes
+        # land in that step's accounting
+        self._cow_local_pending = 0.0
+        self._cow_pool_pending = 0.0
 
         self.recorder = None          # optional prefetch.trace.TraceRecorder
         self._predictor = None
@@ -190,40 +244,67 @@ class KVPager:
             return float("inf")
         return float(self.cfg.local_budget_bytes)
 
+    @property
+    def tier(self) -> np.ndarray:
+        """(n_slots, n_pages) tier of each mapped table entry — a derived
+        READ-ONLY view now that tiers live per physical page (aliased
+        entries must agree by construction). Invalid entries read LOCAL."""
+        return np.where(
+            self.valid, self.tier_phys[np.clip(self.phys, 0, None)],
+            np.int8(LOCAL),
+        )
+
     def local_bytes_used(self) -> float:
-        return float((self.valid & (self.tier == LOCAL)).sum()
+        """Deduplicated local-tier footprint: each live PHYSICAL page is
+        counted once no matter how many slots map it."""
+        return float(((self.ref > 0) & (self.tier_phys == LOCAL)).sum()
                      * self.page_bytes)
 
     def pool_bytes_used(self) -> float:
-        return float((self.valid & (self.tier == POOL)).sum()
+        return float(((self.ref > 0) & (self.tier_phys == POOL)).sum()
                      * self.page_bytes)
 
     # --------------------------------------------------------- lifecycle
+    def _take_free(self, k: int) -> List[int]:
+        """Pop `k` physical pages off the LIFO free-list tail, in the same
+        order the old per-page pop() walked it (determinism: block tables
+        replay identically across runs). Under free-list pressure the
+        prefix trie gives back LRU cached pages first — trie-only pages
+        are clean read copies, always safe to drop."""
+        if len(self._free_phys) < k and self.prefix_cache is not None:
+            self.prefix_cache.reclaim(self, k - len(self._free_phys))
+        if len(self._free_phys) < k:
+            raise RuntimeError(
+                f"page pool exhausted: need {k}, "
+                f"free {len(self._free_phys)}"
+            )
+        taken = self._free_phys[-k:]
+        del self._free_phys[-k:]
+        return taken[::-1]
+
     def _alloc_pages(self, slot: int, upto_page: int) -> None:
-        """Mark pages [0, upto_page) of `slot` valid; new pages start in
-        the tier the policy dictates."""
+        """Mark pages [0, upto_page) of `slot` valid; new pages are
+        PRIVATE (ref = 1) and start in the tier the policy dictates."""
         newly = ~self.valid[slot, :upto_page]
         if not newly.any():
             return
         self._bt_cache = None
         pages = np.nonzero(newly)[0]
-        # one batched pop off the LIFO tail, in the same order the old
-        # per-page pop() walked it (determinism: block tables replay
-        # identically across runs)
-        taken = self._free_phys[-len(pages):]
-        del self._free_phys[-len(pages):]
-        self.phys[slot, pages] = taken[::-1]
+        taken = self._take_free(len(pages))
+        self.phys[slot, pages] = taken
         if self.cfg.policy == "static":
             # first-come local until the budget fills; permanent thereafter
-            for p in np.nonzero(newly)[0]:
+            for p, g in zip(pages, taken):
                 fits = (self.local_bytes_used() + self.page_bytes
                         <= self.budget)
-                self.tier[slot, p] = LOCAL if fits else POOL
+                self.tier_phys[g] = LOCAL if fits else POOL
+                self.ref[g] = 1
                 self.valid[slot, p] = True
         else:
             # hotness/none: allocate local (the tail is the hot end); the
             # next rebalance evicts whatever the budget cannot hold
-            self.tier[slot, :upto_page][newly] = LOCAL
+            self.tier_phys[taken] = LOCAL
+            self.ref[taken] = 1
             self.valid[slot, :upto_page] = True
 
     def admit(self, slot: int, length: int) -> None:
@@ -237,7 +318,8 @@ class KVPager:
         """Grow `slot` to `length` cached tokens without releasing it —
         the chunked-prefill path: each chunk extends the slot by one
         page-aligned chunk BEFORE the chunk cell writes through the block
-        table, so the pages it scatters into are always live."""
+        table, so the pages it scatters into are always live. Pages
+        already mapped (including shared prefix pages) are kept."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
         if length <= self.lengths[slot]:
@@ -247,29 +329,179 @@ class KVPager:
         if self.cfg.policy == "hotness":
             self.rebalance()
 
-    def ensure_tail_pages(self, active: np.ndarray) -> None:
-        """Allocate the write-position page of every active slot — called
-        by the engine BEFORE the paged decode cell so the block table it
-        passes already names a physical page for the token about to be
-        written (`step` allocates lazily otherwise, which is too late for
-        a layout that is real on device)."""
+    # ---------------------------------------------------------- sharing
+    def pin(self, pages) -> None:
+        """Take a non-slot reference on `pages` (the prefix trie's hold on
+        its cached pages; also the engine's guard pin between trie match
+        and table remap, so an allocation in between cannot reclaim the
+        matched pages out from under the hit)."""
+        pages = np.asarray(pages, dtype=np.int64)
+        if pages.size == 0:
+            return
+        if self.cfg.validate and (self.ref[pages] <= 0).any():
+            raise RuntimeError("pin of a free physical page")
+        self.ref[pages] += 1
+        self.pins += int(pages.size)
+
+    def unpin(self, pages) -> None:
+        """Drop a pin; pages whose refcount hits zero return to the free
+        list (order-preserving, batched)."""
+        pages = np.asarray(pages, dtype=np.int64)
+        if pages.size == 0:
+            return
+        self.ref[pages] -= 1
+        self.pins -= int(pages.size)
+        if self.cfg.validate and (self.ref[pages] < 0).any():
+            raise RuntimeError("unpin without a matching pin")
+        dead = pages[self.ref[pages] == 0]
+        if dead.size:
+            if self.cfg.validate:
+                self._validate_freed(dead)
+            self._free_phys.extend(dead.tolist())
+
+    def map_shared(self, slot: int, pages, n_tokens: int) -> None:
+        """Map already-cached `pages` (physical ids, logical order) as the
+        leading table entries of freshly admitted `slot`, increffing each —
+        the prefix-cache HIT path. The slot's cached length becomes
+        `n_tokens`; chunked prefill then starts at the first divergent
+        page instead of token 0."""
+        pages = np.asarray(pages, dtype=np.int64)
+        k = int(pages.size)
+        if k == 0:
+            return
+        if self.cfg.validate:
+            if self.valid[slot, :k].any():
+                raise RuntimeError("map_shared into a non-fresh slot")
+            if (self.ref[pages] <= 0).any():
+                raise RuntimeError("map_shared of a free physical page")
+        self._bt_cache = None
+        self.phys[slot, :k] = pages
+        self.valid[slot, :k] = True
+        self.ref[pages] += 1
+        self.lengths[slot] = max(int(self.lengths[slot]), int(n_tokens))
+        self.shared_mapped_pages += k
+        if self.cfg.policy == "hotness":
+            self.rebalance()
+
+    def remap_shared(self, slot: int, pages) -> None:
+        """Swap the leading logical pages of `slot` onto already-cached
+        physical `pages`, freeing the slot's private duplicates — the
+        insert-then-dedupe path for bucketed (single-shot) prefill: the
+        fused insert scatters into freshly allocated private pages (its
+        kernel contract demands uniquely owned targets), then the matched
+        prefix deduplicates against the trie's identical copies."""
+        tgt = np.asarray(pages, dtype=np.int64)
+        k = int(tgt.size)
+        if k == 0:
+            return
+        if self.cfg.validate and not self.valid[slot, :k].all():
+            raise RuntimeError("remap_shared past the slot's mapped pages")
+        cur = self.phys[slot, :k].copy()
+        diff = cur != tgt
+        if not diff.any():
+            return
+        self._bt_cache = None
+        self.ref[tgt[diff]] += 1
+        self.phys[slot, :k][diff] = tgt[diff]
+        old = cur[diff]
+        self.ref[old] -= 1
+        dead = old[self.ref[old] == 0]
+        if dead.size:
+            if self.cfg.validate:
+                self._validate_freed(dead)
+            self._free_phys.extend(dead.tolist())
+        self.shared_mapped_pages += int(diff.sum())
+
+    def cow_split(self, slot: int, page: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: `slot` is about to write into logical `page`
+        whose physical page is shared (ref > 1). Take a free page, repoint
+        the writer at it, decref the shared original, and return the
+        (old_phys, new_phys) pair so the engine can run its page-copy cell
+        — the shared page itself is NEVER mutated. Returns None when the
+        page is already private."""
+        old = int(self.phys[slot, page])
+        if self.ref[old] <= 1:
+            return None
+        new = self._take_free(1)[0]
+        self._bt_cache = None
+        self.ref[old] -= 1
+        self.ref[new] = 1
+        self.tier_phys[new] = self.tier_phys[old]
+        self.phys[slot, page] = new
+        self.cow_splits += 1
+        # the copy reads the shared page and writes the private one, both
+        # at the page's tier; charged by the next step()
+        if self.tier_phys[new] == POOL:
+            self._cow_pool_pending += 2.0 * self.page_bytes
+        else:
+            self._cow_local_pending += 2.0 * self.page_bytes
+        return (old, new)
+
+    def ensure_tail_pages(self, active: np.ndarray) -> List[Tuple[int, int]]:
+        """Make every active slot's write-position page PRIVATE and live —
+        called by the engine BEFORE the paged decode cell so the block
+        table it passes already names a physical page the slot exclusively
+        owns for the token about to be written (`step` allocates/splits
+        lazily otherwise, which is too late for a layout that is real on
+        device). Returns the (old_phys, new_phys) COW pairs the engine
+        must copy before the write."""
+        cow: List[Tuple[int, int]] = []
         for s in np.nonzero(np.asarray(active, dtype=bool))[0]:
             p = self._page_of(int(self.lengths[s]))
-            if p < self.n_pages and not self.valid[s, p]:
+            if p >= self.n_pages:
+                continue
+            if not self.valid[s, p]:
                 self._alloc_pages(int(s), p + 1)
+            elif self.ref[self.phys[s, p]] > 1:
+                pair = self.cow_split(int(s), p)
+                if pair is not None:
+                    cow.append(pair)
+        return cow
 
     def release(self, slot: int) -> None:
-        """Free a finished/evicted slot's pages back to the pool in ONE
-        batched call (the per-page append loop this replaces was O(pages)
-        list ops on every retirement)."""
+        """Decref a finished/evicted slot's pages in ONE batched call;
+        pages whose refcount hits zero return to the free list (order-
+        preserving — shared prefix pages survive under the trie's pin or
+        another slot's mapping)."""
         owned = self.valid[slot]
         if owned.any():
             self._bt_cache = None
-            self._free_phys.extend(self.phys[slot, owned].tolist())
+            pages = self.phys[slot, owned]
+            self.ref[pages] -= 1
+            if self.cfg.validate and (self.ref[pages] < 0).any():
+                raise RuntimeError(
+                    f"double free: slot {slot} released a page whose "
+                    "refcount was already zero"
+                )
+            dead = pages[self.ref[pages] == 0]
+            if dead.size:
+                if self.cfg.validate:
+                    self._validate_freed(dead, skip_slot=slot)
+                self._free_phys.extend(dead.tolist())
         self.phys[slot, :] = -1
         self.valid[slot, :] = False
         self.lengths[slot] = 0
         self._staged = {(s, p) for (s, p) in self._staged if s != slot}
+
+    def _validate_freed(self, dead: np.ndarray,
+                        skip_slot: Optional[int] = None) -> None:
+        """Debug-mode liveness cross-check (`PagerConfig.validate`): a
+        page about to re-enter the free list must not be mapped by any
+        live block-table entry — a stale table entry would silently hand
+        the recycled page a second owner and corrupt both sequences."""
+        if dead.size == 0:
+            return
+        mask = self.valid.copy()
+        if skip_slot is not None:
+            mask[skip_slot] = False     # the releasing slot's own entries
+        live = self.phys[mask]
+        bad = np.intersect1d(dead, live)
+        if bad.size:
+            raise RuntimeError(
+                f"pager free: physical pages {bad.tolist()} returned to "
+                "the free list while still mapped in the block table "
+                "(stale-entry reuse)"
+            )
 
     def _page_of(self, pos: int) -> int:
         return max(int(pos), 0) // self.cfg.page_tokens
@@ -280,10 +512,13 @@ class KVPager:
         `kernels.flash_attention.ops.paged_prefill_mha`) AND the engine's
         paged cache-write cells. Invalid entries are 0 — the kernels'
         length/causal masks keep them out of the math (ops clamps
-        identically). The returned array is cached until the mapping
-        changes (steady-state decode re-reads the same object, so the
-        engine can skip the device upload by identity); treat it as
-        read-only."""
+        identically). Rows may alias (shared prefixes): the gather path
+        reads aliased pages fine; the WRITE paths never see an aliased
+        target because `ensure_tail_pages`/`remap_shared` guarantee write
+        pages are private before any scatter. The returned array is
+        cached until the mapping changes (steady-state decode re-reads
+        the same object, so the engine can skip the device upload by
+        identity); treat it as read-only."""
         if self._bt_cache is None:
             self._bt_cache = np.where(self.valid, self.phys, 0).astype(
                 np.int32)
@@ -291,13 +526,13 @@ class KVPager:
 
     def phys_tiers(self) -> np.ndarray:
         """(n_slots * n_pages,) tier tag of every PHYSICAL page: LOCAL /
-        POOL for owned pages, -1 for free-list pages. The physical-pool
-        view of the tier split — what the byte accounting charges and
-        what a memory-kind-capable backend would pin each page to."""
-        out = np.full(self.n_slots * self.n_pages, -1, dtype=np.int8)
-        s, p = np.nonzero(self.valid)
-        out[self.phys[s, p]] = self.tier[s, p]
-        return out
+        POOL for live pages (ref > 0, slot-mapped or trie-cached), -1 for
+        free-list pages. The physical-pool view of the tier split — what
+        the byte accounting charges and what a memory-kind-capable
+        backend would pin each page to. Shared pages appear ONCE here by
+        construction (the deduplicated footprint)."""
+        return np.where(self.ref > 0, self.tier_phys,
+                        np.int8(-1)).astype(np.int8)
 
     # ------------------------------------------------------ access model
     def _page_weights(self) -> np.ndarray:
@@ -346,7 +581,8 @@ class KVPager:
     def step(self, active: np.ndarray) -> StepTraffic:
         """Account one decode step for the `active` slot mask: reads per
         the traffic model against current page tiers, plus the new token's
-        KV write into its (tail) page and the resident state."""
+        KV write into its (tail) page and the resident state. Pending COW
+        copy bytes (splits since the last step) are flushed here."""
         active = np.asarray(active, dtype=bool)
         touches = None
         if self.recorder is not None or self._predictor is not None:
@@ -360,12 +596,13 @@ class KVPager:
         if self._predictor is None:
             # expected-value weighted accounting (the pre-subsystem
             # model); every pool byte is assumed layer-ahead prefetchable
+            tier = self.tier
             w = self._page_weights() * active[:, None]
             local_r = float(
-                (w * (self.tier == LOCAL)).sum() * self.page_bytes
+                (w * (tier == LOCAL)).sum() * self.page_bytes
             )
             pool_r = float(
-                (w * (self.tier == POOL)).sum() * self.page_bytes
+                (w * (tier == POOL)).sum() * self.page_bytes
             )
         else:
             # discrete prediction-driven paging: each pool touch is a
@@ -376,7 +613,7 @@ class KVPager:
             # predictor must learn.
             local_r = pool_r = 0.0
             for s, p, cold in touches:
-                if self.tier[s, p] == LOCAL:
+                if self.tier_phys[self.phys[s, p]] == LOCAL:
                     local_r += self.page_bytes
                 elif (s, p) in self._staged:
                     self._staged.discard((s, p))
@@ -393,26 +630,34 @@ class KVPager:
             for gid in self._predictor.predict(self.cfg.prefetch_degree):
                 s, p = divmod(int(gid), self.n_pages)
                 if (0 <= s < self.n_slots and 0 <= p < self.n_pages
-                        and self.valid[s, p] and self.tier[s, p] == POOL
+                        and self.valid[s, p]
+                        and self.tier_phys[self.phys[s, p]] == POOL
                         and (s, p) not in self._staged):
                     self._staged.add((s, p))
                     self.prefetch_issued += 1
                     staged_b += self.page_bytes
 
-        # one token of KV written at the tail of each active slot
+        # one token of KV written at the tail of each active slot — the
+        # write page must be private, so a shared tail page splits first
+        # (COW; never mutate a page with ref > 1)
         wr_local = wr_pool = 0.0
         for s in np.nonzero(active)[0]:
             p = self._page_of(int(self.lengths[s]))  # write position == len
             if p < self.n_pages:
                 if not self.valid[s, p]:
-                    self._alloc_pages(s, p + 1)
-                if self.tier[s, p] == POOL:
+                    self._alloc_pages(int(s), p + 1)
+                elif self.ref[self.phys[s, p]] > 1:
+                    self.cow_split(int(s), p)
+                if self.tier_phys[self.phys[s, p]] == POOL:
                     wr_pool += self.bytes_per_token
                 else:
                     wr_local += self.bytes_per_token
                 self.lengths[s] += 1
-        local_b = local_r + wr_local + self.resident_bytes * active.sum()
-        pool_b = pool_r + wr_pool + demand_b + staged_b
+        cow_local, cow_pool = self._cow_local_pending, self._cow_pool_pending
+        self._cow_local_pending = self._cow_pool_pending = 0.0
+        local_b = (local_r + wr_local + cow_local
+                   + self.resident_bytes * active.sum())
+        pool_b = pool_r + wr_pool + demand_b + staged_b + cow_pool
 
         self._steps += 1
         if (self.cfg.policy == "hotness"
@@ -425,7 +670,9 @@ class KVPager:
             # legacy overlap assumption: all pool traffic prefetchable
             demand, staged = 0.0, pool_b
         else:
-            demand = demand_b + wr_pool
+            # COW pool copies serialize like demand page-ins: the split
+            # must land before the write the decode cell is about to do
+            demand = demand_b + wr_pool + cow_pool
             staged = staged_b
         self.total_demand_pool_bytes += demand
         self.total_prefetch_pool_bytes += staged
@@ -433,41 +680,53 @@ class KVPager:
 
     # --------------------------------------------------------- placement
     def rebalance(self) -> None:
-        """Re-place valid pages with the paper's placement engine: build a
-        page-grain access profile and run the `hotness` policy against the
-        local budget — the exact analogue of `runtime/tiering.py` applying
-        `core.placement` to training state at tensor grain."""
-        idx = np.nonzero(self.valid)
-        n_valid = len(idx[0])
-        if (n_valid == 0 or not np.isfinite(self.budget)
+        """Re-place live pages with the paper's placement engine: build a
+        PHYSICAL-page-grain access profile and run the `hotness` policy
+        against the local budget — the exact analogue of
+        `runtime/tiering.py` applying `core.placement` to training state
+        at tensor grain. A shared page's weight is the SUM of its
+        sharers' touch weights (ten sharers of a prefix page make it ten
+        times hotter than any single copy — dedup concentrates heat);
+        trie-only pages carry no slot weight and drift poolward first."""
+        owned = np.nonzero(self.ref > 0)[0]
+        n_owned = len(owned)
+        if (n_owned == 0 or not np.isfinite(self.budget)
                 or self.page_bytes <= 0):
             return  # nothing paged (e.g. SSM-only archs: no self-attn KV)
-        w = self._page_weights()
+        w_sp = self._page_weights()
+        wg = np.zeros(self.n_phys)
+        np.add.at(wg, self.phys[self.valid], w_sp[self.valid])
         # epsilon recency gradient: among equal-weight cold pages, evict
-        # the oldest first (LRU within the cold class); placement-only,
-        # never part of traffic accounting
+        # the oldest first (LRU within the cold class) — recency of a
+        # shared page is its NEWEST mapping; placement-only, never part
+        # of traffic accounting
+        rec = np.zeros(self.n_phys)
+        s_idx, p_idx = np.nonzero(self.valid)
+        if s_idx.size:
+            np.maximum.at(rec, self.phys[s_idx, p_idx], p_idx + 1)
         eps = 1e-9 / max(self.n_pages, 1)
         profile = [
-            TensorAccess(f"s{s}/p{p}", int(self.page_bytes),
-                         float(w[s, p]) + eps * (p + 1), "cache")
-            for s, p in zip(*idx)
+            TensorAccess(f"g{g}", int(self.page_bytes),
+                         float(wg[g]) + eps * float(rec[g]), "cache")
+            for g in owned
         ]
-        total = n_valid * self.page_bytes
+        total = n_owned * self.page_bytes
         pool_fraction = max(0.0, 1.0 - self.budget / total)
         place = plc.place(profile, self.topo, "hotness", pool_fraction)
-        before = self.tier.copy()
-        for (s, p), a in zip(zip(*idx), profile):
-            self.tier[s, p] = (
+        before = self.tier_phys.copy()
+        for g, a in zip(owned, profile):
+            self.tier_phys[g] = (
                 LOCAL if place.tier_of(a.name) == "hbm" else POOL
             )
-        moved = (before != self.tier) & self.valid
-        self.evictions += int((moved & (self.tier == POOL)).sum())
-        self.promotions += int((moved & (self.tier == LOCAL)).sum())
+        moved = (before != self.tier_phys) & (self.ref > 0)
+        self.evictions += int((moved & (self.tier_phys == POOL)).sum())
+        self.promotions += int((moved & (self.tier_phys == LOCAL)).sum())
         if self._staged:
             # a staged copy whose page got promoted (or freed) is moot
             self._staged = {
                 (s, p) for (s, p) in self._staged
-                if self.valid[s, p] and self.tier[s, p] == POOL
+                if self.valid[s, p]
+                and self.tier_phys[self.phys[s, p]] == POOL
             }
 
     # ----------------------------------------------------------- metrics
@@ -503,4 +762,8 @@ class KVPager:
             ),
             "local_used": self.local_bytes_used(),
             "pool_used": self.pool_bytes_used(),
+            "cow_splits": self.cow_splits,
+            "shared_mapped_pages": self.shared_mapped_pages,
+            "pins": self.pins,
+            "free_pages": len(self._free_phys),
         }

@@ -15,7 +15,10 @@ Three scenario generators mirror the benchmark matrix of the brief:
                        whose KV cache spills the local tier — the cell the
                        tier-aware pager exists for);
 * `bursty_stream`    — mixed prompt lengths arriving in bursts separated
-                       by idle gaps (slot churn + admission stress).
+                       by idle gaps (slot churn + admission stress);
+* `shared_prefix_stream` — chat traffic behind fixed system prompts
+                       (the prefix-cache dedup lane: every request opens
+                       with one of `n_systems` shared prefixes).
 
 All generators are deterministic in `seed`.
 """
@@ -150,10 +153,52 @@ def bursty_stream(n: int, vocab: int, *, seed: int = 0,
     return _mk_requests(rng, vocab, lens, gens, arrivals)
 
 
+def shared_prefix_stream(n: int, vocab: int, *, seed: int = 0,
+                         system_tokens: int = 24,
+                         prompt_buckets: Sequence[int] = (32,),
+                         gen_range: tuple = (8, 24),
+                         arrival_rate: float = 2.0,
+                         n_systems: int = 1) -> List[Request]:
+    """Chat traffic behind `n_systems` fixed system prompts: every request
+    opens with one of the shared `system_tokens`-long prefixes and fills
+    the rest of its bucket with a random user tail — the workload the
+    prefix radix cache (`serving.prefix_cache`) deduplicates. Same
+    Poisson arrival process as `chat_stream`; deterministic in `seed`
+    (the system prefixes themselves derive from `seed`, so two streams
+    with the same seed share byte-identical prefixes)."""
+    if any(b <= system_tokens for b in prompt_buckets):
+        raise ValueError(
+            f"prompt_buckets {tuple(prompt_buckets)} must exceed "
+            f"system_tokens {system_tokens} (requests need a user tail)"
+        )
+    if n_systems < 1:
+        raise ValueError("n_systems must be >= 1")
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(0, vocab, size=system_tokens).astype(np.int32)
+               for _ in range(n_systems)]
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n))
+    lens = rng.choice(list(prompt_buckets), size=n)
+    gens = rng.integers(gen_range[0], gen_range[1] + 1, size=n)
+    which = rng.integers(0, n_systems, size=n)
+    out = []
+    for i in range(n):
+        tail = rng.integers(
+            0, vocab, size=int(lens[i]) - system_tokens
+        ).astype(np.int32)
+        out.append(Request(
+            request_id=i,
+            tokens=np.concatenate([systems[int(which[i])], tail]),
+            max_new_tokens=int(gens[i]),
+            arrival=float(arrivals[i]),
+        ))
+    return out
+
+
 SCENARIOS = {
     "chat": chat_stream,
     "long_context": long_context_stream,
     "bursty": bursty_stream,
+    "shared_prefix": shared_prefix_stream,
 }
 
 

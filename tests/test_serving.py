@@ -17,14 +17,17 @@ from repro.serving import (
     AdmissionController,
     ContinuousBatcher,
     EngineConfig,
+    INT8_TOKEN_AGREEMENT,
     KVPager,
     PagerConfig,
+    PrefixCache,
     Request,
     RequestQueue,
     ServingEngine,
     bursty_stream,
     chat_stream,
     long_context_stream,
+    shared_prefix_stream,
 )
 
 CTX = ParallelCtx(remat="none")
@@ -479,20 +482,29 @@ def test_pager_phys_tiers_partitions_pool():
 
 
 def _pager_invariants(p):
-    """Free-list / block-table consistency under churn."""
-    owned = p.phys[p.valid]
+    """Free-list / block-table / refcount consistency under churn (the
+    sharing-aware superset of the PR-5 invariants: mappings may alias,
+    so DISTINCT live pages replace unique owners)."""
+    owned = p.phys[p.valid]                # one entry per table mapping
     assert (owned >= 0).all()
-    assert len(set(owned.tolist())) == len(owned)         # unique owners
+    assert (p.ref >= 0).all()              # no double-free can go negative
+    live = np.nonzero(p.ref > 0)[0]
     free = set(p._free_phys)
     assert len(free) == len(p._free_phys)                 # no dup frees
-    assert free.isdisjoint(owned.tolist())                # disjoint
-    assert len(free) + len(owned) == p.n_slots * p.n_pages
+    assert free.isdisjoint(live.tolist())                 # free XOR live
+    assert len(free) + len(live) == p.n_phys              # no leak
+    # every mapping is counted exactly once:
+    #   sum(refcounts) == mapped table entries + pins
+    assert int(p.ref.sum()) == int(p.valid.sum()) + p.pins
+    ids, counts = np.unique(owned, return_counts=True)
+    assert (p.ref[ids] >= counts).all()    # refs cover each page's mappings
     bt = p.block_table()
     assert (bt[~p.valid] == 0).all()
     assert (bt[p.valid] == owned).all()
     assert (p.phys[~p.valid] == -1).all()
+    # byte accounting is DEDUPLICATED: distinct live pages, counted once
     used = p.local_bytes_used() + p.pool_bytes_used()
-    assert used == pytest.approx(len(owned) * p.page_bytes)
+    assert used == pytest.approx(len(live) * p.page_bytes)
 
 
 try:
@@ -501,7 +513,7 @@ try:
 
     churn_ops = st.lists(
         st.tuples(
-            st.integers(min_value=0, max_value=4),    # op kind
+            st.integers(min_value=0, max_value=6),    # op kind
             st.integers(min_value=0, max_value=2),    # slot
             st.integers(min_value=1, max_value=64),   # length
         ),
@@ -511,27 +523,75 @@ try:
     @given(churn_ops)
     @settings(max_examples=60, deadline=None)
     def test_pager_allocator_churn(ops):
-        """Free-list reuse and block-table consistency hold under any
-        randomized admit/release/extend/step/rebalance sequence."""
+        """Free-list reuse, block-table consistency, refcount cover,
+        no-double-free/no-leak and the COW write-privacy invariant hold
+        under any randomized admit/release/extend/step/rebalance/share/
+        pin sequence (the PR-5 churn test extended with sharing ops,
+        debug-mode validation ON)."""
         pcfg = PagerConfig(page_tokens=8, local_budget_bytes=4 * 8 * 100.0,
-                           policy="hotness", hot_window=16, cold_touch=0.1)
+                           policy="hotness", hot_window=16, cold_touch=0.1,
+                           validate=True)
         p = KVPager(3, 64, bytes_per_token=100.0, resident_bytes=0.0,
                     pcfg=pcfg)
+        pinned = []                       # outstanding test-held pins
         for kind, slot, length in ops:
-            if kind == 0:
-                p.admit(slot, min(length, p.max_seq))
-            elif kind == 1 and p.valid[slot].any():
-                p.release(slot)
-            elif kind == 2 and p.lengths[slot] > 0:
-                p.extend(slot, min(p.lengths[slot] + length, p.max_seq))
-            elif kind == 3:
-                active = p.lengths > 0
-                # step writes one token per active slot; stay in range
-                active &= p.lengths < p.max_seq
-                p.step(active)
-            else:
-                p.rebalance()
+            try:
+                if kind == 0:
+                    p.admit(slot, min(length, p.max_seq))
+                elif kind == 1 and p.valid[slot].any():
+                    p.release(slot)
+                elif kind == 2 and p.lengths[slot] > 0:
+                    p.extend(slot,
+                             min(p.lengths[slot] + length, p.max_seq))
+                elif kind == 3:
+                    active = p.lengths > 0
+                    # step writes one token per active slot; stay in range
+                    active &= p.lengths < p.max_seq
+                    p.step(active)
+                    # COW invariant: a write NEVER lands on a shared page
+                    # — after the step, every written tail page is private
+                    for s in np.nonzero(active)[0]:
+                        g = p.phys[s, p._page_of(int(p.lengths[s]) - 1)]
+                        assert p.ref[g] == 1
+                elif kind == 4:
+                    p.rebalance()
+                elif kind == 5:
+                    # share: map another slot's page-aligned prefix into a
+                    # fresh slot (the prefix-cache hit path at pager level)
+                    donor, tgt = slot, (slot + 1) % p.n_slots
+                    n_donor = int(p.valid[donor].sum())
+                    if n_donor and not p.valid[tgt].any():
+                        k = min(n_donor, 1 + length % 4)
+                        pages = p.phys[donor, :k].copy()
+                        p.map_shared(tgt, pages,
+                                     k * p.cfg.page_tokens)
+                else:
+                    # pin/unpin churn (the trie's non-slot references)
+                    if len(pinned) < 2 and p.valid[slot].any():
+                        g = int(p.phys[slot, 0])
+                        p.pin([g])
+                        pinned.append(g)
+                    elif pinned:
+                        p.unpin([pinned.pop()])
+            except RuntimeError as e:
+                # pins can strand live pages outside any slot, so the
+                # finite pool CAN legitimately exhaust — the allocator
+                # must refuse loudly (atomically: no partial allocation),
+                # never hand out an aliased page. Reset and churn on.
+                assert "pool exhausted" in str(e)
+                while pinned:
+                    p.unpin([pinned.pop()])
+                for s in range(p.n_slots):
+                    p.release(s)
             _pager_invariants(p)
+        # drain: every page returns exactly once, all refcounts zero
+        while pinned:
+            p.unpin([pinned.pop()])
+        for s in range(p.n_slots):
+            p.release(s)
+        _pager_invariants(p)
+        assert sorted(p._free_phys) == list(range(p.n_phys))
+        assert (p.ref == 0).all() and p.pins == 0
 except ImportError:  # pragma: no cover - conftest registers a fallback
     pass
 
@@ -856,3 +916,311 @@ try:
         assert sorted(p._free_phys) == list(range(p.n_slots * p.n_pages))
 except ImportError:  # pragma: no cover - conftest registers a fallback
     pass
+
+
+# ------------------------------------- shared-prefix radix cache (PR 6)
+def _vpager(n_slots=2, max_seq=64, page=8, validate=True):
+    pcfg = PagerConfig(page_tokens=page, policy="none", validate=validate)
+    return KVPager(n_slots, max_seq, bytes_per_token=100.0,
+                   resident_bytes=0.0, pcfg=pcfg)
+
+
+def test_shared_prefix_stream_shared_and_deterministic():
+    a = shared_prefix_stream(8, 64, seed=3, system_tokens=24,
+                             prompt_buckets=(32,))
+    b = shared_prefix_stream(8, 64, seed=3, system_tokens=24,
+                             prompt_buckets=(32,))
+    assert all((x.tokens == y.tokens).all() for x, y in zip(a, b))
+    sys_prefix = a[0].tokens[:24]
+    assert all((r.tokens[:24] == sys_prefix).all() for r in a)
+    # user tails differ (vocab 64, 8 tokens: collision chance ~0)
+    assert any((r.tokens[24:] != a[0].tokens[24:]).any() for r in a[1:])
+    with pytest.raises(ValueError, match="exceed"):
+        shared_prefix_stream(2, 64, system_tokens=32, prompt_buckets=(32,))
+    with pytest.raises(ValueError, match="n_systems"):
+        shared_prefix_stream(2, 64, n_systems=0)
+
+
+def test_prefix_cache_trie_match_insert_partial():
+    p = _vpager()
+    cache = PrefixCache(page_tokens=8)
+    toks = np.arange(20, dtype=np.int32)          # 2 full pages + 4 tail
+    assert cache.match(toks) is None              # cold miss
+    p.admit(0, 20)
+    row = p.phys[0]
+    assert cache.insert(toks, row, p, include_partial=True) == 3
+    assert p.pins == 3 and cache.cached_pages == 3
+    # exact re-match: both full pages AND the terminal partial tail
+    hit = cache.match(toks)
+    assert hit.pages == [int(row[0]), int(row[1])]
+    assert hit.n_full_tokens == 16
+    assert hit.tail_page == int(row[2]) and hit.n_tokens == 20
+    assert hit.all_pages == [int(row[i]) for i in range(3)]
+    # divergent tail: full-page prefix only, the partial does not match
+    div = toks.copy()
+    div[-1] += 1
+    hit = cache.match(div)
+    assert hit.pages == [int(row[0]), int(row[1])]
+    assert hit.tail_page is None and hit.n_tokens == 16
+    # divergence inside the first block: miss
+    assert cache.match(np.arange(1, 21, dtype=np.int32)) is None
+    # re-insert of the same prompt adds nothing (existing nodes keep pages)
+    assert cache.insert(toks, row, p, include_partial=True) == 0
+    assert cache.counters()["hits"] == 2
+
+
+def test_prefix_cache_capacity_cap_evicts_lru():
+    p = _vpager(n_slots=2, max_seq=32)            # 8 phys pages
+    cache = PrefixCache(page_tokens=8, capacity_pages=2)
+    a = np.arange(16, dtype=np.int32)
+    b = np.arange(100, 116, dtype=np.int32)
+    p.admit(0, 16)
+    cache.insert(a, p.phys[0], p)                 # 2 cached pages (at cap)
+    p.release(0)
+    p.admit(0, 16)
+    cache.insert(b, p.phys[0], p)                 # over cap -> evict a's
+    assert cache.cached_pages <= 2
+    assert cache.evicted_pages == 2
+    assert cache.match(a) is None                 # a evicted (LRU)
+    assert cache.match(b) is not None             # b (MRU) survives
+    _pager_invariants(p)
+
+
+def test_prefix_cache_reclaim_under_free_list_pressure():
+    p = _vpager(n_slots=2, max_seq=32)            # 8 phys pages
+    cache = PrefixCache(page_tokens=8)
+    p.prefix_cache = cache
+    a = np.arange(16, dtype=np.int32)
+    b = np.arange(100, 116, dtype=np.int32)
+    p.admit(0, 16)
+    cache.insert(a, p.phys[0], p)
+    p.admit(1, 16)
+    cache.insert(b, p.phys[1], p)
+    cache.match(b)                                # bump b's recency
+    p.release(0)
+    p.release(1)                                  # trie pins keep all 4
+    assert p.pins == 4 and len(p._free_phys) == 4
+    # a 6-page demand exceeds the 4 free pages: _take_free calls back into
+    # reclaim, which must evict LRU leaves (a's chain first) until enough
+    # pages actually reach the free list
+    p.admit(0, 32)                                # 4 pages
+    p.extend(1, 16)                               # 2 more
+    assert cache.evicted_pages >= 2
+    assert cache.match(b) is not None             # the MRU chain survives
+    assert cache.match(a) is None                 # the LRU chain was evicted
+    _pager_invariants(p)
+
+
+def test_pager_release_liveness_crosscheck():
+    """Satellite (bug fix): a stale/aliased block-table entry must be
+    caught at free time — returning a page to the free list while another
+    live table entry still maps it would hand the recycled page two
+    owners. The PR-5 release had no such cross-check."""
+    p = _vpager(n_slots=2, max_seq=32)
+    p.admit(0, 16)
+    # forge an alias the refcounts don't know about (the bug class this
+    # guard exists for: table mutation without the matching incref)
+    p.phys[1, 0] = p.phys[0, 0]
+    p.valid[1, 0] = True
+    with pytest.raises(RuntimeError, match="still mapped"):
+        p.release(0)
+    # with validation off (production mode) the same forgery goes through
+    q = _vpager(n_slots=2, max_seq=32, validate=False)
+    q.admit(0, 16)
+    q.phys[1, 0] = q.phys[0, 0]
+    q.valid[1, 0] = True
+    q.release(0)                                  # silent (pre-fix behavior)
+
+
+def test_pager_shared_map_cow_lifecycle():
+    """Refcount arithmetic of the full share/COW cycle at pager level:
+    map -> ref 3 (donor + trie pin + sharer), tail write -> COW split,
+    drain -> every page back exactly once."""
+    p = _vpager(n_slots=2, max_seq=32)            # 4 pages/slot, 8 phys
+    p.admit(0, 20)                                # 3 pages (tail partial)
+    pages = [int(g) for g in p.phys[0, :3]]
+    p.pin(pages)                                  # the trie's hold
+    p.map_shared(1, pages, 20)
+    assert (p.ref[pages] == 3).all()
+    assert p.lengths[1] == 20 and p.shared_mapped_pages == 3
+    # dedup accounting: 3 distinct live pages, not 6
+    assert p.local_bytes_used() + p.pool_bytes_used() == 3 * p.page_bytes
+    # slot 1 writes token 20 -> page 2 is shared -> COW
+    cow = p.ensure_tail_pages(np.array([False, True]))
+    assert len(cow) == 1
+    old, new = cow[0]
+    assert old == pages[2] and p.ref[old] == 2 and p.ref[new] == 1
+    assert int(p.phys[1, 2]) == new != pages[2]
+    assert p.cow_splits == 1
+    # slot 0 writes its own token -> its tail is still shared (trie pin)
+    cow = p.ensure_tail_pages(np.array([True, False]))
+    assert len(cow) == 1 and cow[0][0] == pages[2]
+    assert p.ref[pages[2]] == 1                   # pin only, now
+    _pager_invariants(p)
+    p.release(0)
+    p.release(1)
+    p.unpin(pages)
+    assert sorted(p._free_phys) == list(range(p.n_phys))
+    assert (p.ref == 0).all() and p.pins == 0
+
+
+def test_kv_dedup_token_bytes_matches_pager_footprint():
+    """The closed-form dedup formula and the pager's deduplicated byte
+    accounting must agree: n_sharers slots sharing a page-aligned prefix
+    occupy exactly the formula's bytes per token."""
+    from repro.core.access import kv_dedup_token_bytes
+
+    with pytest.raises(ValueError):
+        kv_dedup_token_bytes(32, 40, 2, 1.0)
+    with pytest.raises(ValueError):
+        kv_dedup_token_bytes(32, 16, 0, 1.0)
+    assert kv_dedup_token_bytes(32, 0, 4, 2.0) == pytest.approx(2.0)
+    assert kv_dedup_token_bytes(0, 0, 4, 2.0) == 0.0
+
+    p = _vpager(n_slots=3, max_seq=32)            # page 8 -> 4 pages/slot
+    p.admit(0, 32)
+    shared = [int(g) for g in p.phys[0, :2]]      # 16-token shared prefix
+    p.map_shared(1, shared, 16)
+    p.extend(1, 32)
+    p.map_shared(2, shared, 16)
+    p.extend(2, 32)
+    used = p.local_bytes_used() + p.pool_bytes_used()
+    assert used == pytest.approx(8 * p.page_bytes)   # 8 distinct pages
+    per_tok = used / (3 * 32)
+    assert per_tok == pytest.approx(
+        kv_dedup_token_bytes(32, 16, 3, p.bytes_per_token))
+
+
+def _shared_run(prefix_cache, *, pool_dtype="fp", prefill_chunk=None,
+                n=8, seed=3):
+    cfg = _cfg()
+    ecfg = EngineConfig(
+        n_slots=4, max_seq=64, prefill_buckets=(32,), page_tokens=8,
+        hot_window=16, local_budget_frac=0.5, admission="greedy",
+        pool_dtype=pool_dtype, prefill_chunk=prefill_chunk,
+        prefix_cache=prefix_cache,
+    )
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    reqs = shared_prefix_stream(n, cfg.vocab_size, seed=seed,
+                                system_tokens=24, prompt_buckets=(32,),
+                                gen_range=(6, 12), arrival_rate=3e4)
+    stats = eng.run(reqs)
+    return eng, stats, [list(r.output) for r in reqs]
+
+
+def test_engine_prefix_cache_parity_and_dedup():
+    """Satellite (parity): prefix cache ON vs OFF on a shared-system-
+    prompt stream is token-for-token identical — sharing is a layout
+    change, not a model change — while the trie actually dedups."""
+    eng_off, _, toks_off = _shared_run(False)
+    eng_on, stats_on, toks_on = _shared_run(True)
+    assert toks_on == toks_off
+    assert stats_on.prefix["hits"] >= 6           # every re-arrival hits
+    assert stats_on.prefix["hit_rate"] > 0.5
+    assert stats_on.pager["shared_mapped_pages"] > 0
+    assert eng_on.pager.shared_mapped_pages > 0
+    counts = eng_on.compile_counts()
+    assert all(v <= 1 for v in counts.values())   # no recompiles
+    # invariants hold on the live pager after the run
+    _pager_invariants(eng_on.pager)
+
+
+def test_engine_prefix_cache_chunked_skips_prefill():
+    """Chunked path: shared chunks are genuinely skipped (prefill starts
+    at the first divergent page), so ON spends no more virtual time than
+    OFF — with identical tokens."""
+    _, stats_off, toks_off = _shared_run(False, prefill_chunk=16)
+    eng_on, stats_on, toks_on = _shared_run(True, prefill_chunk=16)
+    assert toks_on == toks_off
+    assert stats_on.prefix["hits"] > 0
+    assert stats_on.virtual_s <= stats_off.virtual_s + 1e-12
+    counts = eng_on.compile_counts()
+    assert all(v <= 1 for v in counts.values())
+
+
+def test_engine_prefix_cache_int8_token_agreement():
+    """int8 pools share the per-page (scale, zero) leaves alongside the
+    payload, so ON vs OFF greedy streams stay within the documented int8
+    agreement bar (in practice bit-equal: quantizing identical content is
+    deterministic)."""
+    _, _, toks_off = _shared_run(False, pool_dtype="int8")
+    _, stats_on, toks_on = _shared_run(True, pool_dtype="int8")
+    assert stats_on.prefix["hits"] > 0
+    for on, off in zip(toks_on, toks_off):
+        n = min(len(on), len(off))
+        agree = sum(a == b for a, b in zip(on[:n], off[:n])) / max(n, 1)
+        assert agree >= INT8_TOKEN_AGREEMENT
+
+
+def test_engine_cow_splits_shared_tail_page():
+    """Two identical prompts whose bucket leaves a partial tail page: the
+    second admission maps the donor's pages INCLUDING the partial tail
+    (terminal trie node), so the first decode token of each slot must COW
+    off the shared page — and the tokens still match the no-cache run."""
+    cfg = _cfg()
+    out = {}
+    for on in (False, True):
+        ecfg = EngineConfig(
+            n_slots=2, max_seq=24, prefill_buckets=(12,), page_tokens=8,
+            hot_window=8, local_budget_frac=None, admission="greedy",
+            prefix_cache=on,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg)
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+        reqs = [Request(request_id=i, tokens=prompt.copy(),
+                        max_new_tokens=6, arrival=0.0) for i in range(2)]
+        eng.run(reqs)
+        out[on] = (eng, [list(r.output) for r in reqs])
+    eng_on, toks_on = out[True]
+    _, toks_off = out[False]
+    assert toks_on == toks_off
+    # donor splits off the trie's partial tail page at its first decode
+    # write; the sharer splits off its mapped copy: >= 2 genuine COWs
+    assert eng_on.pager.cow_splits >= 2
+    counts = eng_on.compile_counts()
+    assert counts.get("page_copy", 0) == 1        # compiled once, reused
+    assert all(v <= 1 for v in counts.values())
+    _pager_invariants(eng_on.pager)
+
+
+def test_engine_prefix_cache_config_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), paged=False,
+            prefix_cache=True,
+        ))
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine.build(_cfg("mamba2_780m"), CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            prefix_cache=True,
+        ))
+    with pytest.raises(ValueError, match="token-only"):
+        ServingEngine.build(_cfg("paligemma_3b"), CTX, EngineConfig(
+            n_slots=2, max_seq=32, prefill_buckets=(8,), page_tokens=8,
+            prefix_cache=True,
+        ))
+
+
+@pytest.mark.slow
+def test_bench_pager_churn_acceptance():
+    """Tentpole acceptance, via the bench lanes themselves (satellite 3):
+    bounded fragmentation under bursty churn, and the chat-lane dedup cut
+    — prefix cache ON moves >= 30% fewer pool bytes per token than OFF at
+    >= 0.95x the virtual token rate, token-identically."""
+    from benchmarks import bench_pager_churn as B
+
+    rows = B.run(smoke=True)
+    by = {r["tag"]: r for r in rows}
+    churn = by["pager_churn"]
+    assert churn["fragmentation"] <= B.FRAG_BOUND
+    assert churn["frag_drained"] == 0.0
+    shared = by["pager_shared"]
+    assert shared["hit_rate"] > 0.5
+    assert shared["measured_token_bytes"] == pytest.approx(
+        shared["dedup_token_bytes"], rel=1e-6)
+    chat = by["pager_prefix_chat"]
+    assert chat["token_parity"]
+    assert chat["pool_bytes_per_token_ratio"] <= B.DEDUP_CUT
+    assert chat["tok_rate_ratio"] >= 0.95
