@@ -1,0 +1,222 @@
+"""Fleet router benchmark — placement-policy TTFT/throughput comparisons
+over N engines (the rack-scale thesis one level up: the pool is shared
+ACROSS engines, and placement policy — not capacity — decides tail
+latency):
+
+  fleet_bursty         — round-robin vs KV-load-aware on the rack-sim-
+                         mapped traffic stream (`sched.workload.
+                         fleet_request_stream`: quiet draws -> short
+                         priority-0 interactive requests, loud draws ->
+                         long-prompt priority-1 batch requests). Both
+                         policies serve the identical trace; the
+                         acceptance row asserts KV-aware placement cuts
+                         p99 TTFT at equal total tokens — count-balanced
+                         round-robin piles heavy batch work onto busy
+                         engines, outstanding-token scoring doesn't.
+  fleet_shared_prefix  — round-robin vs prefix-aware on the shared-
+                         prefix stream (`n_systems` system prompts,
+                         prefix radix cache ON in every engine). The
+                         acceptance row asserts prefix-aware steering
+                         reports a strictly higher aggregate
+                         prefix_hit_rate at bit-identical tokens: the
+                         router-side radix index keeps each system
+                         prompt's pages on ONE engine instead of
+                         cold-missing on all of them.
+  fleet_roles          — disaggregated prefill/decode: every request
+                         prefills on the prefill-role engine and decodes
+                         on the decode-role engine after a pool page
+                         transfer; the row reports the transfer ledger
+                         (pages, bytes, mean handoff latency) and
+                         asserts one transfer per request.
+
+Every row records p50/p95/p99 TTFT and virtual tokens/s on the fleet's
+virtual clocks (wall time is reported but NOT gated — CI machines are
+noisy; the virtual metrics are deterministic for a fixed trace, which is
+what `scripts/check_bench.py` compares against the committed baselines).
+
+`BENCH_SMOKE=1` (set by `benchmarks/run.py --smoke`, the CI lane)
+shrinks request counts; shapes and code paths stay identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro import configs
+from repro.common.parallel import ParallelCtx
+from repro.serving import EngineConfig
+from repro.serving.fleet import FleetConfig, FleetRouter
+from repro.serving.queue import shared_prefix_stream
+from repro.sched.workload import fleet_request_stream
+from benchmarks.common import emit
+
+ARCH = "smollm_360m"
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+N_ENGINES = 2
+
+
+def _cfg():
+    return dataclasses.replace(configs.reduced(ARCH), dtype="float32")
+
+
+def _router(ecfg, cfg, policy, *, params=None, roles=False):
+    return FleetRouter.build(
+        cfg, ParallelCtx(remat="none"), ecfg,
+        FleetConfig(n_engines=N_ENGINES, policy=policy, roles=roles),
+        params=params,
+    )
+
+
+def _emit_fleet(tag, stats, extra=""):
+    s = stats.summary()
+    emit(
+        tag, 1e6 * stats.wall_s,
+        f"tok_s_virtual={s['tok_per_s_virtual']:.1f} "
+        f"ttft_p50={s['ttft_p50']:.2e} ttft_p95={s['ttft_p95']:.2e} "
+        f"ttft_p99={s['ttft_p99']:.2e} tpot_p50={s['tpot_p50']:.2e} "
+        f"routed={s['routed']} prefix_hit_rate={s['prefix_hit_rate']:.3f} "
+        f"cancelled={s['cancelled']}{extra}",
+    )
+    return {"tag": tag, **{k: (float(v) if isinstance(v, (int, float))
+                               else v) for k, v in s.items()}}
+
+
+def run_bursty(cfg, params):
+    """KV-aware vs round-robin at p99 TTFT on the bursty rack-mapped
+    stream — identical trace, equal total tokens."""
+    n = 16 if SMOKE else 48
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=96, prefill_buckets=(16, 32, 64),
+        page_tokens=8, hot_window=16, local_budget_frac=0.5,
+        admission="greedy",
+    )
+    rows, results = [], {}
+    for policy in ("round_robin", "kv_aware"):
+        router = _router(ecfg, cfg, policy, params=params)
+        reqs = fleet_request_stream(
+            n, cfg.vocab_size, seed=5, arrival_rate=4e4,
+            gen_interactive=(4, 8), gen_batch=(24, 32),
+        )
+        stats = router.run(reqs)
+        results[policy] = stats
+        rows.append(_emit_fleet(f"fleet_bursty_{policy}", stats))
+
+    rr, kv = results["round_robin"], results["kv_aware"]
+    p99_rr = rr.summary()["ttft_p99"]
+    p99_kv = kv.summary()["ttft_p99"]
+    ratio = p99_kv / max(p99_rr, 1e-12)
+    emit(
+        "fleet_bursty_kv_vs_rr", 0.0,
+        f"ttft_p99_rr={p99_rr:.3e} ttft_p99_kv={p99_kv:.3e} "
+        f"p99_ratio={ratio:.3f} kv_lower={p99_kv < p99_rr} "
+        f"equal_tokens={kv.tokens == rr.tokens} tokens={kv.tokens}",
+    )
+    rows.append({
+        "tag": "fleet_bursty_kv_vs_rr",
+        "ttft_p99_rr": float(p99_rr),
+        "ttft_p99_kv": float(p99_kv),
+        "p99_ratio": float(ratio),
+        "kv_lower": bool(p99_kv < p99_rr),
+        "equal_tokens": bool(kv.tokens == rr.tokens),
+        "tokens": int(kv.tokens),
+    })
+    assert kv.tokens == rr.tokens, "policies must serve equal tokens"
+    assert p99_kv < p99_rr, (
+        f"KV-aware placement must cut p99 TTFT vs round-robin on the "
+        f"bursty stream (rr={p99_rr:.3e} kv={p99_kv:.3e})"
+    )
+    return rows
+
+
+def run_shared_prefix(cfg, params):
+    """Prefix-aware vs round-robin hit rate on the shared-prefix stream
+    — token parity required (placement must be invisible to tokens)."""
+    n = 12 if SMOKE else 32
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=36, prefill_buckets=(32,), page_tokens=4,
+        hot_window=16, local_budget_frac=0.5, admission="greedy",
+        prefix_cache=True,
+    )
+    rows, results, outs = [], {}, {}
+    for policy in ("round_robin", "prefix_aware"):
+        router = _router(ecfg, cfg, policy, params=params)
+        reqs = shared_prefix_stream(
+            n, cfg.vocab_size, seed=3, system_tokens=24,
+            prompt_buckets=(32,), gen_range=(4, 4), arrival_rate=4e4,
+            n_systems=N_ENGINES,
+        )
+        stats = router.run(reqs)
+        results[policy] = stats
+        outs[policy] = [r.output for r in reqs]
+        rows.append(_emit_fleet(f"fleet_shared_prefix_{policy}", stats))
+
+    rr, pa = results["round_robin"], results["prefix_aware"]
+    hit_rr = rr.prefix["hit_rate"]
+    hit_pa = pa.prefix["hit_rate"]
+    parity = outs["round_robin"] == outs["prefix_aware"]
+    emit(
+        "fleet_prefix_aware_vs_rr", 0.0,
+        f"hit_rate_rr={hit_rr:.3f} hit_rate_aware={hit_pa:.3f} "
+        f"aware_higher={hit_pa > hit_rr} token_parity={parity} "
+        f"steered={pa.policy.get('steered', 0)} tokens={pa.tokens}",
+    )
+    rows.append({
+        "tag": "fleet_prefix_aware_vs_rr",
+        "hit_rate_rr": float(hit_rr),
+        "hit_rate_aware": float(hit_pa),
+        "aware_higher": bool(hit_pa > hit_rr),
+        "token_parity": bool(parity),
+        "steered": int(pa.policy.get("steered", 0)),
+        "tokens": int(pa.tokens),
+    })
+    assert parity, "placement policy must be invisible to the tokens"
+    assert hit_pa > hit_rr, (
+        f"prefix-aware steering must beat round-robin's aggregate "
+        f"prefix_hit_rate (rr={hit_rr:.3f} aware={hit_pa:.3f})"
+    )
+    return rows
+
+
+def run_roles(cfg, params):
+    """Disaggregated prefill/decode: one page transfer per request
+    through the pool-transfer ledger."""
+    n = 8 if SMOKE else 24
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=96, prefill_buckets=(16, 32, 64),
+        page_tokens=8, hot_window=16, local_budget_frac=0.5,
+        admission="greedy", prefill_chunk=8,
+    )
+    router = _router(ecfg, cfg, "round_robin", params=params, roles=True)
+    reqs = fleet_request_stream(
+        n, cfg.vocab_size, seed=5, arrival_rate=4e4,
+        gen_interactive=(4, 8), gen_batch=(24, 32),
+    )
+    stats = router.run(reqs)
+    t = stats.transfers
+    row = _emit_fleet(
+        "fleet_roles", stats,
+        extra=(f" transfers={t['transfers']} pages={t['pages']} "
+               f"bytes={t['bytes']:.0f} "
+               f"xfer_latency={t['mean_latency_s']:.2e}"),
+    )
+    row.update({"transfer_pages": int(t["pages"]),
+                "transfer_bytes": float(t["bytes"]),
+                "transfer_latency_s": float(t["mean_latency_s"])})
+    assert t["transfers"] == n, (
+        f"every request must hand off prefill->decode exactly once "
+        f"(got {t['transfers']} for {n} requests)"
+    )
+    assert stats.tokens > 0
+    return [row]
+
+
+def run():
+    cfg = _cfg()
+    # one param tree + one compiled cell set per EngineConfig shape; the
+    # policies being compared share everything but the router policy
+    import jax
+    from repro.models import model as M
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    return (run_bursty(cfg, params) + run_shared_prefix(cfg, params)
+            + run_roles(cfg, params))

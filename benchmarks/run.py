@@ -34,6 +34,7 @@ MODULES = [
     ("fig13", "benchmarks.bench_scheduler_case"),
     ("serve", "benchmarks.bench_serving"),
     ("pager", "benchmarks.bench_pager_churn"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("dryrun", "benchmarks.bench_dryrun_sweep"),
 ]
 
@@ -48,6 +49,15 @@ def main(argv=None) -> None:
                     help="write BENCH_<tag>.json row dumps to this dir")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        # a typo'd lane name must fail loudly, not pass green doing no work
+        known = {tag for tag, _ in MODULES}
+        bad = sorted(only - known)
+        if bad:
+            ap.error(
+                f"unknown --only lane(s) {', '.join(bad)}; "
+                f"valid: {', '.join(tag for tag, _ in MODULES)}"
+            )
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
     if args.out:

@@ -1,0 +1,156 @@
+"""Bench-regression gate: compare fresh BENCH_*.json smoke artifacts
+against the committed baselines in `benchmarks/baselines/`.
+
+    PYTHONPATH=src python scripts/check_bench.py \
+        --fresh results/bench --baselines benchmarks/baselines
+
+CI runs this inside the bench-smoke job AFTER `benchmarks/run.py
+--smoke --out results/bench`, so a perf regression fails the job
+instead of only uploading a quietly-worse artifact.
+
+Only DETERMINISTIC metrics are gated — virtual-clock throughput/latency
+and structural byte accounting, which are exact functions of the trace
+and the code. Wall-clock numbers (us_per_call, tok_per_s_wall) are
+never compared: CI machines are noisy by design.
+
+Rules live in `RULES`: each entry names (file, row tag, metric) and a
+tolerance type —
+
+  rel_max  — fresh <= baseline * tol   (ratios/latencies that must not
+             grow: pool_bytes_per_token, remote_share, p99 TTFT)
+  rel_min  — fresh >= baseline * tol   (throughput/hit rates that must
+             not collapse: tok_per_s_virtual, prefix_hit_rate)
+  abs_max  — fresh <= tol              (absolute ceilings, baseline
+             ignored: policy-comparison ratios like p99_ratio)
+
+A baseline file that doesn't exist is skipped with a warning (lets a PR
+introduce a new bench before its first baseline lands); a MISSING row
+tag or metric in a present pair of files is an error — silent metric
+renames are exactly what a gate must catch. Exit 0 = all rules pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+# (file, tag, metric, rule, tolerance)
+RULES = [
+    # --- serving engine (BENCH_serve.json) ---
+    ("BENCH_serve.json", "serve_chat", "pool_bytes_per_token",
+     "rel_max", 1.10),
+    ("BENCH_serve.json", "serve_chat", "tok_per_s_virtual",
+     "rel_min", 0.90),
+    ("BENCH_serve.json", "serve_long32k_hotness", "remote_share",
+     "rel_max", 1.15),
+    ("BENCH_serve.json", "serve_long32k_hotness", "pool_bytes_per_token",
+     "rel_max", 1.10),
+    ("BENCH_serve.json", "serve_int8_vs_fp16", "pool_bytes_ratio",
+     "abs_max", 0.30),
+    ("BENCH_serve.json", "serve_chunked_vs_serial", "tok_s_ratio",
+     "rel_min", 0.95),
+    # --- pager/allocator churn (BENCH_pager.json) ---
+    ("BENCH_pager.json", "pager_shared", "hit_rate",
+     "rel_min", 0.95),
+    ("BENCH_pager.json", "pager_prefix_chat", "pool_bytes_per_token_ratio",
+     "rel_max", 1.10),
+    ("BENCH_pager.json", "pager_prefix_chat", "tok_rate_ratio",
+     "rel_min", 0.95),
+    # --- fleet router (BENCH_fleet.json) ---
+    ("BENCH_fleet.json", "fleet_bursty_kv_vs_rr", "p99_ratio",
+     "abs_max", 1.00),
+    ("BENCH_fleet.json", "fleet_bursty_kv_aware", "tok_per_s_virtual",
+     "rel_min", 0.90),
+    ("BENCH_fleet.json", "fleet_prefix_aware_vs_rr", "hit_rate_aware",
+     "rel_min", 0.95),
+    ("BENCH_fleet.json", "fleet_roles", "transfer_bytes",
+     "rel_max", 1.10),
+]
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {}
+    for row in payload.get("rows", []):
+        tag = row.get("tag")
+        if tag is not None:
+            rows[tag] = row
+    return rows
+
+
+def check(fresh_dir: str, base_dir: str, rules=RULES) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    cache = {}
+
+    def rows_for(d, fname):
+        key = (d, fname)
+        if key not in cache:
+            path = os.path.join(d, fname)
+            cache[key] = load_rows(path) if os.path.exists(path) else None
+        return cache[key]
+
+    for fname, tag, metric, rule, tol in rules:
+        fresh = rows_for(fresh_dir, fname)
+        base = rows_for(base_dir, fname)
+        if fresh is None or base is None:
+            which = "fresh" if fresh is None else "baseline"
+            print(f"SKIP {fname}:{tag}:{metric} ({which} file missing)")
+            continue
+        if tag not in fresh or metric not in fresh[tag]:
+            failures.append(
+                f"{fname}: fresh run is missing {tag}.{metric} — "
+                f"renamed or dropped metric?")
+            continue
+        fval = float(fresh[tag][metric])
+        if rule == "abs_max":
+            ok = fval <= tol
+            detail = f"fresh={fval:.4g} ceiling={tol:.4g}"
+        else:
+            if tag not in base or metric not in base[tag]:
+                failures.append(
+                    f"{fname}: baseline is missing {tag}.{metric} — "
+                    f"regenerate benchmarks/baselines/")
+                continue
+            bval = float(base[tag][metric])
+            if rule == "rel_max":
+                bound = bval * tol
+                ok = fval <= bound
+            elif rule == "rel_min":
+                bound = bval * tol
+                ok = fval >= bound
+            else:
+                raise ValueError(f"unknown rule {rule!r}")
+            detail = (f"fresh={fval:.4g} baseline={bval:.4g} "
+                      f"bound={bound:.4g} ({rule} x{tol})")
+        status = "OK  " if ok else "FAIL"
+        print(f"{status} {fname}:{tag}:{metric} {detail}")
+        if not ok:
+            failures.append(f"{fname}:{tag}:{metric} {detail}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory with the fresh BENCH_*.json artifacts")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory with the committed baselines")
+    args = ap.parse_args(argv)
+    failures = check(args.fresh, args.baselines)
+    if failures:
+        print(f"\nbench regression gate FAILED "
+              f"({len(failures)} rule(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

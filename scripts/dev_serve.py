@@ -36,6 +36,17 @@
         # waves of identical prompts through one engine — wave 2 must
         # hit the radix trie (mapping the cached prompt pages instead
         # of re-storing them) and replay wave 1's tokens bit-for-bit
+    PYTHONPATH=src python scripts/dev_serve.py --fleet 2 --interpret a b
+        # the CI fleet-parity lane: (1) N engines behind the
+        # round-robin FleetRouter must replay the single-engine greedy
+        # token stream bit-for-bit on a staggered-arrival trace —
+        # placement, per-engine clocks and queue routing must all be
+        # invisible to the sampled tokens; (2) on attention-only archs,
+        # a shared-prefix stream served under prefix-aware placement
+        # must emit the SAME tokens as under round-robin (token parity)
+        # with a STRICTLY higher aggregate prefix_hit_rate — the
+        # router-side radix index keeps each system prompt's pages on
+        # one engine instead of cold-missing on all of them
 """
 
 import dataclasses
@@ -123,6 +134,75 @@ def engine_prefix_greedy(cfg, params, prompts, *, pool_dtype="fp"):
     return waves, hits, engine
 
 
+def fleet_parity(cfg, params, n_engines):
+    """Gate 1 of the fleet lane: round-robin fleet vs single engine,
+    token-for-token on a staggered-arrival trace."""
+    from repro.serving.fleet import FleetConfig, FleetRouter
+
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
+        page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
+        admission="greedy", paged=True,
+    )
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (2 * n_engines * B, S), 0, cfg.vocab_size
+    ))
+
+    def mk():
+        return [Request(request_id=i, tokens=toks[i], max_new_tokens=GEN,
+                        arrival=0.2 * i) for i in range(len(toks))]
+
+    single = ServingEngine.build(cfg, ctx, ecfg, params=params)
+    ref = mk()
+    single.run(ref)
+    router = FleetRouter.build(
+        cfg, ctx, ecfg, FleetConfig(n_engines=n_engines,
+                                    policy="round_robin"),
+        params=params,
+    )
+    got = mk()
+    stats = router.run(got)
+    mismatch = sum(int(a.output != b.output) for a, b in zip(got, ref))
+    balanced = min(stats.routed) > 0
+    return mismatch, balanced, stats
+
+
+def fleet_prefix(cfg, params, n_engines):
+    """Gate 2 (attention-only archs): prefix-aware placement must beat
+    round-robin's aggregate prefix_hit_rate on a shared-prefix stream
+    at token parity."""
+    from repro.serving.fleet import FleetConfig, FleetRouter
+    from repro.serving.queue import shared_prefix_stream
+
+    SP, GENP = 32, 4
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=SP + GENP, prefill_buckets=(SP,),
+        page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
+        admission="greedy", paged=True, prefix_cache=True,
+    )
+
+    def stream():
+        return shared_prefix_stream(
+            6 * n_engines, cfg.vocab_size, seed=3,
+            system_tokens=SP - 2 * PAGE, prompt_buckets=(SP,),
+            gen_range=(GENP, GENP), arrival_rate=2.0,
+            n_systems=n_engines,
+        )
+
+    outs, hits = {}, {}
+    for pol in ("round_robin", "prefix_aware"):
+        router = FleetRouter.build(
+            cfg, ctx, ecfg,
+            FleetConfig(n_engines=n_engines, policy=pol), params=params,
+        )
+        reqs = stream()
+        stats = router.run(reqs)
+        outs[pol] = [r.output for r in reqs]
+        hits[pol] = stats.prefix["hit_rate"]
+    parity = outs["round_robin"] == outs["prefix_aware"]
+    return parity, hits["round_robin"], hits["prefix_aware"]
+
+
 def check_teacher_forcing(cfg, params, toks, extras):
     full = {"tokens": toks[:, : S + 1], **extras}
     logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg, ctx))(
@@ -151,8 +231,33 @@ def main():
         i = args.index("--pool-dtype")
         pool_dtype = args[i + 1]
         del args[i:i + 2]
+    fleet_n = 0
+    if "--fleet" in args:
+        i = args.index("--fleet")
+        fleet_n = int(args[i + 1])
+        del args[i:i + 2]
     archs = [a for a in args if not a.startswith("--")]
     archs = archs or configs.list_archs()
+
+    if fleet_n:
+        for arch in archs:
+            cfg = dataclasses.replace(configs.reduced(arch),
+                                      dtype="float32")
+            params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+            mismatch, balanced, _ = fleet_parity(cfg, params, fleet_n)
+            ok = mismatch == 0 and balanced
+            note = ""
+            if chunked_prefill_supported(cfg):
+                parity, rr_hit, pa_hit = fleet_prefix(cfg, params, fleet_n)
+                ok &= parity and pa_hit > rr_hit
+                note = (f" prefix_hit rr={rr_hit:.3f} aware={pa_hit:.3f} "
+                        f"parity={parity}")
+            status = "OK " if ok else "FAIL"
+            print(f"{arch:28s} fleet={fleet_n} rr_mismatch={mismatch} "
+                  f"balanced={balanced}{note} {status}")
+            assert status == "OK ", arch
+        print("ALL OK")
+        return
     for arch in archs:
         cfg = dataclasses.replace(configs.reduced(arch), dtype="float32")
         params, _ = M.init_model(cfg, jax.random.PRNGKey(0))

@@ -26,6 +26,7 @@ from repro.serving import (
     EngineConfig,
     Request,
     ServingEngine,
+    fleet,
     make_scenario,
 )
 
@@ -56,8 +57,22 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     # scenario mode
     ap.add_argument("--scenario", default=None,
-                    choices=["chat", "long_context", "bursty"])
+                    choices=["chat", "long_context", "bursty",
+                             "shared_prefix", "multi_tenant"])
     ap.add_argument("--requests", type=int, default=16)
+    # fleet mode
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run N engines behind the FleetRouter "
+                    "(0 = single-engine path)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=list(fleet.POLICIES),
+                    help="fleet placement policy")
+    ap.add_argument("--roles", action="store_true",
+                    help="disaggregated prefill/decode roles (fleet "
+                    "mode; needs --prefill-chunk)")
+    ap.add_argument("--autoscale-min", type=int, default=0,
+                    help="fleet autoscaling: start/min engine count "
+                    "(0 = autoscaling off; max is --fleet)")
     # engine knobs
     ap.add_argument("--slots", type=int, default=0,
                     help="0 = match --batch (one-shot) / 4 (scenario)")
@@ -70,6 +85,9 @@ def main(argv=None):
                     help="interleave prompt chunks of this many tokens "
                     "with decode steps (paged, attention-only archs; "
                     "0 = serialized whole-prompt prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix radix cache in every engine "
+                    "(paged, attention-only archs)")
     ap.add_argument("--local-budget", type=float, default=0.5,
                     help="local-tier budget as a fraction of peak KV bytes")
     ap.add_argument("--admission", default="loi",
@@ -84,7 +102,11 @@ def main(argv=None):
 
     if args.scenario:
         n_slots = args.slots or 4
-        buckets = (16, 32) if args.scenario != "long_context" else (128,)
+        buckets = {
+            "long_context": (128,),
+            "shared_prefix": (32,),
+            "multi_tenant": (16, 32, 64),
+        }.get(args.scenario, (16, 32))
         max_seq = max(buckets) + 64
         # arrival processes scaled to the virtual clock (µs-scale steps on
         # reduced models) so requests actually overlap in flight
@@ -94,6 +116,12 @@ def main(argv=None):
                                  arrival_rate=5e3),
             "bursty": dict(prompt_buckets=buckets, burst_size=n_slots + 2,
                            burst_gap=1e-4),
+            "shared_prefix": dict(prompt_buckets=buckets,
+                                  system_tokens=16, n_systems=2,
+                                  arrival_rate=2e4),
+            "multi_tenant": dict(interactive_buckets=buckets[:2],
+                                 batch_bucket=buckets[-1],
+                                 arrival_rate=2e4, batch_gap=1e-4),
         }[args.scenario]
         reqs = make_scenario(
             args.scenario, args.requests, cfg.vocab_size, seed=args.seed,
@@ -139,7 +167,47 @@ def main(argv=None):
         hot_window=max(16, max_seq // 4),
         admission=args.admission,
         catalog_arch=args.arch if args.admission == "loi" else None,
+        prefix_cache=args.prefix_cache,
     )
+
+    if args.fleet:
+        if args.roles and not args.prefill_chunk:
+            ap.error("--roles needs --prefill-chunk (the prefill-role "
+                     "engine runs chunked prefill)")
+        scale = None
+        if args.autoscale_min:
+            scale = fleet.AutoscaleConfig(
+                min_engines=args.autoscale_min, max_engines=args.fleet)
+        fcfg = fleet.FleetConfig(
+            n_engines=args.fleet, policy=args.policy, roles=args.roles,
+            autoscale=scale,
+        )
+        router = fleet.FleetRouter.build(
+            cfg, ctx, ecfg, fcfg, mesh=mesh, seed=args.seed)
+        fstats = router.run(reqs)
+        s = fstats.summary()
+        print(
+            f"fleet[{args.fleet} x {args.policy}"
+            f"{' roles' if args.roles else ''}]: served {s['requests']} "
+            f"requests / {s['tokens']} tokens "
+            f"({s['tok_per_s_virtual']:.1f} tok/s virtual) "
+            f"routed={s['routed']}"
+        )
+        print(
+            f"latency: ttft_p50={s['ttft_p50']:.2e}s "
+            f"ttft_p95={s['ttft_p95']:.2e}s ttft_p99={s['ttft_p99']:.2e}s "
+            f"tpot_p50={s['tpot_p50']:.2e}s"
+        )
+        print(
+            f"prefix_hit_rate={s['prefix_hit_rate']:.3f} "
+            f"transfers={s['transfers']} "
+            f"transfer_bytes={s['transfer_bytes']:.0f} "
+            f"cancelled={s['cancelled']} scale_events={s['scale_events']}"
+        )
+        done = [r for r in reqs if r.output]
+        print("sample:", done[0].output[:12] if done else "(no requests)")
+        return fstats
+
     engine = ServingEngine.build(
         cfg, ctx, ecfg, mesh=mesh, seed=args.seed
     )

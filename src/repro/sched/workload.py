@@ -192,6 +192,65 @@ def serving_stream(
     ]
 
 
+def fleet_request_stream(
+    n: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    loud_fraction: float = 0.3,
+    arrival_rate: float = 2.0,
+    interactive_buckets: Sequence[int] = (16, 32),
+    batch_bucket: int = 64,
+    gen_interactive: tuple = (8, 16),
+    gen_batch: tuple = (16, 32),
+    cancel_fraction: float = 0.0,
+    cancel_after: tuple = (0.5, 2.0),
+):
+    """Rack-sim job stream mapped onto fleet ROUTER traffic — the
+    admission<->scheduler loop closed at fleet scale. The generator
+    reuses `synthetic_stream`'s quadrant split, but instead of
+    `TraceJob`s it emits serving `Request`s: a LOUD (link-heavy,
+    Hypre-like) draw becomes a long-prompt priority-1 batch request
+    (big KV footprint = the pool injector), a QUIET draw becomes a
+    short-prompt priority-0 interactive request (the fragile
+    bystander). `cancel_fraction` of requests carry a virtual-time
+    `cancel_at` deadline (`arrival + U(*cancel_after)`) — deterministic
+    cancellation load for the router's sweep path. Deterministic in
+    `seed`; arrivals are the same Poisson process the rack-sim uses."""
+    # imported lazily: serving pulls in jax, which synthetic users skip
+    from repro.serving.queue import Request
+
+    if not 0.0 <= cancel_fraction <= 1.0:
+        raise ValueError("cancel_fraction must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n))
+    out = []
+    for i in range(n):
+        loud = rng.uniform() < loud_fraction
+        if loud:
+            plen = batch_bucket
+            gen = int(rng.integers(gen_batch[0], gen_batch[1] + 1))
+            prio, tenant = 1, "batch"
+        else:
+            plen = int(rng.choice(list(interactive_buckets)))
+            gen = int(rng.integers(gen_interactive[0],
+                                   gen_interactive[1] + 1))
+            prio, tenant = 0, "interactive"
+        cancel_at = None
+        if cancel_fraction and rng.uniform() < cancel_fraction:
+            cancel_at = float(arrivals[i] + rng.uniform(*cancel_after))
+        out.append(Request(
+            request_id=i,
+            tokens=rng.integers(0, vocab, size=plen).astype(np.int32),
+            max_new_tokens=gen,
+            arrival=float(arrivals[i]),
+            priority=prio,
+            tenant=tenant,
+            cancel_at=cancel_at,
+        ))
+    return out
+
+
 def catalog_stream(
     n_jobs: int,
     *,

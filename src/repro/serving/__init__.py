@@ -82,6 +82,47 @@ unfused scatter-then-attend oracle, and fp-mode fused-vs-unfused cache
 parity is bit-for-bit (`tests/test_kernels.py` checks both, plus a
 jaxpr scan asserting the fused cells contain zero scatter ops).
 
+FLEET LAYER (`serving/fleet/`): N engines behind a `FleetRouter` — the
+paper's rack-scale thesis (placement/interference policy over a SHARED
+pool decides performance, sec 6-7) applied one level up, across
+engines instead of across pages. The router is pure-Python
+orchestration over the engines' re-entrant tick primitives (`pump` /
+`advance_to` / `begin_capture` / `capture_stats`); all engines share
+ONE compiled cell set and one param tree (`FleetRouter.build`), each
+with its own page pool, pager and virtual clock.
+
+* PLACEMENT PROTOCOL (`fleet/placement.py`): a policy maps (eligible
+  `EngineView` snapshots, prompt tokens) -> engine_id and is notified
+  via `record` once per placed request — a pure function of the views,
+  so decisions are deterministic and unit-testable without engines.
+  Three policies: `round_robin` (baseline; with greedy decoding the
+  token streams are placement-invariant, the CI fleet-parity lane's
+  gate), `kv_aware` (queue depth / slot capacity + half-weighted pool
+  pressure from free physical pages, lowest-id tie-break), and
+  `prefix_aware` (a router-side radix index over page-granular token
+  blocks steering shared-prefix traffic to the engine whose radix trie
+  already holds those pages; kv-aware fallback on cold misses).
+* ROLES + PAGE-HANDOFF LEDGER (`fleet/roles.py`): disaggregated
+  prefill/decode. A prefill-role engine completes chunked prefill,
+  emits the first token, guard-PINS the prompt pages and parks the
+  slot in the `handoff` phase; `execute_handoff` admits the request
+  into a decode-role engine, allocates destination pages
+  (`KVPager.admit`), copies every paged leaf (k/v + int8 scale planes)
+  along the physical-page axis, prices the transfer at pool bandwidth
+  on the decode engine's clock, then the source UNPINS and releases
+  (`complete_handoff`). The `TransferLedger` logs pages/bytes/latency
+  per transfer. Contract: pinned pages are immutable until the copy
+  lands; the destination slot starts at `start_pos = prompt_len` with
+  the prefill-emitted first token.
+* PRIORITIES + CANCELLATION (`queue.py`): `RequestQueue` orders by
+  (priority class, arrival) — single-class traces stay bit-identical
+  FIFO; requests cancel eagerly or at a virtual-time deadline, are
+  dropped at the queue or swept out of slots
+  (`ServingEngine.sweep_cancelled` -> `KVPager.release`).
+* AUTOSCALING (`fleet/autoscale.py`): queue-depth hysteresis
+  (watermarks + patience + cooldown) activates/drains engines between
+  min/max; the decision loop is side-effect-free and unit-tested.
+
 Architecture (one module per concern):
 
   queue.py    — `Request` / `RequestQueue` and deterministic arrival
@@ -162,8 +203,10 @@ from repro.serving.queue import (
     chat_stream,
     long_context_stream,
     make_scenario,
+    multi_tenant_stream,
     shared_prefix_stream,
 )
+from repro.serving import fleet
 
 __all__ = [
     "AdmissionController",
@@ -183,7 +226,9 @@ __all__ = [
     "StepTraffic",
     "bursty_stream",
     "chat_stream",
+    "fleet",
     "long_context_stream",
     "make_scenario",
+    "multi_tenant_stream",
     "shared_prefix_stream",
 ]

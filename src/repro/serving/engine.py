@@ -248,6 +248,24 @@ class ServeStats:
 _PAGED_KEYS = ("k", "v", "k_sz", "v_sz")
 
 
+@dataclasses.dataclass
+class HandoffRecord:
+    """A completed prefill awaiting pool transfer to a decode-role engine
+    (disaggregated prefill/decode, `serving.fleet.roles`). The prefill
+    engine emitted the first token and parked the slot in the `handoff`
+    phase; `pages` are the slot's physical prompt pages, guard-pinned so
+    nothing (COW splits, prefix-cache reclaim) can recycle them before
+    the transfer copies their payload out. `complete_handoff` drops the
+    pin and releases the slot."""
+
+    slot: int
+    request: object               # serving.queue.Request
+    first_token: int
+    n_tokens: int                 # cached prompt tokens to transfer
+    pages: List[int]              # physical page ids, logical order
+    t_emit: float                 # prefill engine's clock at completion
+
+
 def _kv_bytes_per_token(acaches) -> float:
     """Self-attention K/V bytes per cached token per slot, from the global
     abstract cache tree — DTYPE-AWARE: the payload contribution follows
@@ -380,6 +398,13 @@ class ServingEngine:
         self._bt_dev = None            # pager returns the SAME array
         # object until the mapping changes, so steady-state decode skips
         # the per-step host->device transfer by identity
+        self._max_conc = 0
+        self.cancelled = 0             # in-flight cancellations swept
+        # --- disaggregated prefill/decode (serving.fleet.roles) ---
+        self.handoff_role = False      # True: completed chunked prefills
+        # park in the `handoff` phase and queue a HandoffRecord instead of
+        # joining this engine's decode batch
+        self.handoff_outbox: List[HandoffRecord] = []
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -555,14 +580,45 @@ class ServingEngine:
                     include_partial=False,
                 )
             first = int(np.asarray(tok)[0])
-            self.batcher.begin_decode(slot, start_pos=req.prompt_len)
-            self.tokens[slot.index] = first
             req.output.append(first)
             req.token_times.append(self.virtual_s)
             if req.done:                  # max_new_tokens == 1
+                self.batcher.begin_decode(slot, start_pos=req.prompt_len)
                 req.finished = self.virtual_s
                 self._retire(slot)
+            elif self.handoff_role:
+                # disaggregated prefill role: do NOT join this engine's
+                # decode batch — park the slot (its write cursor stays
+                # masked), guard-pin the prompt pages, and queue the
+                # handoff for the fleet router's pool-transfer ledger
+                n_pages = -(-req.prompt_len // self.ecfg.page_tokens)
+                pages = [int(p) for p in
+                         self.pager.phys[slot.index, :n_pages]]
+                self.pager.pin(pages)
+                slot.phase = "handoff"
+                self.handoff_outbox.append(HandoffRecord(
+                    slot=slot.index, request=req, first_token=first,
+                    n_tokens=req.prompt_len, pages=pages,
+                    t_emit=self.virtual_s,
+                ))
+            else:
+                self.batcher.begin_decode(slot, start_pos=req.prompt_len)
+                self.tokens[slot.index] = first
         return True
+
+    def complete_handoff(self, rec: HandoffRecord) -> None:
+        """The transfer copied `rec`'s pages into the decode engine's
+        pool: drop the guard pin and release the prefill slot (its pages
+        return to this engine's free list unless the prefix trie still
+        holds them)."""
+        slot = self.batcher.slots[rec.slot]
+        if slot.request is not rec.request:
+            raise RuntimeError(
+                f"handoff slot {rec.slot} no longer owns request "
+                f"{rec.request.request_id}"
+            )
+        self.pager.unpin(rec.pages)
+        self._retire(slot)
 
     def _prefill_dt(self, n_tokens: int, final: bool = True) -> float:
         """Virtual cost of prefilling `n_tokens` on the target topology:
@@ -701,6 +757,83 @@ class ServingEngine:
             topo=self.topo,
         )
 
+    # -------------------------------------------------------- tick layer
+    # The engine loop decomposed into re-entrant primitives so a fleet
+    # router (`serving.fleet.router`) can drive N engines step-by-step on
+    # interleaved virtual clocks; `run()` composes exactly the same
+    # primitives, so single-engine traces are bit-identical to the
+    # pre-fleet monolith.
+    @property
+    def pending_work(self) -> bool:
+        """True while a tick could make local progress: any occupied slot
+        that is not parked awaiting a fleet handoff."""
+        return any(s.occupied and s.phase != "handoff"
+                   for s in self.batcher.slots)
+
+    def advance_to(self, t: float) -> None:
+        """Advance the virtual clock to `t` (idle wait, never backwards).
+        Arrival/transfer-bounded idling is not decode stall: the gap
+        origin moves past the wait so the next gap counts only the work
+        (admissions/prefill) done after it."""
+        if t > self.virtual_s:
+            self.virtual_s = t
+            if self._last_decode_end is not None:
+                self._last_decode_end = self.virtual_s
+
+    def sweep_cancelled(self) -> int:
+        """Retire every occupied slot whose request is cancelled (eager
+        flag or `cancel_at` deadline passed on the virtual clock),
+        releasing its KV pages back through `KVPager.release` — the
+        refcount path, so shared prefix pages survive under the trie's
+        pin. Handoff-parked slots are skipped (the router owns them
+        mid-transfer)."""
+        n = 0
+        for slot in self.batcher.slots:
+            if (slot.occupied and slot.phase != "handoff"
+                    and slot.request.is_cancelled(self.virtual_s)):
+                slot.request.finished = self.virtual_s
+                self._retire(slot)
+                n += 1
+        self.cancelled += n
+        return n
+
+    def pump(self, q: RequestQueue) -> str:
+        """One engine-loop iteration against `q`: sweep cancellations,
+        admit while slots/admission allow, advance at most one prefill
+        chunk, then one decode step if any slot is live. Returns what
+        happened: "decode" | "chunk" | "admit" | "idle" (nothing
+        possible — the caller owns clock advancement)."""
+        self.sweep_cancelled()
+        admitted = False
+        while (self.batcher.n_free and q.peek(self.virtual_s)
+               and self.admission.admit(self.batcher.n_busy)):
+            self._admit(q.pop(self.virtual_s), self.virtual_s)
+            admitted = True
+        chunk_ran = self._prefill_tick()
+        if self.batcher.n_active == 0:
+            if chunk_ran:
+                return "chunk"
+            return "admit" if admitted else "idle"
+        self._max_conc = max(self._max_conc, self.batcher.n_active)
+        self._step_decode()
+        return "decode"
+
+    def begin_capture(self) -> dict:
+        """Snapshot every per-run counter (`run()`'s stats are deltas, so
+        the engine object stays reusable across traces)."""
+        self._max_conc = 0
+        return {
+            "now0": self.virtual_s,
+            "steps0": self.steps,
+            "blocks0": self.admission.blocks,
+            "gaps0": len(self._decode_gaps),
+            "pager0": self.pager.counters(),
+            "prefix0": (self.prefix_cache.counters()
+                        if self.prefix_cache is not None else None),
+            "cancelled0": self.cancelled,
+            "wall0": time.perf_counter(),
+        }
+
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request],
             max_steps: Optional[int] = None) -> ServeStats:
@@ -708,38 +841,28 @@ class ServingEngine:
         trace). Returns aggregate stats; per-request outputs/latencies are
         left on the `Request` objects."""
         q = RequestQueue(requests)
-        now0 = self.virtual_s
-        steps0 = self.steps
-        blocks0 = self.admission.blocks
-        gaps0 = len(self._decode_gaps)
-        pager0 = self.pager.counters()
-        prefix0 = (self.prefix_cache.counters()
-                   if self.prefix_cache is not None else None)
-        wall0 = time.perf_counter()
-        max_conc = 0
+        cap = self.begin_capture()
         while len(q) or self.batcher.n_busy:
-            while (self.batcher.n_free and q.peek(self.virtual_s)
-                   and self.admission.admit(self.batcher.n_busy)):
-                self._admit(q.pop(self.virtual_s), self.virtual_s)
-            chunk_ran = self._prefill_tick()
-            if self.batcher.n_active == 0:
-                if chunk_ran:
-                    continue
+            act = self.pump(q)
+            if act == "decode":
+                if max_steps is not None and self.steps >= max_steps:
+                    break
+            elif act == "idle":
                 nxt = q.next_arrival()
                 if not np.isfinite(nxt):
                     break
-                # arrival-bounded idling is not decode stall: advance the
-                # gap origin past the wait so the next gap counts only
-                # the work (admissions/prefill) done after the arrival
-                self.virtual_s = max(self.virtual_s, nxt)
-                if self._last_decode_end is not None:
-                    self._last_decode_end = self.virtual_s
-                continue
-            max_conc = max(max_conc, self.batcher.n_active)
-            self._step_decode()
-            if max_steps is not None and self.steps >= max_steps:
-                break
-        wall = time.perf_counter() - wall0
+                self.advance_to(nxt)
+        return self.capture_stats(cap, requests)
+
+    def capture_stats(self, cap: dict, requests: List[Request],
+                      ) -> ServeStats:
+        """Aggregate stats since `cap = begin_capture()` over `requests`
+        (per-request outputs/latencies live on the `Request` objects)."""
+        wall = time.perf_counter() - cap["wall0"]
+        now0, steps0 = cap["now0"], cap["steps0"]
+        blocks0, gaps0 = cap["blocks0"], cap["gaps0"]
+        pager0, prefix0 = cap["pager0"], cap["prefix0"]
+        max_conc = self._max_conc
 
         done = [r for r in requests if r.output]
         ttft = np.array([r.token_times[0] - r.arrival for r in done])

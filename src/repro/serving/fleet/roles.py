@@ -1,0 +1,130 @@
+"""Disaggregated prefill/decode engine roles: the pool-transfer ledger.
+
+The disaggregated-memory thesis applied to token serving: a
+prefill-role engine runs chunked prefill and *produces* KV pages into
+the shared pool; a decode-role engine *consumes* them.  Mechanically a
+handoff is three existing primitives composed across two engines:
+
+1. the prefill engine completes the last chunk, emits the first token,
+   guard-**pins** the slot's prompt pages and parks the slot in the
+   ``handoff`` phase (`ServingEngine._prefill_tick`), queueing a
+   :class:`~repro.serving.engine.HandoffRecord`;
+2. :func:`execute_handoff` admits the request into a decode-engine
+   slot, allocates destination pages through the decode engine's pager
+   (`KVPager.admit`), and copies the page *payload* — every paged cache
+   leaf (`k`/`v` + int8 `k_sz`/`v_sz` scale planes) along the physical
+   page axis — pricing the transfer at pool bandwidth on the virtual
+   clock (`advance_to(t_emit + pages*page_bytes/BW)`);
+3. the prefill engine drops the guard pin and **releases** the source
+   slot (`complete_handoff` -> `KVPager.release`), returning its pages
+   to the producer's free list.
+
+The :class:`TransferLedger` is the router's accounting of every page
+movement — pages, bytes, and per-transfer latency — so bench lanes can
+report the pool traffic the role split generates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.serving.engine import _PAGED_KEYS, HandoffRecord, ServingEngine
+
+__all__ = ["TransferLedger", "copy_pages", "can_accept_handoff",
+           "execute_handoff"]
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    request_id: int
+    src_engine: int
+    dst_engine: int
+    n_pages: int
+    bytes: float
+    t_emit: float                 # prefill clock at first-token emission
+    t_ready: float                # decode clock when pages landed
+
+
+class TransferLedger:
+    """Append-only log of prefill->decode page transfers."""
+
+    def __init__(self) -> None:
+        self.records: List[TransferRecord] = []
+
+    def record(self, rec: TransferRecord) -> None:
+        self.records.append(rec)
+
+    def counters(self) -> dict:
+        n = len(self.records)
+        return {
+            "transfers": n,
+            "pages": sum(r.n_pages for r in self.records),
+            "bytes": sum(r.bytes for r in self.records),
+            "mean_latency_s": (
+                sum(r.t_ready - r.t_emit for r in self.records) / n
+                if n else 0.0
+            ),
+        }
+
+
+def copy_pages(src_caches, dst_caches, src_pages, dst_pages):
+    """Copy the payload of `src_pages` (physical ids in the source pool)
+    onto `dst_pages` of the destination pool, for every paged leaf —
+    k/v and, for int8 pools, the per-page (scale, zero) planes ride
+    along, so quantized pages transfer bit-exactly. Leaves index pages
+    on axis 1 (layer-stacked axis 0)."""
+    src_ids = np.asarray(src_pages, dtype=np.int32)
+    dst_ids = np.asarray(dst_pages, dtype=np.int32)
+    if src_ids.size != dst_ids.size:
+        raise ValueError("src/dst page counts differ")
+    out = {}
+    for pos, c in dst_caches.items():
+        nc = dict(c)
+        src_c = src_caches[pos]
+        for key in _PAGED_KEYS:
+            if key in nc:
+                nc[key] = nc[key].at[:, dst_ids].set(src_c[key][:, src_ids])
+        out[pos] = nc
+    return out
+
+
+def can_accept_handoff(dst: ServingEngine, rec: HandoffRecord) -> bool:
+    """Room for the transfer right now: a free slot and enough free
+    physical pages to own the prompt."""
+    return (dst.batcher.n_free > 0
+            and dst.pager.counters()["free_pages"] >= len(rec.pages))
+
+
+def execute_handoff(rec: HandoffRecord, src: ServingEngine,
+                    dst: ServingEngine, *, src_id: int, dst_id: int,
+                    ledger: TransferLedger) -> float:
+    """Move `rec`'s request from the prefill engine `src` into a decode
+    slot on `dst`. Returns the decode-side ready time (virtual s)."""
+    if not can_accept_handoff(dst, rec):
+        raise RuntimeError(
+            f"decode engine {dst_id} cannot accept handoff for request "
+            f"{rec.request.request_id} (free slots {dst.batcher.n_free}, "
+            f"free pages {dst.pager.counters()['free_pages']})"
+        )
+    req = rec.request
+    n_pages = len(rec.pages)
+    slot = dst.batcher.admit(req, start_pos=rec.n_tokens)
+    dst.pager.admit(slot.index, rec.n_tokens)
+    dst_pages = [int(p) for p in dst.pager.phys[slot.index, :n_pages]]
+    dst.caches = copy_pages(src.caches, dst.caches, rec.pages, dst_pages)
+    dst.tokens[slot.index] = rec.first_token
+    # the transfer serializes after first-token emission and prices the
+    # page payload over the pool link — the decode engine cannot start
+    # this slot before the pages land
+    t_xfer = n_pages * src.pager.page_bytes / src.topo.pool.bandwidth
+    t_ready = rec.t_emit + t_xfer
+    dst.advance_to(t_ready)
+    src.complete_handoff(rec)
+    ledger.record(TransferRecord(
+        request_id=req.request_id, src_engine=src_id, dst_engine=dst_id,
+        n_pages=n_pages, bytes=n_pages * src.pager.page_bytes,
+        t_emit=rec.t_emit, t_ready=t_ready,
+    ))
+    return t_ready

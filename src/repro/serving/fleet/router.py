@@ -1,0 +1,365 @@
+"""FleetRouter: N `ServingEngine`s behind one placement policy.
+
+The router is pure-Python orchestration over the engines' re-entrant
+tick primitives (`pump` / `advance_to` / `begin_capture` /
+`capture_stats`): no new jitted cells, which is why the whole fleet
+layer runs on CPU CI in interpret mode.  All engines share one set of
+compiled cells and one parameter tree (`FleetRouter.build` compiles
+once), so an N-engine fleet costs N cache pools, not N compilations.
+
+Event loop (deterministic for a fixed trace + policy):
+
+1. *route* — every request whose arrival is <= the router clock is
+   placed once, via the policy, over the eligible engine views
+   (accepting + prefill-capable under role split); routed requests sit
+   in per-engine `RequestQueue`s (priority + cancellation semantics
+   included);
+2. *transfer* — pending prefill->decode handoffs are drained to the
+   least-loaded decode engine with capacity (`roles.execute_handoff`);
+3. *tick* — the ready engine with the smallest virtual clock pumps one
+   engine-loop iteration; the router clock is the min over ready
+   engines' next-event times, else the next unrouted arrival.
+
+Each engine keeps its own virtual clock; fleet makespan is the max
+engine clock at drain.  With one engine this loop replays
+`ServingEngine.run` bit-for-bit (same pump/advance sequence), and with
+greedy decoding the *token streams* are placement-invariant — the
+property the CI fleet-parity lane pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import ServeStats, ServingEngine
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.fleet.autoscale import AutoscaleConfig, Autoscaler
+from repro.serving.fleet.placement import (
+    EngineView, PlacementPolicy, make_policy)
+from repro.serving.fleet.roles import (
+    TransferLedger, can_accept_handoff, execute_handoff)
+
+__all__ = ["FleetConfig", "FleetStats", "EngineHandle", "FleetRouter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    n_engines: int = 2
+    policy: str = "round_robin"
+    roles: bool = False          # True: engine 0 prefill-role, rest decode
+    autoscale: Optional[AutoscaleConfig] = None
+
+    def __post_init__(self) -> None:
+        if self.n_engines < 1:
+            raise ValueError("n_engines must be >= 1")
+        if self.roles and self.n_engines < 2:
+            raise ValueError("role split needs >= 2 engines")
+        if self.roles and self.autoscale is not None:
+            raise ValueError("autoscale is unified-role only")
+        if self.autoscale is not None \
+                and self.autoscale.max_engines > self.n_engines:
+            raise ValueError("autoscale.max_engines exceeds built engines")
+
+
+class EngineHandle:
+    """One engine + its router-side state (queue, role, accepting)."""
+
+    def __init__(self, engine_id: int, engine: ServingEngine,
+                 role: str = "unified", accepting: bool = True):
+        self.engine_id = engine_id
+        self.engine = engine
+        self.role = role
+        self.accepting = accepting
+        self.queue = RequestQueue()
+        self.routed: List[Request] = []
+        self.stalled = False      # pump made no progress on arrived work;
+        # cleared when routing/handoff/clock events change its inputs
+
+    def view(self) -> EngineView:
+        eng = self.engine
+        # outstanding-token costs: what the kv-aware score actually
+        # weighs — a queued 64-token batch prompt with a 32-token budget
+        # is far more load than a queued 16-token chat turn
+        queued_cost = sum(
+            r.prompt_len + r.max_new_tokens for r in self.routed
+            if not r.output and np.isnan(r.admitted))
+        busy_cost = 0.0
+        for s in eng.batcher.slots:
+            if s.occupied:
+                req = s.request
+                if s.phase == "prefill":
+                    busy_cost += req.prompt_len - s.prefill_pos
+                busy_cost += max(req.max_new_tokens - len(req.output), 0)
+        return EngineView(
+            engine_id=self.engine_id,
+            n_slots=eng.ecfg.n_slots,
+            busy=eng.batcher.n_busy,
+            queued=len(self.queue),
+            free_pages=eng.pager.counters()["free_pages"],
+            total_pages=eng.pager.n_phys,
+            role=self.role,
+            accepting=self.accepting,
+            queued_cost=queued_cost,
+            busy_cost=busy_cost,
+        )
+
+    def ready_time(self) -> float:
+        """Virtual time at which pumping this engine can make progress:
+        its own clock while it holds live work, else the earliest queued
+        arrival (never earlier than its clock), else never."""
+        if self.engine.pending_work:
+            return self.engine.virtual_s
+        if self.stalled or not len(self.queue):
+            return float("inf")
+        return max(self.engine.virtual_s, self.queue.next_arrival())
+
+
+@dataclasses.dataclass
+class FleetStats:
+    n_requests: int
+    tokens: int
+    virtual_s: float              # fleet makespan (max engine clock delta)
+    wall_s: float
+    ttft: np.ndarray              # per finished request, fleet-wide
+    tpot: np.ndarray
+    per_engine: List[ServeStats]
+    routed: List[int]             # requests placed per engine
+    prefix: dict                  # aggregate prefix-cache deltas
+    transfers: dict               # TransferLedger counters (roles mode)
+    cancelled: int                # in-flight sweeps + queue drops
+    scale_events: List[tuple]     # (virtual_t, delta, n_accepting)
+    policy: dict                  # policy-internal counters
+
+    def summary(self) -> dict:
+        def pct(a, q):
+            return float(np.percentile(a, q)) if len(a) else 0.0
+        return {
+            "requests": self.n_requests,
+            "tokens": self.tokens,
+            "virtual_s": self.virtual_s,
+            "tok_per_s_virtual": self.tokens / max(self.virtual_s, 1e-12),
+            "ttft_p50": pct(self.ttft, 50),
+            "ttft_p95": pct(self.ttft, 95),
+            "ttft_p99": pct(self.ttft, 99),
+            "tpot_p50": pct(self.tpot, 50),
+            "prefix_hit_rate": self.prefix.get("hit_rate", 0.0),
+            "transfers": self.transfers.get("transfers", 0),
+            "transfer_bytes": self.transfers.get("bytes", 0.0),
+            "cancelled": self.cancelled,
+            "scale_events": len(self.scale_events),
+            "routed": list(self.routed),
+        }
+
+
+class FleetRouter:
+    """Route a request trace across N engines; see module docstring."""
+
+    def __init__(self, engines: Sequence[ServingEngine], fcfg: FleetConfig,
+                 policy: Optional[PlacementPolicy] = None):
+        if len(engines) != fcfg.n_engines:
+            raise ValueError("engine count != fcfg.n_engines")
+        self.fcfg = fcfg
+        page_tokens = engines[0].ecfg.page_tokens
+        self.policy = policy or make_policy(
+            fcfg.policy, page_tokens=page_tokens)
+        self.handles: List[EngineHandle] = []
+        n_start = (fcfg.autoscale.min_engines if fcfg.autoscale
+                   else fcfg.n_engines)
+        for i, eng in enumerate(engines):
+            role = "unified"
+            if fcfg.roles:
+                role = "prefill" if i == 0 else "decode"
+                eng.handoff_role = role == "prefill"
+                if eng.cells.chunk_fn is None and role == "prefill":
+                    raise ValueError(
+                        "prefill role needs chunked prefill cells "
+                        "(EngineConfig.prefill_chunk)"
+                    )
+            self.handles.append(EngineHandle(
+                i, eng, role=role, accepting=(i < n_start)))
+        self.autoscaler = (Autoscaler(fcfg.autoscale)
+                           if fcfg.autoscale else None)
+        self.ledger = TransferLedger()
+        self.scale_events: List[tuple] = []
+        self._pending_handoffs: List[tuple] = []   # (src_handle, record)
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(cls, cfg, ctx, ecfg, fcfg: FleetConfig, *, params=None,
+              mesh=None, rules=None, seed: int = 0,
+              topo=None) -> "FleetRouter":
+        """Compile ONE set of engine cells + one param tree, then stand
+        up `fcfg.n_engines` engines over them (per-engine cache pools)."""
+        first = ServingEngine.build(
+            cfg, ctx, ecfg, params=params, mesh=mesh, rules=rules,
+            seed=seed, topo=topo)
+        engines = [first] + [
+            ServingEngine(cfg, ctx, ecfg, first.params, first.cells,
+                          topo=topo)
+            for _ in range(fcfg.n_engines - 1)
+        ]
+        return cls(engines, fcfg)
+
+    # ----------------------------------------------------------- routing
+    def _eligible_views(self) -> List[EngineView]:
+        views = []
+        for h in self.handles:
+            if not h.accepting:
+                continue
+            if self.fcfg.roles and h.role != "prefill":
+                continue
+            views.append(h.view())
+        return views
+
+    def _route(self, req: Request) -> None:
+        views = self._eligible_views()
+        eng = self.policy.place(views, req.tokens)
+        self.policy.record(eng, req.tokens)
+        h = self.handles[eng]
+        h.queue.push(req)
+        h.routed.append(req)
+        h.stalled = False
+
+    def _autoscale_tick(self, t: float) -> None:
+        if self.autoscaler is None:
+            return
+        acc = [h for h in self.handles if h.accepting]
+        slots = sum(h.engine.ecfg.n_slots for h in acc)
+        load = sum(len(h.queue) + h.engine.batcher.n_busy for h in acc)
+        delta = self.autoscaler.observe(load / max(slots, 1), len(acc))
+        if delta > 0:
+            parked = [h for h in self.handles if not h.accepting]
+            if parked:
+                parked[0].accepting = True
+                self.scale_events.append(
+                    (t, +1, sum(h.accepting for h in self.handles)))
+        elif delta < 0:
+            # drain the highest-id accepting engine: stop placements,
+            # let its queued/busy work finish naturally
+            acc[-1].accepting = False
+            self.scale_events.append(
+                (t, -1, sum(h.accepting for h in self.handles)))
+
+    # ---------------------------------------------------------- handoffs
+    def _drain_handoffs(self) -> None:
+        for h in self.handles:
+            while h.engine.handoff_outbox:
+                self._pending_handoffs.append(
+                    (h, h.engine.handoff_outbox.pop(0)))
+        if not self._pending_handoffs:
+            return
+        still = []
+        for src_h, rec in self._pending_handoffs:
+            dsts = [d for d in self.handles
+                    if d.role == "decode" and can_accept_handoff(
+                        d.engine, rec)]
+            if not dsts:
+                still.append((src_h, rec))
+                continue
+            dst = min(dsts, key=lambda d: (d.engine.batcher.n_busy,
+                                           d.engine_id))
+            execute_handoff(rec, src_h.engine, dst.engine,
+                            src_id=src_h.engine_id, dst_id=dst.engine_id,
+                            ledger=self.ledger)
+            src_h.stalled = False     # a parked slot freed
+            dst.stalled = False       # new live work landed
+        self._pending_handoffs = still
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request],
+            max_iters: int = 2_000_000) -> FleetStats:
+        pending = sorted(requests, key=lambda r: (r.arrival, r.request_id))
+        i = 0
+        caps = [h.engine.begin_capture() for h in self.handles]
+        wall0 = time.perf_counter()
+        clocks0 = [h.engine.virtual_s for h in self.handles]
+        iters = 0
+        while True:
+            iters += 1
+            if iters > max_iters:
+                raise RuntimeError("fleet router exceeded max_iters — "
+                                   "stuck trace?")
+            self._drain_handoffs()
+            t_engines = min((h.ready_time() for h in self.handles),
+                            default=float("inf"))
+            t_arrival = pending[i].arrival if i < len(pending) \
+                else float("inf")
+            now = min(t_engines, t_arrival)
+            if not np.isfinite(now):
+                if self._pending_handoffs:
+                    raise RuntimeError(
+                        "handoffs pending but no decode engine can ever "
+                        "accept them (capacity too small for one prompt)"
+                    )
+                break
+            routed_any = False
+            while i < len(pending) and pending[i].arrival <= now:
+                self._route(pending[i])
+                i += 1
+                routed_any = True
+            if routed_any:
+                self._autoscale_tick(now)
+                continue      # recompute ready times with the new queues
+            ready = [h for h in self.handles
+                     if h.ready_time() <= now]
+            if not ready:
+                continue      # a handoff drained; re-evaluate
+            h = min(ready, key=lambda x: (x.ready_time(), x.engine_id))
+            h.engine.advance_to(now)
+            act = h.engine.pump(h.queue)
+            if act == "idle" and len(h.queue) \
+                    and h.queue.next_arrival() <= h.engine.virtual_s:
+                # arrived work it cannot start (slots full of parked
+                # handoffs / admission floor): wait for an external event
+                h.stalled = True
+        return self._stats(caps, clocks0, wall0)
+
+    # ------------------------------------------------------------- stats
+    def _stats(self, caps, clocks0, wall0) -> FleetStats:
+        per = [h.engine.capture_stats(cap, h.routed)
+               for h, cap in zip(self.handles, caps)]
+        done = [r for h in self.handles for r in h.routed if r.output]
+        ttft = np.array([r.token_times[0] - r.arrival for r in done])
+        tpot = np.concatenate(
+            [np.diff(r.token_times) for r in done
+             if len(r.token_times) > 1] or [np.zeros(0)]
+        )
+        prefix: Dict[str, float] = {}
+        for s in per:
+            for k, v in s.prefix.items():
+                if k not in ("hit_rate", "cached_pages"):
+                    prefix[k] = prefix.get(k, 0) + v
+        if prefix:
+            n = prefix.get("hits", 0) + prefix.get("misses", 0)
+            prefix["hit_rate"] = prefix.get("hits", 0) / n if n else 0.0
+        cancelled = (
+            sum(h.engine.cancelled for h in self.handles)
+            + sum(h.queue.drop_cancelled for h in self.handles)
+        )
+        makespan = max(
+            (h.engine.virtual_s - c0
+             for h, c0 in zip(self.handles, clocks0)),
+            default=0.0,
+        )
+        policy_counters = {}
+        for key in ("steered", "cold"):
+            if hasattr(self.policy, key):
+                policy_counters[key] = getattr(self.policy, key)
+        return FleetStats(
+            n_requests=len(done),
+            tokens=sum(len(r.output) for r in done),
+            virtual_s=makespan,
+            wall_s=time.perf_counter() - wall0,
+            ttft=ttft,
+            tpot=tpot,
+            per_engine=per,
+            routed=[len(h.routed) for h in self.handles],
+            prefix=prefix,
+            transfers=self.ledger.counters(),
+            cancelled=cancelled,
+            scale_events=self.scale_events,
+            policy=policy_counters,
+        )

@@ -3,11 +3,21 @@
 A `Request` is one user call: a prompt (already tokenized; its length must
 be one of the engine's prefill buckets — serving systems quantize prompt
 lengths so the fixed-shape prefill cells never recompile) plus a decode
-budget. `RequestQueue` is a FIFO ordered by arrival time: the engine only
-sees requests whose arrival is <= its clock, so open-loop traces replay
+budget, a PRIORITY CLASS (0 = most urgent; ties broken by arrival, so a
+single-class trace is plain FIFO — bit-identical to the pre-priority
+queue) and an optional tenant tag. A request can be CANCELLED: either
+eagerly (`cancel()`) or at a virtual-time deadline (`cancel_at`, which
+makes cancellation deterministic in replayed traces). The queue drops
+cancelled requests at pop time; the engine sweeps cancelled in-flight
+requests out of their slots, releasing their KV pages back through the
+pager (`ServingEngine.sweep_cancelled`).
+
+`RequestQueue` orders by (priority, arrival): `pop(now)` only releases
+arrived requests, and among the arrived set the lowest priority class
+goes first, FIFO within a class — so open-loop traces replay
 deterministically.
 
-Three scenario generators mirror the benchmark matrix of the brief:
+Scenario generators mirror the benchmark matrix of the brief:
 
 * `chat_stream`      — short prompts, short generations, steady Poisson
                        arrivals (the latency-sensitive interactive lane);
@@ -18,7 +28,11 @@ Three scenario generators mirror the benchmark matrix of the brief:
                        by idle gaps (slot churn + admission stress);
 * `shared_prefix_stream` — chat traffic behind fixed system prompts
                        (the prefix-cache dedup lane: every request opens
-                       with one of `n_systems` shared prefixes).
+                       with one of `n_systems` shared prefixes);
+* `multi_tenant_stream` — an interactive tenant (short prompts, priority
+                       0, steady Poisson) interleaved with a batch tenant
+                       (long prompts, priority 1, bursty) — the fleet
+                       router's priority-class stress lane.
 
 All generators are deterministic in `seed`.
 """
@@ -27,6 +41,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import heapq
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -40,6 +55,11 @@ class Request:
     tokens: np.ndarray            # (prompt_len,) int32 prompt
     max_new_tokens: int
     arrival: float = 0.0          # seconds since trace start
+    priority: int = 0             # class: 0 most urgent; FIFO within class
+    tenant: str = "default"       # multi-tenant stream tag (accounting)
+    cancel_at: Optional[float] = None   # virtual-time cancellation
+    # deadline — deterministic in replayed traces (None = never)
+    cancelled: bool = False       # eager cancellation flag (router.cancel)
     # --- filled in by the engine ---
     admitted: float = float("nan")
     finished: float = float("nan")
@@ -54,13 +74,31 @@ class Request:
     def done(self) -> bool:
         return len(self.output) >= self.max_new_tokens
 
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def is_cancelled(self, now: float) -> bool:
+        return self.cancelled or (
+            self.cancel_at is not None and now >= self.cancel_at
+        )
+
 
 class RequestQueue:
-    """FIFO over arrival time. `pop(now)` only releases arrived requests."""
+    """Priority queue over (priority class, arrival). `pop(now)` only
+    releases arrived requests; among the arrived set the lowest priority
+    class pops first, FIFO (arrival-stable) within a class — with a
+    single class this is exactly the old FIFO. Cancelled requests are
+    dropped at peek/pop (never handed to the engine); `drop_cancelled`
+    counts them."""
 
     def __init__(self, requests: Sequence[Request] = ()):
+        # arrival-sorted feed list (stable for ties) + a ready-heap of
+        # arrived requests keyed (priority, absorb order)
         self._items: List[Request] = sorted(requests, key=lambda r: r.arrival)
         self._head = 0
+        self._ready: List[tuple] = []
+        self._seq = 0
+        self.drop_cancelled = 0
 
     def push(self, req: Request) -> None:
         # insert into the *unconsumed* suffix only — re-sorting the whole
@@ -71,23 +109,40 @@ class RequestQueue:
         self._items.insert(self._head + pos, req)
 
     def __len__(self) -> int:
-        return len(self._items) - self._head
+        return len(self._items) - self._head + len(self._ready)
+
+    def _absorb(self, now: float) -> None:
+        """Move arrived feed items into the ready heap (dropping the
+        already-cancelled) and purge cancelled heap entries."""
+        while (self._head < len(self._items)
+               and self._items[self._head].arrival <= now):
+            r = self._items[self._head]
+            self._head += 1
+            if r.is_cancelled(now):
+                self.drop_cancelled += 1
+                continue
+            heapq.heappush(self._ready, (r.priority, self._seq, r))
+            self._seq += 1
+        while self._ready and self._ready[0][2].is_cancelled(now):
+            heapq.heappop(self._ready)
+            self.drop_cancelled += 1
 
     def peek(self, now: float) -> Optional[Request]:
-        if self._head < len(self._items):
-            r = self._items[self._head]
-            if r.arrival <= now:
-                return r
-        return None
+        self._absorb(now)
+        return self._ready[0][2] if self._ready else None
 
     def pop(self, now: float) -> Optional[Request]:
         r = self.peek(now)
         if r is not None:
-            self._head += 1
+            heapq.heappop(self._ready)
         return r
 
     def next_arrival(self) -> float:
-        """Arrival time of the next queued request (inf when drained)."""
+        """Earliest event time among queued requests: ready requests have
+        already arrived (their arrival), otherwise the feed head's arrival
+        (inf when drained)."""
+        if self._ready:
+            return min(item[2].arrival for item in self._ready)
         if self._head < len(self._items):
             return self._items[self._head].arrival
         return float("inf")
@@ -194,11 +249,59 @@ def shared_prefix_stream(n: int, vocab: int, *, seed: int = 0,
     return out
 
 
+def multi_tenant_stream(n: int, vocab: int, *, seed: int = 0,
+                        interactive_buckets: Sequence[int] = (16, 32),
+                        batch_bucket: int = 64,
+                        batch_fraction: float = 0.4,
+                        gen_interactive: tuple = (8, 16),
+                        gen_batch: tuple = (16, 32),
+                        arrival_rate: float = 2.0,
+                        batch_burst: int = 4,
+                        batch_gap: float = 6.0) -> List[Request]:
+    """Two tenants sharing one fleet: an `interactive` tenant (short
+    prompts, priority 0, steady Poisson arrivals) and a `batch` tenant
+    (long prompts, priority 1, arriving in bursts) — the priority-class
+    lane: under contention the queue must serve interactive requests
+    ahead of co-arrived batch work. Deterministic in `seed`."""
+    if not 0.0 <= batch_fraction <= 1.0:
+        raise ValueError("batch_fraction must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    n_batch = int(round(n * batch_fraction))
+    n_inter = n - n_batch
+    inter = _mk_requests(
+        rng, vocab,
+        rng.choice(list(interactive_buckets), size=n_inter),
+        rng.integers(gen_interactive[0], gen_interactive[1] + 1,
+                     size=n_inter),
+        np.cumsum(rng.exponential(1.0 / arrival_rate, size=n_inter)),
+    )
+    for r in inter:
+        r.tenant = "interactive"
+        r.priority = 0
+    arrivals, t = [], 0.0
+    while len(arrivals) < n_batch:
+        k = min(batch_burst, n_batch - len(arrivals))
+        arrivals.extend(t + rng.uniform(0, 0.01 * batch_gap, size=k))
+        t += float(rng.exponential(batch_gap))
+    batch = _mk_requests(
+        rng, vocab,
+        np.full(n_batch, batch_bucket),
+        rng.integers(gen_batch[0], gen_batch[1] + 1, size=n_batch),
+        np.sort(np.asarray(arrivals)),
+    )
+    for i, r in enumerate(batch):
+        r.request_id = n_inter + i      # unique across tenants
+        r.tenant = "batch"
+        r.priority = 1
+    return sorted(inter + batch, key=lambda r: (r.arrival, r.request_id))
+
+
 SCENARIOS = {
     "chat": chat_stream,
     "long_context": long_context_stream,
     "bursty": bursty_stream,
     "shared_prefix": shared_prefix_stream,
+    "multi_tenant": multi_tenant_stream,
 }
 
 

@@ -1,0 +1,554 @@
+"""Fleet router layer: priority/cancellation queue semantics, placement
+policies over hand-built EngineViews (pure, no engines), autoscaler
+hysteresis, the bench-regression gate, and small end-to-end fleets that
+pin down token parity with the single-engine path plus clean pager drain
+after cancellations. All deterministic seeds."""
+
+import dataclasses
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.common.parallel import ParallelCtx
+from repro.serving import EngineConfig, Request, RequestQueue, ServingEngine
+from repro.serving.fleet import (
+    AutoscaleConfig,
+    Autoscaler,
+    EngineView,
+    FleetConfig,
+    FleetRouter,
+    KVLoadAwarePlacement,
+    PrefixAwarePlacement,
+    RoundRobinPlacement,
+    kv_load_score,
+    make_policy,
+)
+from repro.serving.queue import multi_tenant_stream, shared_prefix_stream
+from repro.sched.workload import fleet_request_stream
+
+CTX = ParallelCtx(remat="none")
+
+
+def _cfg(arch="smollm_360m"):
+    return dataclasses.replace(configs.reduced(arch), dtype="float32")
+
+
+def _req(i, *, arrival=0.0, priority=0, prompt=4, gen=2, cancel_at=None,
+         vocab=64, seed=None):
+    rng = np.random.default_rng(i if seed is None else seed)
+    return Request(
+        request_id=i, tokens=rng.integers(0, vocab, prompt).astype(np.int32),
+        max_new_tokens=gen, arrival=arrival, priority=priority,
+        cancel_at=cancel_at,
+    )
+
+
+# ----------------------------------------------------------- queue: priority
+def test_queue_priority_classes_order_within_arrived():
+    """Among arrived requests the lowest priority class pops first, FIFO
+    within a class; a later-arriving urgent request does NOT preempt the
+    not-yet-arrived future."""
+    reqs = [
+        _req(0, arrival=0.0, priority=1),
+        _req(1, arrival=0.1, priority=0),
+        _req(2, arrival=0.2, priority=1),
+        _req(3, arrival=5.0, priority=0),
+    ]
+    q = RequestQueue(reqs)
+    order = [q.pop(1.0).request_id for _ in range(3)]
+    assert order == [1, 0, 2]       # priority 0 first, then FIFO in class 1
+    assert q.pop(1.0) is None       # request 3 hasn't arrived
+    assert q.pop(5.0).request_id == 3
+
+
+def test_queue_single_class_is_plain_fifo():
+    """One priority class must replay the pre-priority FIFO exactly."""
+    arrivals = [0.3, 0.1, 0.7, 0.2, 0.5]
+    reqs = [_req(i, arrival=a) for i, a in enumerate(arrivals)]
+    q = RequestQueue(reqs)
+    got = []
+    while len(q):
+        got.append(q.pop(10.0).arrival)
+    assert got == sorted(arrivals)
+
+
+def test_queue_drops_cancelled_and_counts():
+    """Cancelled requests are never handed out: eager cancellation drops
+    at absorb, a `cancel_at` deadline drops once `now` passes it."""
+    eager = _req(0, arrival=0.0)
+    eager.cancel()
+    deadline = _req(1, arrival=0.0, cancel_at=2.0)
+    live = _req(2, arrival=0.0)
+    q = RequestQueue([eager, deadline, live])
+    assert q.pop(1.0).request_id == 1      # deadline not reached yet
+    assert q.drop_cancelled == 1           # the eager one
+    q2 = RequestQueue([_req(3, arrival=0.0, cancel_at=2.0), live])
+    got = q2.pop(3.0)                      # now past the deadline
+    assert got.request_id == 2
+    assert q2.drop_cancelled == 1
+    assert q.pop(1.0).request_id == 2
+
+
+# ----------------------------------------------------- placement: round robin
+def _view(eid, *, busy=0, queued=0, free=10, total=10, role="unified",
+          accepting=True, queued_cost=None, busy_cost=None, slots=2):
+    return EngineView(
+        engine_id=eid, n_slots=slots, busy=busy, queued=queued,
+        free_pages=free, total_pages=total, role=role, accepting=accepting,
+        queued_cost=queued_cost, busy_cost=busy_cost,
+    )
+
+
+def test_round_robin_cycles_and_is_deterministic():
+    views = [_view(0), _view(1), _view(2)]
+    toks = [1, 2, 3, 4]
+    p = RoundRobinPlacement()
+    got = []
+    for _ in range(6):
+        e = p.place(views, toks)
+        p.record(e, toks)
+        got.append(e)
+    assert got == [0, 1, 2, 0, 1, 2]
+    # a second policy instance replays the identical sequence
+    p2 = RoundRobinPlacement()
+    got2 = []
+    for _ in range(6):
+        e = p2.place(views, toks)
+        p2.record(e, toks)
+        got2.append(e)
+    assert got2 == got
+
+
+def test_round_robin_empty_views_raises():
+    with pytest.raises(ValueError):
+        RoundRobinPlacement().place([], [1])
+
+
+# ------------------------------------------------------ placement: kv-aware
+def test_kv_aware_picks_lowest_outstanding_token_cost():
+    """Token-cost scoring: an engine with one queued 96-token batch job
+    is MORE loaded than one with two queued 10-token chats, even though
+    its request count is lower."""
+    heavy = _view(0, queued=1, queued_cost=96.0, busy_cost=0.0)
+    light = _view(1, queued=2, queued_cost=20.0, busy_cost=0.0)
+    p = KVLoadAwarePlacement()
+    assert p.place([heavy, light], [1, 2]) == 1
+    # count-based fallback (no costs supplied) would pick the other way
+    heavy_n = _view(0, queued=1)
+    light_n = _view(1, queued=2)
+    assert p.place([heavy_n, light_n], [1, 2]) == 0
+
+
+def test_kv_aware_pool_pressure_breaks_load_ties():
+    """Equal outstanding load: the engine with more free pool pages wins
+    (free_frac enters the score at half weight)."""
+    tight = _view(0, queued_cost=0.0, busy_cost=0.0, free=2, total=10)
+    roomy = _view(1, queued_cost=0.0, busy_cost=0.0, free=9, total=10)
+    assert KVLoadAwarePlacement().place([tight, roomy], [1]) == 1
+    assert kv_load_score(roomy) < kv_load_score(tight)
+
+
+def test_kv_aware_deterministic_tie_break_on_engine_id():
+    a, b = _view(0), _view(1)
+    assert kv_load_score(a) == kv_load_score(b)
+    assert KVLoadAwarePlacement().place([b, a], [1]) == 0
+
+
+# --------------------------------------------------- placement: prefix-aware
+def test_prefix_aware_steers_recorded_block_prefixes():
+    p = PrefixAwarePlacement(page_tokens=4)
+    sys_prompt = list(range(8))                 # two full pages
+    p.record(1, sys_prompt + [20, 21, 22, 23])
+    views = [_view(0), _view(1)]
+    # same two-page system prefix, different tail -> steered to engine 1
+    assert p.place(views, sys_prompt + [30, 31, 32, 33]) == 1
+    assert p.steered == 1 and p.cold == 0
+    # unrelated prompt -> cold fallback (kv-aware, ties to engine 0)
+    assert p.place(views, [99] * 8) == 0
+    assert p.cold == 1
+
+
+def test_prefix_aware_longest_prefix_wins():
+    p = PrefixAwarePlacement(page_tokens=2)
+    # record order matters: the later record owns every path it inserts
+    # (latest writer wins), so register the deep path first and let the
+    # shallow one reclaim the one-block entry
+    p.record(1, [1, 2, 3, 4])                   # blocks (1,2),(3,4) -> 1
+    p.record(0, [1, 2])                         # one-block path -> engine 0
+    views = [_view(0), _view(1)]
+    assert p.place(views, [1, 2, 3, 4, 9, 9]) == 1    # deepest match
+    assert p.place(views, [1, 2, 8, 8]) == 0          # only block 1 matches
+    owner, matched = p.lookup([1, 2, 3, 4])
+    assert (owner, matched) == (1, 2)
+
+
+def test_prefix_aware_ineligible_owner_falls_back():
+    """The indexed owner is draining (not in the eligible views): the
+    request must fall back to kv-aware placement, not crash or steer to
+    a non-eligible engine."""
+    p = PrefixAwarePlacement(page_tokens=2)
+    p.record(1, [1, 2, 3, 4])
+    only0 = [_view(0)]
+    assert p.place(only0, [1, 2, 3, 4]) == 0
+    assert p.cold == 1
+
+
+def test_prefix_aware_sub_page_prompt_is_cold():
+    p = PrefixAwarePlacement(page_tokens=8)
+    p.record(1, [1, 2, 3])                      # < one page: nothing indexed
+    assert p.lookup([1, 2, 3]) == (None, 0)
+
+
+def test_make_policy_names_and_validation():
+    assert make_policy("round_robin").name == "round_robin"
+    assert make_policy("kv_aware").name == "kv_aware"
+    pa = make_policy("prefix_aware", page_tokens=4)
+    assert pa.name == "prefix_aware" and pa.page_tokens == 4
+    with pytest.raises(ValueError):
+        make_policy("least_recently_invented")
+    with pytest.raises(ValueError):
+        PrefixAwarePlacement(page_tokens=0)
+
+
+# ------------------------------------------------------------- autoscaler
+def test_autoscaler_up_needs_patience_then_cooldown():
+    cfg = AutoscaleConfig(min_engines=1, max_engines=3, up_patience=2,
+                          down_patience=2, cooldown=2)
+    a = Autoscaler(cfg)
+    assert a.observe(2.0, 1) == 0           # first high observation
+    assert a.observe(2.0, 1) == +1          # patience met
+    assert a.observe(2.0, 2) == 0           # cooldown
+    assert a.observe(2.0, 2) == 0           # cooldown
+    # streak kept building through cooldown: next observation can fire
+    assert a.observe(2.0, 2) == +1
+    assert a.ups == 2
+
+
+def test_autoscaler_down_patience_and_min_clamp():
+    cfg = AutoscaleConfig(min_engines=1, max_engines=3, up_patience=1,
+                          down_patience=3, cooldown=0)
+    a = Autoscaler(cfg)
+    assert [a.observe(0.0, 2) for _ in range(2)] == [0, 0]
+    assert a.observe(0.0, 2) == -1          # third consecutive low
+    # at the floor: keeps recommending 0 no matter how idle
+    for _ in range(6):
+        assert a.observe(0.0, 1) == 0
+    assert a.downs == 1
+
+
+def test_autoscaler_midband_resets_streaks():
+    cfg = AutoscaleConfig(min_engines=1, max_engines=2, up_patience=2,
+                          down_patience=2, cooldown=0)
+    a = Autoscaler(cfg)
+    assert a.observe(2.0, 1) == 0
+    assert a.observe(0.8, 1) == 0           # mid-band: streak resets
+    assert a.observe(2.0, 1) == 0           # must re-earn the patience
+    assert a.observe(2.0, 1) == +1
+
+
+def test_autoscaler_max_clamp():
+    cfg = AutoscaleConfig(min_engines=1, max_engines=2, up_patience=1,
+                          down_patience=1, cooldown=0)
+    a = Autoscaler(cfg)
+    assert a.observe(5.0, 2) == 0           # already at the ceiling
+
+
+def test_autoscale_config_validation():
+    with pytest.raises(ValueError):
+        AutoscaleConfig(min_engines=3, max_engines=2)
+    with pytest.raises(ValueError):
+        AutoscaleConfig(high_watermark=0.2, low_watermark=0.5)
+
+
+# ----------------------------------------------------- fleet config contract
+def test_fleet_config_validation():
+    with pytest.raises(ValueError):
+        FleetConfig(n_engines=0)
+    with pytest.raises(ValueError):
+        FleetConfig(n_engines=1, roles=True)
+    with pytest.raises(ValueError):
+        FleetConfig(n_engines=2, roles=True,
+                    autoscale=AutoscaleConfig(max_engines=2))
+    with pytest.raises(ValueError):
+        FleetConfig(n_engines=2, autoscale=AutoscaleConfig(max_engines=4))
+
+
+# ------------------------------------------------------ bench gate (script)
+def _load_check_bench():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "scripts", "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write_bench(d, fname, rows):
+    with open(os.path.join(d, fname), "w") as f:
+        json.dump({"tag": "serve", "module": "x", "rows": rows}, f)
+
+
+def test_check_bench_catches_pool_bytes_regression(tmp_path):
+    """The gate's reason to exist: a 2x pool_bytes_per_token regression
+    must fail, an identical re-run must pass."""
+    cb = _load_check_bench()
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    rules = [("BENCH_serve.json", "serve_chat", "pool_bytes_per_token",
+              "rel_max", 1.10)]
+    _write_bench(base, "BENCH_serve.json",
+                 [{"tag": "serve_chat", "pool_bytes_per_token": 320.0}])
+    _write_bench(fresh, "BENCH_serve.json",
+                 [{"tag": "serve_chat", "pool_bytes_per_token": 640.0}])
+    fails = cb.check(str(fresh), str(base), rules=rules)
+    assert len(fails) == 1 and "pool_bytes_per_token" in fails[0]
+    _write_bench(fresh, "BENCH_serve.json",
+                 [{"tag": "serve_chat", "pool_bytes_per_token": 320.0}])
+    assert cb.check(str(fresh), str(base), rules=rules) == []
+
+
+def test_check_bench_rule_types(tmp_path):
+    cb = _load_check_bench()
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    _write_bench(base, "BENCH_x.json",
+                 [{"tag": "t", "tput": 100.0, "ratio": 0.5}])
+    _write_bench(fresh, "BENCH_x.json",
+                 [{"tag": "t", "tput": 80.0, "ratio": 1.2}])
+    # rel_min: 80 < 100*0.9 fails; abs_max: 1.2 > 1.0 fails
+    fails = cb.check(str(fresh), str(base), rules=[
+        ("BENCH_x.json", "t", "tput", "rel_min", 0.90),
+        ("BENCH_x.json", "t", "ratio", "abs_max", 1.00),
+    ])
+    assert len(fails) == 2
+
+
+def test_check_bench_missing_metric_is_an_error(tmp_path):
+    """A silently renamed/dropped metric must fail the gate, while a
+    wholly absent file (new bench, no baseline yet) is only skipped."""
+    cb = _load_check_bench()
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    _write_bench(base, "BENCH_x.json", [{"tag": "t", "old_name": 1.0}])
+    _write_bench(fresh, "BENCH_x.json", [{"tag": "t", "new_name": 1.0}])
+    fails = cb.check(str(fresh), str(base), rules=[
+        ("BENCH_x.json", "t", "old_name", "rel_max", 1.1),
+        ("BENCH_nope.json", "t", "m", "rel_max", 1.1),   # missing file
+    ])
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_check_bench_default_rules_reference_real_artifacts():
+    """Every default rule must point at a committed baseline file, and
+    the (tag, metric) pair must exist in it — a rule that can never
+    fire is a hole in the gate."""
+    cb = _load_check_bench()
+    base_dir = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "benchmarks", "baselines")
+    for fname, tag, metric, rule, tol in cb.RULES:
+        path = os.path.join(base_dir, fname)
+        assert os.path.exists(path), f"no committed baseline {fname}"
+        rows = cb.load_rows(path)
+        assert tag in rows, f"{fname} has no row tagged {tag!r}"
+        if rule != "abs_max":
+            assert metric in rows[tag], f"{fname}:{tag} lacks {metric!r}"
+
+
+# ----------------------------------------------------------- fleet e2e (fast)
+def _small_ecfg(**kw):
+    base = dict(n_slots=2, max_seq=14, prefill_buckets=(8,), page_tokens=4,
+                hot_window=8, local_budget_frac=0.5, admission="greedy")
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _clone_engines(first, cfg, ecfg, n):
+    """Fresh engines over the first engine's compiled cells + params —
+    per-fleet pools without per-fleet compilation."""
+    return [ServingEngine(cfg, CTX, ecfg, first.params, first.cells)
+            for _ in range(n)]
+
+
+def _stream(cfg, n, gen=4, seed=11):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(request_id=i,
+                tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=gen, arrival=0.05 * i)
+        for i in range(n)
+    ]
+
+
+def test_fleet_round_robin_matches_single_engine():
+    """Placement must be invisible to greedy tokens: a 2-engine
+    round-robin fleet replays the single engine's output streams
+    bit-for-bit, with both engines actually routed work."""
+    cfg = _cfg()
+    ecfg = _small_ecfg()
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    solo = _stream(cfg, 6)
+    eng.run(solo)
+
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="round_robin"),
+    )
+    fleet = _stream(cfg, 6)
+    stats = router.run(fleet)
+    assert [r.output for r in fleet] == [r.output for r in solo]
+    assert stats.n_requests == 6
+    assert min(stats.routed) > 0            # actually spread over engines
+    assert stats.tokens == sum(len(r.output) for r in solo)
+
+
+def test_fleet_cancellation_releases_pages():
+    """Cancelled requests — both queued-then-dropped and swept while
+    decoding — must hand every KV page back: each engine's pool drains
+    to fully free with zero refcounts."""
+    cfg = _cfg()
+    ecfg = _small_ecfg()
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    reqs = _stream(cfg, 6, gen=6)
+    reqs[1].cancel()                        # dropped at the queue
+    reqs[3].cancel_at = reqs[3].arrival + 1e-5   # swept mid-flight
+    reqs[4].cancel_at = reqs[4].arrival + 1e-5
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="kv_aware"),
+    )
+    stats = router.run(reqs)
+    assert stats.cancelled == 3
+    assert not reqs[1].output               # never served
+    for h in router.handles:
+        pager = h.engine.pager
+        assert pager.counters()["free_pages"] == pager.n_phys
+        assert (pager.ref == 0).all()
+    # the untouched survivors finished normally (swept requests may keep
+    # a partial output — that's fine, their pages are what we checked)
+    survivors = [reqs[0], reqs[2], reqs[5]]
+    assert all(len(r.output) == r.max_new_tokens for r in survivors)
+
+
+def test_fleet_priority_orders_coarrived_classes():
+    """Two requests arriving together on one engine: the priority-0
+    request must be admitted no later than the priority-1 one."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(n_slots=1)           # force serialization
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    rng = np.random.default_rng(0)
+    lo = Request(request_id=0,
+                 tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=2, arrival=0.0, priority=1)
+    hi = Request(request_id=1,
+                 tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=2, arrival=0.0, priority=0)
+    router = FleetRouter([ServingEngine(cfg, CTX, ecfg, eng.params,
+                                        eng.cells)],
+                         FleetConfig(n_engines=1))
+    router.run([lo, hi])
+    assert hi.admitted <= lo.admitted
+    assert hi.output and lo.output
+
+
+def test_fleet_streams_are_deterministic():
+    a = fleet_request_stream(12, 64, seed=9, cancel_fraction=0.25)
+    b = fleet_request_stream(12, 64, seed=9, cancel_fraction=0.25)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert [r.priority for r in a] == [r.priority for r in b]
+    assert [r.cancel_at for r in a] == [r.cancel_at for r in b]
+    assert all((x.tokens == y.tokens).all() for x, y in zip(a, b))
+    assert {r.tenant for r in a} == {"interactive", "batch"}
+    assert sum(r.cancel_at is not None for r in a) > 0
+    mt = multi_tenant_stream(10, 64, seed=2)
+    assert len({r.request_id for r in mt}) == 10
+
+
+# ------------------------------------------------------------ e2e (slow lane)
+@pytest.mark.slow
+def test_fleet_prefix_aware_beats_round_robin_hit_rate():
+    """The router-side radix index must lift the aggregate prefix hit
+    rate over round-robin on a shared-prefix stream, at token parity."""
+    cfg = _cfg()
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=36, prefill_buckets=(32,), page_tokens=4,
+        hot_window=16, local_budget_frac=0.5, admission="greedy",
+        prefix_cache=True,
+    )
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    hits, outs = {}, {}
+    for policy in ("round_robin", "prefix_aware"):
+        router = FleetRouter(
+            _clone_engines(eng, cfg, ecfg, 2),
+            FleetConfig(n_engines=2, policy=policy),
+        )
+        reqs = shared_prefix_stream(
+            12, cfg.vocab_size, seed=3, system_tokens=24,
+            prompt_buckets=(32,), gen_range=(4, 4), arrival_rate=4e4,
+            n_systems=2,
+        )
+        stats = router.run(reqs)
+        hits[policy] = stats.prefix["hit_rate"]
+        outs[policy] = [r.output for r in reqs]
+    assert outs["round_robin"] == outs["prefix_aware"]
+    assert hits["prefix_aware"] > hits["round_robin"]
+
+
+@pytest.mark.slow
+def test_fleet_roles_handoff_token_parity():
+    """Disaggregated prefill/decode: every request prefills on engine 0,
+    transfers its pages, decodes on engine 1 — and the tokens match the
+    unified single engine exactly."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(max_seq=16, prefill_chunk=4)
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    solo = _stream(cfg, 4, gen=4)
+    eng.run(solo)
+
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="round_robin", roles=True),
+    )
+    fleet = _stream(cfg, 4, gen=4)
+    stats = router.run(fleet)
+    assert [r.output for r in fleet] == [r.output for r in solo]
+    assert stats.transfers["transfers"] == 4
+    assert stats.transfers["pages"] > 0
+    for h in router.handles:
+        assert h.engine.pager.counters()["free_pages"] \
+            == h.engine.pager.n_phys
+
+
+@pytest.mark.slow
+def test_fleet_autoscale_scales_up_under_burst():
+    """A burst deeper than one engine's slots must activate a parked
+    engine (scale event), and the drained fleet still serves everything."""
+    cfg = _cfg()
+    ecfg = _small_ecfg()
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    acfg = AutoscaleConfig(min_engines=1, max_engines=2, high_watermark=1.0,
+                           low_watermark=0.1, up_patience=1, down_patience=50,
+                           cooldown=0)
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="kv_aware", autoscale=acfg),
+    )
+    reqs = _stream(cfg, 8, gen=3)
+    for i, r in enumerate(reqs):
+        # stagger at decode-step scale: the queue must build up over
+        # several routing epochs (a single co-arrival burst would be
+        # fully routed BEFORE the scale event can matter)
+        r.arrival = 1e-5 * i
+    stats = router.run(reqs)
+    assert stats.n_requests == 8
+    assert any(d == +1 for _, d, _n in stats.scale_events)
+    assert stats.routed[1] > 0              # the activated engine served
