@@ -351,7 +351,34 @@ def run_int8(cfg):
     return rows
 
 
+def run_substrate(cfg):
+    """Physical-substrate traffic lane: a spilling long-context trace
+    whose pool placement changes are MEASURED off the TierSubstrate
+    ledger (emulated mode on CPU CI; identical accounting shapes to the
+    pinned_host physical path — see repro.serving.substrate)."""
+    from benchmarks.bench_tier_ratios import substrate_transfer_row
+
+    n = 4 if SMOKE else 8
+    ecfg = EngineConfig(
+        n_slots=4, max_seq=192, prefill_buckets=(128,), page_tokens=16,
+        hot_window=32, local_budget_frac=0.4, pager_policy="hotness",
+        admission="greedy",
+    )
+    engine = _engine(ecfg, cfg)
+    reqs = long_context_stream(
+        n, cfg.vocab_size, seed=2, prompt_bucket=128,
+        gen_range=(16, 48), arrival_rate=1e9,
+    )
+    stats = engine.run(reqs)
+    row = substrate_transfer_row(engine, stats)
+    assert row["placement_gap"] == 0.0, (
+        "phys_tiers() pool bytes must equal the ledger's measured "
+        "placement bytes after every drain")
+    return [row]
+
+
 def run():
     cfg = _cfg()
     return (run_chat(cfg) + run_long_context(cfg) + run_bursty(cfg)
-            + run_chunked_prefill(cfg) + run_int8(cfg))
+            + run_chunked_prefill(cfg) + run_int8(cfg)
+            + run_substrate(cfg))

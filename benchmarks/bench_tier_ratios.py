@@ -1,11 +1,59 @@
 """Paper Fig 9: remote (pool) access ratio vs the R_cap / R_bw reference
-lines at 25 / 50 / 75% pool capacity, per arch, train + decode phases."""
+lines at 25 / 50 / 75% pool capacity, per arch, train + decode phases.
+
+Also home of :func:`substrate_transfer_row` — the physical-substrate
+analogue of the Fig-9 byte accounting: where `analyze()` derives pool
+traffic from the closed-form model, the substrate row reports bytes
+MEASURED off the `TierSubstrate` transfer ledger of a live serving run
+(`bench_serving` runs the engine and emits the row into
+BENCH_serve.json, where the regression gate picks it up)."""
 
 from __future__ import annotations
 
 from repro import configs
 from repro.core.quantify import analyze
 from benchmarks.common import emit, timed
+
+
+def substrate_transfer_row(engine, stats, tag="serve_substrate"):
+    """BENCH row for one serving run's physical-substrate traffic.
+
+    `transfer_bytes` sums the measured page_out/page_in/handoff stream
+    bytes (drop streams move nothing); `placement_gap` is the absolute
+    difference between the pager's derived pool footprint and the
+    ledger's measured placement — the tentpole contract, so the gate
+    pins it at 0.
+    """
+    sub = engine.substrate
+    if sub is None:
+        return {"tag": tag, "mode": "off", "transfer_bytes": 0.0,
+                "placement_gap": 0.0}
+    sub.sync()
+    c = sub.counters()
+    xfer = (c["page_out_bytes"] + c["page_in_bytes"]
+            + c["handoff_bytes"])
+    gap = abs(engine.pager.pool_bytes_used() - c["placement_bytes"])
+    emit(
+        tag, 0.0,
+        f"mode={c['mode']} transfer_bytes={xfer:.0f} "
+        f"page_out={c['page_out_pages']} page_in={c['page_in_pages']} "
+        f"drop={c['drop_pages']} page_bytes={sub.page_bytes:.0f} "
+        f"placement_gap={gap:.1f} in_flight={c['in_flight']} "
+        f"tokens={stats.tokens}",
+    )
+    return {
+        "tag": tag,
+        "mode": c["mode"],
+        "transfer_bytes": float(xfer),
+        "page_out_bytes": float(c["page_out_bytes"]),
+        "page_in_bytes": float(c["page_in_bytes"]),
+        "page_out_pages": int(c["page_out_pages"]),
+        "page_in_pages": int(c["page_in_pages"]),
+        "drop_pages": int(c["drop_pages"]),
+        "page_bytes": float(sub.page_bytes),
+        "placement_gap": float(gap),
+        "tokens": int(stats.tokens),
+    }
 
 
 def run():

@@ -26,7 +26,10 @@ tolerance type —
 A baseline file that doesn't exist is skipped with a warning (lets a PR
 introduce a new bench before its first baseline lands); a MISSING row
 tag or metric in a present pair of files is an error — silent metric
-renames are exactly what a gate must catch. Exit 0 = all rules pass.
+renames are exactly what a gate must catch. So is a file that fails to
+parse or a metric that isn't a number: every mishap the gate can meet
+turns into a one-line failure string, never a traceback. Exit 0 = all
+rules pass.
 """
 
 from __future__ import annotations
@@ -52,6 +55,12 @@ RULES = [
      "abs_max", 0.30),
     ("BENCH_serve.json", "serve_chunked_vs_serial", "tok_s_ratio",
      "rel_min", 0.95),
+    # physical-substrate traffic: measured transfer bytes must not grow,
+    # and the pager-vs-ledger placement contract must hold exactly
+    ("BENCH_serve.json", "serve_substrate", "transfer_bytes",
+     "rel_max", 1.10),
+    ("BENCH_serve.json", "serve_substrate", "placement_gap",
+     "abs_max", 0.0),
     # --- pager/allocator churn (BENCH_pager.json) ---
     ("BENCH_pager.json", "pager_shared", "hit_rate",
      "rel_min", 0.95),
@@ -75,6 +84,8 @@ def load_rows(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     rows = {}
+    if not isinstance(payload, dict):
+        raise ValueError(f"{path}: top level must be an object")
     for row in payload.get("rows", []):
         tag = row.get("tag")
         if tag is not None:
@@ -82,41 +93,73 @@ def load_rows(path: str) -> dict:
     return rows
 
 
+def _metric_value(rows: dict, tag: str, metric: str):
+    """(value, error) — error is a human-readable reason string when the
+    metric is absent or not a number, value is a float otherwise."""
+    if tag not in rows or metric not in rows[tag]:
+        return None, "missing"
+    raw = rows[tag][metric]
+    if isinstance(raw, bool) or not isinstance(raw, (int, float)):
+        return None, f"not numeric (got {raw!r})"
+    return float(raw), None
+
+
 def check(fresh_dir: str, base_dir: str, rules=RULES) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
     cache = {}
 
-    def rows_for(d, fname):
+    def rows_for(d, fname, which):
+        """Parsed rows, None (file absent -> SKIP), or an error string
+        (file present but unreadable -> hard failure, once per file)."""
         key = (d, fname)
         if key not in cache:
             path = os.path.join(d, fname)
-            cache[key] = load_rows(path) if os.path.exists(path) else None
+            if not os.path.exists(path):
+                cache[key] = None
+            else:
+                try:
+                    cache[key] = load_rows(path)
+                except (ValueError, OSError) as e:
+                    msg = (f"{fname}: {which} file is unreadable "
+                           f"({e}) — corrupt artifact?")
+                    failures.append(msg)
+                    cache[key] = msg
         return cache[key]
 
     for fname, tag, metric, rule, tol in rules:
-        fresh = rows_for(fresh_dir, fname)
-        base = rows_for(base_dir, fname)
+        fresh = rows_for(fresh_dir, fname, "fresh")
+        base = rows_for(base_dir, fname, "baseline")
         if fresh is None or base is None:
             which = "fresh" if fresh is None else "baseline"
             print(f"SKIP {fname}:{tag}:{metric} ({which} file missing)")
             continue
-        if tag not in fresh or metric not in fresh[tag]:
+        if isinstance(fresh, str) or isinstance(base, str):
+            continue                     # unreadable file already failed
+        fval, err = _metric_value(fresh, tag, metric)
+        if err == "missing":
             failures.append(
                 f"{fname}: fresh run is missing {tag}.{metric} — "
                 f"renamed or dropped metric?")
             continue
-        fval = float(fresh[tag][metric])
+        if err is not None:
+            failures.append(
+                f"{fname}: fresh {tag}.{metric} is {err}")
+            continue
         if rule == "abs_max":
             ok = fval <= tol
             detail = f"fresh={fval:.4g} ceiling={tol:.4g}"
         else:
-            if tag not in base or metric not in base[tag]:
+            bval, err = _metric_value(base, tag, metric)
+            if err == "missing":
                 failures.append(
                     f"{fname}: baseline is missing {tag}.{metric} — "
                     f"regenerate benchmarks/baselines/")
                 continue
-            bval = float(base[tag][metric])
+            if err is not None:
+                failures.append(
+                    f"{fname}: baseline {tag}.{metric} is {err}")
+                continue
             if rule == "rel_max":
                 bound = bval * tol
                 ok = fval <= bound
@@ -141,7 +184,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baselines", default="benchmarks/baselines",
                     help="directory with the committed baselines")
     args = ap.parse_args(argv)
-    failures = check(args.fresh, args.baselines)
+    failures = check(args.fresh, args.baselines, RULES)
     if failures:
         print(f"\nbench regression gate FAILED "
               f"({len(failures)} rule(s)):", file=sys.stderr)

@@ -47,6 +47,14 @@
         # with a STRICTLY higher aggregate prefix_hit_rate — the
         # router-side radix index keeps each system prompt's pages on
         # one engine instead of cold-missing on all of them
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python scripts/dev_serve.py --mesh dp2tp2 --interpret a b
+        # the CI sharded-parity lane: the paged engine jitted over a
+        # forced dp x tp host mesh (KV heads over the model axis, slots
+        # over data, block tables replicated) must replay the meshless
+        # single-device token stream bit-for-bit (fp pools; int8 is
+        # drift-bounded), and the substrate's measured placement bytes
+        # must equal the pager's pool accounting under the mesh
 """
 
 import dataclasses
@@ -142,7 +150,7 @@ def fleet_parity(cfg, params, n_engines):
     ecfg = EngineConfig(
         n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
         page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
-        admission="greedy", paged=True,
+        admission="greedy", paged=True, pool_dtype="fp",
     )
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(2), (2 * n_engines * B, S), 0, cfg.vocab_size
@@ -179,6 +187,7 @@ def fleet_prefix(cfg, params, n_engines):
         n_slots=B, max_seq=SP + GENP, prefill_buckets=(SP,),
         page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
         admission="greedy", paged=True, prefix_cache=True,
+        pool_dtype="fp",
     )
 
     def stream():
@@ -201,6 +210,54 @@ def fleet_prefix(cfg, params, n_engines):
         hits[pol] = stats.prefix["hit_rate"]
     parity = outs["round_robin"] == outs["prefix_aware"]
     return parity, hits["round_robin"], hits["prefix_aware"]
+
+
+def mesh_parity(cfg, params, dp, tp, pool_dtype):
+    """The sharded-parity lane: the paged engine jitted over a forced
+    dp x tp host mesh (KV heads over `model`, slots over `data`, block
+    tables replicated — runtime.sharding.paged_cache_pspec) must emit
+    the same greedy stream as the meshless single-device engine:
+    bit-for-bit for fp pools, drift-bounded (INT8_TOKEN_AGREEMENT, the
+    sharded contraction re-orders float sums) for int8. Also reports the
+    substrate's measured placement contract under the mesh."""
+    from repro.launch.mesh import ctx_for_mesh
+
+    n_dev = dp * tp
+    if len(jax.devices()) < n_dev:
+        raise SystemExit(
+            f"--mesh dp{dp}tp{tp} needs {n_dev} devices, have "
+            f"{len(jax.devices())} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_dev}")
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size))
+    ref, _ = engine_greedy(cfg, params, prompts, paged=True,
+                           pool_dtype=pool_dtype)
+    mesh = jax.make_mesh(
+        (dp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mctx = ctx_for_mesh(mesh, fsdp=False, remat="none")
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
+        page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
+        admission="greedy", paged=True, pool_dtype=pool_dtype,
+    )
+    engine = ServingEngine.build(cfg, mctx, ecfg, params=params,
+                                 mesh=mesh)
+    reqs = [
+        Request(request_id=i, tokens=np.asarray(prompts[i]),
+                max_new_tokens=GEN, arrival=0.0)
+        for i in range(B)
+    ]
+    stats = engine.run(reqs)
+    got = np.stack([np.asarray(r.output) for r in reqs])
+    agree = float((ref == got).mean())
+    sub_ok, sub_mode = True, "off"
+    if engine.substrate is not None:
+        sub_mode = engine.substrate.mode
+        placed = engine.substrate.ledger.placement_bytes()
+        used = engine.pager.pool_bytes_used()
+        sub_ok = abs(placed - used) <= 1e-6 * max(1.0, used)
+    return agree, sub_ok, sub_mode, stats, engine
 
 
 def check_teacher_forcing(cfg, params, toks, extras):
@@ -236,8 +293,41 @@ def main():
         i = args.index("--fleet")
         fleet_n = int(args[i + 1])
         del args[i:i + 2]
+    mesh_spec = None
+    if "--mesh" in args:
+        i = args.index("--mesh")
+        mesh_spec = args[i + 1]
+        del args[i:i + 2]
     archs = [a for a in args if not a.startswith("--")]
     archs = archs or configs.list_archs()
+
+    if mesh_spec:
+        import re
+
+        m = re.fullmatch(r"dp(\d+)tp(\d+)", mesh_spec)
+        if not m:
+            raise SystemExit(f"--mesh wants dpDtpT (e.g. dp2tp2), got "
+                             f"{mesh_spec!r}")
+        dp, tp = int(m.group(1)), int(m.group(2))
+        for arch in archs:
+            cfg = dataclasses.replace(configs.reduced(arch),
+                                      dtype="float32")
+            params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+            agree, sub_ok, sub_mode, stats, _ = mesh_parity(
+                cfg, params, dp, tp, pool_dtype)
+            exact = pool_dtype != "int8"
+            ok = (agree == 1.0 if exact
+                  else agree >= INT8_TOKEN_AGREEMENT) and sub_ok
+            status = "OK " if ok else "FAIL"
+            print(f"{arch:28s} mesh=dp{dp}tp{tp} pool={pool_dtype} "
+                  f"agree={agree:.2f} substrate={sub_mode} "
+                  f"placement_ok={sub_ok} "
+                  f"xfer_bytes="
+                  f"{stats.summary().get('substrate_transfer_bytes', 0):.0f}"
+                  f" {status}")
+            assert status == "OK ", arch
+        print("ALL OK")
+        return
 
     if fleet_n:
         for arch in archs:
@@ -280,7 +370,9 @@ def main():
         prompts = np.asarray(toks[:, :S])
         lanes = [("paged", dict(paged=True, pool_dtype=pool_dtype))]
         if not paged_only:
-            lanes.append(("dense", dict(paged=False)))
+            # the contiguous safety-net layout has no page pool to
+            # quantize — pin the exact payload
+            lanes.append(("dense", dict(paged=False, pool_dtype="fp")))
         if chunked_prefill_supported(cfg):
             lanes.append(("chunked", dict(paged=True, chunk=PAGE,
                                           pool_dtype=pool_dtype)))

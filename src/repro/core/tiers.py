@@ -22,7 +22,10 @@ class TierSpec:
     capacity: float           # bytes per chip
     bandwidth: float          # bytes/s per chip (stream)
     latency: float            # seconds
-    memory_kind: Optional[str]  # jax memory kind ("device" / "pinned_host")
+    # jax memory kind ("device" / "pinned_host"); the serving substrate
+    # (repro.serving.substrate) places the physical pool twin with the
+    # pool tier's kind, so analytical pricing and placement stay one model
+    memory_kind: Optional[str]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -81,6 +81,10 @@ def main(argv=None):
     ap.add_argument("--contiguous", action="store_true",
                     help="per-slot contiguous caches instead of the "
                     "paged physical page pool (the pre-PR-4 layout)")
+    ap.add_argument("--pool-dtype", default=None,
+                    choices=["int8", "fp"],
+                    help="paged pool payload (default: engine default, "
+                    "int8; --contiguous forces fp)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="interleave prompt chunks of this many tokens "
                     "with decode steps (paged, attention-only archs; "
@@ -160,6 +164,9 @@ def main(argv=None):
         max_seq=max_seq,
         prefill_buckets=buckets,
         paged=not args.contiguous,
+        # contiguous caches have no pool to quantize: pin the fp net
+        pool_dtype="fp" if args.contiguous else (args.pool_dtype
+                                                 or EngineConfig.pool_dtype),
         prefill_chunk=args.prefill_chunk or None,
         page_tokens=page_tokens,
         local_budget_frac=args.local_budget,

@@ -226,6 +226,28 @@ def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
     )
 
 
+# the physical-page-pool leaves of a paged cache tree; everything else
+# (SSM state, conv tails, cross-KV) is slot-resident and never pooled
+PAGED_LEAF_NAMES = ("k", "v", "k_sz", "v_sz")
+
+
+def init_pool_twin(caches):
+    """Pool-resident twin of the PAGED leaves of `caches`: a same-shape
+    zeros tree holding only the physical page pool arrays (k/v payload
+    plus the int8 (scale, zero) leaves). The serving substrate
+    (`repro.serving.substrate`) places it — `pinned_host` NamedSharding
+    in physical mode, default memory when emulated — and mirrors
+    pool-tiered pages into it via the jitted transfer streams. Returns
+    {} for cache trees with no paged leaves (SSM-only stacks)."""
+    twin = {}
+    for pos, c in caches.items():
+        sub = {name: jnp.zeros(c[name].shape, c[name].dtype)
+               for name in PAGED_LEAF_NAMES if name in c}
+        if sub:
+            twin[pos] = sub
+    return twin
+
+
 def _apply_layer_decode(p, c, x, t, cfg: ModelConfig, desc: LayerDesc,
                         ctx: ParallelCtx, block_table=None,
                         page_tokens: int = 0, attn_override=None):

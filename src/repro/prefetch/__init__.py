@@ -35,6 +35,7 @@ non-contiguous KV pages).
 """
 
 from repro.prefetch.engine import (
+    AdaptiveSwitcher,
     PrefetchConfig,
     PrefetchEngine,
     PrefetchReport,
@@ -64,6 +65,7 @@ from repro.prefetch.workloads import BFSTrace, bfs_levels, bfs_trace, \
 
 __all__ = [
     "AccessTrace",
+    "AdaptiveSwitcher",
     "BFSTrace",
     "FrontierPredictor",
     "GHBPredictor",

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.prefetch.predictors import Predictor, make_predictor
 from repro.prefetch.trace import AccessTrace
@@ -214,6 +214,103 @@ class PrefetchEngine:
             late=late,
             total_time=total_time,
         )
+
+
+class AdaptiveSwitcher(Predictor):
+    """Accuracy-tracked per-phase predictor switching.
+
+    No single stream predictor wins every phase of a real trace — a
+    sequential prefill phase wants `next_line`, a strided re-read wants
+    `stride`, interleaved slots want `stream`. The switcher runs every
+    candidate in SHADOW: all of them observe the full demand stream and
+    predict every step, but only the active candidate's predictions are
+    returned (and thus charged against the pool link). Each candidate's
+    shadow predictions are scored against the touches that follow — a
+    prediction that is touched within `ttl` steps counts as a hit, one
+    that expires counts as a miss — into a rolling window of the last
+    `window` outcomes. Every `phase_steps` steps the switcher moves the
+    active role to the candidate with the best windowed accuracy (ties
+    keep the incumbent, so a phase of equals never thrashes).
+
+    Shadow scoring is free by construction: predictions are lists of
+    page ids, only the ACTIVE list turns into transfers, so the
+    switcher's excess-traffic profile is exactly its active history.
+    """
+
+    name = "adaptive"
+
+    #: default candidate set: the stream-learnable zoo (no schedules or
+    #: hints required — same constraint the KV pager puts on predictors)
+    CANDIDATES = ("next_line", "stride", "stream", "markov", "ghb")
+
+    def __init__(self, candidates: Optional[List[Predictor]] = None,
+                 window: int = 64, ttl: int = 4, phase_steps: int = 16):
+        if candidates is None:
+            candidates = [make_predictor(n) for n in self.CANDIDATES]
+        if not candidates:
+            raise ValueError("adaptive switcher needs >= 1 candidate")
+        if window < 1 or ttl < 1 or phase_steps < 1:
+            raise ValueError("window, ttl and phase_steps must be >= 1")
+        self.candidates = list(candidates)
+        self.window = int(window)
+        self.ttl = int(ttl)
+        self.phase_steps = int(phase_steps)
+        self.active = 0
+        self.switches = 0
+        self._step = 0
+        # per-candidate shadow state: page -> expiry step / outcome window
+        self._outstanding: List[Dict[int, int]] = [
+            {} for _ in self.candidates]
+        self._scores = [collections.deque(maxlen=self.window)
+                        for _ in self.candidates]
+
+    def _accuracy(self, i: int) -> float:
+        s = self._scores[i]
+        # unscored candidates rank below any scored one: a predictor
+        # that never commits (empty predictions) must not hold the
+        # active role against one with a real record
+        return sum(s) / len(s) if s else -1.0
+
+    def accuracies(self) -> List[float]:
+        """Windowed shadow accuracy per candidate (diagnostics)."""
+        return [self._accuracy(i) for i in range(len(self.candidates))]
+
+    def start_step(self, hint: Optional[Sequence[int]] = None) -> None:
+        self._step += 1
+        for i, out in enumerate(self._outstanding):
+            for p in [p for p, t in out.items() if t <= self._step]:
+                del out[p]
+                self._scores[i].append(0)        # expired unused: miss
+        if self._step % self.phase_steps == 0:
+            best = max(
+                range(len(self.candidates)),
+                key=lambda i: (self._accuracy(i), i == self.active),
+            )
+            if best != self.active:
+                self.active = best
+                self.switches += 1
+        for c in self.candidates:
+            c.start_step(hint)
+
+    def observe(self, page: int) -> None:
+        for i, (c, out) in enumerate(
+                zip(self.candidates, self._outstanding)):
+            if page in out:
+                del out[page]
+                self._scores[i].append(1)        # touched in time: hit
+            c.observe(page)
+
+    def predict(self, degree: int) -> List[int]:
+        chosen: List[int] = []
+        for i, c in enumerate(self.candidates):
+            preds = c.predict(degree)
+            shadow = self._outstanding[i]
+            for p in preds:
+                if p not in shadow:
+                    shadow[p] = self._step + self.ttl
+            if i == self.active:
+                chosen = preds
+        return chosen
 
 
 def evaluate_zoo(trace: AccessTrace, cfg: PrefetchConfig,

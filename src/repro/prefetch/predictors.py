@@ -285,11 +285,17 @@ def make_predictor(name: str, **kwargs) -> Predictor:
     `make_predictor("static", schedule=trace.steps)`."""
     if name == "static":
         return StaticSchedulePredictor(kwargs.pop("schedule"))
+    if name == "adaptive":
+        # lazy: AdaptiveSwitcher lives with the engine (it composes zoo
+        # members), and engine.py imports this module at the top
+        from repro.prefetch.engine import AdaptiveSwitcher
+        return AdaptiveSwitcher(**kwargs)
     try:
         cls = _ZOO[name]
     except KeyError:
         raise ValueError(
-            f"unknown predictor {name!r} (know {sorted(_ZOO)} + 'static')"
+            f"unknown predictor {name!r} "
+            f"(know {sorted(_ZOO)} + 'static' + 'adaptive')"
         ) from None
     return cls(**kwargs)
 

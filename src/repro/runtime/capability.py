@@ -57,3 +57,47 @@ def supports_internal_transfer() -> bool:
         return True
     except Exception:
         return False
+
+
+def resolve_substrate_mode(requested: str, *, host_input: bool,
+                           host_output: bool, internal: bool) -> str:
+    """Pure mode resolution for the physical KV substrate.
+
+    The substrate keeps a host-resident twin of the pool pages: it needs
+    pinned_host *placement* of standing arrays (host_input — the twin is
+    an input to nothing but device_put, but placement uses the same
+    compile path) and jittable internal transfers for the page streams.
+    host_output alone is not enough (can't round-trip pages back out).
+
+      requested="physical"  — demand the real thing; raise if unsupported
+      requested="emulated"  — force default-memory twin (same code shape,
+                              same ledger; bytes counted, not moved
+                              across memory kinds)
+      requested="auto"      — physical when the backend can, else emulated
+      requested="off"       — no substrate at all
+    """
+    if requested not in ("auto", "off", "emulated", "physical"):
+        raise ValueError(
+            f"substrate={requested!r} not in ('auto', 'off', 'emulated', "
+            f"'physical')")
+    if requested in ("off", "emulated"):
+        return requested
+    physical_ok = host_input and internal
+    if requested == "physical":
+        if not physical_ok:
+            raise RuntimeError(
+                "substrate='physical' requested but the backend probes "
+                f"report host_input={host_input} internal={internal} "
+                f"(host_output={host_output}); use 'auto' or 'emulated'")
+        return "physical"
+    return "physical" if physical_ok else "emulated"
+
+
+def substrate_mode(requested: str = "auto") -> str:
+    """Resolve the substrate mode against this process's backend probes."""
+    return resolve_substrate_mode(
+        requested,
+        host_input=supports_host_input(),
+        host_output=supports_host_output(),
+        internal=supports_internal_transfer(),
+    )

@@ -57,6 +57,34 @@ deduplicated footprint is then
 (n_sharers * (n_tokens - shared) + shared) * token_bytes instead of
 n_sharers * n_tokens * token_bytes — `core.access.kv_dedup_token_bytes`
 is the closed-form twin of `KVPager.phys_tiers()` under sharing.
+
+MESH-SHARDED PAGED SERVING: `make_engine_cells(mesh=...)` jits every
+cell (paged decode, bucketed prefill, paged insert, chunked prefill,
+COW page-copy) with explicit in/out shardings over two axes — KV heads
+over the model (`tp`) axis for the pool payload and int8 scale leaves,
+slots over the data (`dp`) axis for the resident leaves
+(`runtime.sharding.paged_cache_pspec`; params follow the weight-
+stationary `ShardingRules.for_serving` table). Block tables and the
+per-slot token/position vectors are REPLICATED: each shard resolves
+the identical logical->physical page mapping and gathers only its own
+head slice, so the page allocator stays a single host-side object and
+the token stream is bit-identical to the single-device engine (the CI
+`sharded-parity` lane forces an 8-device host mesh and asserts exactly
+that). Interpret-mode pallas lowers the paged kernels to plain HLO, so
+GSPMD partitions them like any jnp program; compiled-TPU kernel
+partitioning rides the same shardings.
+
+TIER LAYOUT / TRANSFER-STREAM CONTRACT (`repro.serving.substrate`):
+the cells only ever touch the DEVICE pool — the authoritative copy.
+The engine additionally owns a `TierSubstrate` holding a pinned_host
+(or emulated default-memory) zeros twin of the paged leaves; after
+each pager step it reconciles the twin against
+`KVPager.pool_page_ids()`, issuing async jitted gather/scatter streams
+(page_out device->host, page_in host->device, drop on free) whose
+completion-tracked `SubstrateLedger` measures real array bytes. The
+contract: after every drain, `pager.pool_bytes_used()` equals
+`ledger.placement_bytes()` — `phys_tiers()` pool accounting is actual
+placement, not a derived price.
 """
 
 from __future__ import annotations
@@ -491,15 +519,19 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         param_sh = bundle.param_shardings
         aparams = bundle.abstract_params
         if paged:
-            # the pool has no batch dim to shard over dp and its page dim
-            # is gathered through the block table — replicate the paged
-            # leaves (multi-host slot sharding stays a ROADMAP item)
+            # paged mesh layout (shd.paged_cache_pspec): pool payload +
+            # int8 scale leaves split on KV heads over tp, resident
+            # leaves on slots over dp, block tables replicated (the
+            # trailing None in_sharding below)
             acaches = abstract_paged_caches(
                 cfg, n_slots, max_seq_total, page_tokens, enc_len,
                 pool_dtype=pool_dtype,
             )
             cache_sh = shd.named(
-                mesh, jax.tree.map(lambda _: P(), acaches)
+                mesh,
+                shd.paged_cache_pspec(
+                    acaches, ctx.dp_axes, ctx.tp_axis, mesh
+                ),
             )
         else:
             cache_sh = bundle.cache_shardings

@@ -171,6 +171,52 @@ def cache_pspec(caches, dp_axes, tp_axis, mesh):
     return jax.tree_util.tree_map_with_path(path_aware, caches)
 
 
+def paged_cache_pspec(caches, dp_axes, tp_axis, mesh):
+    """Paged-layout cache sharding (see blocks.init_paged_caches):
+
+      k/v:        (nb, P_phys, page_tokens, KV, hd) — KV heads over the
+                  model (tp) axis when divisible. The physical page axis
+                  is gathered through the block table, so it must stay
+                  unsharded; page_tokens/head_dim stay local to keep the
+                  attention contraction shard-local per head group.
+      k_sz/v_sz:  (nb, P_phys, KV, 2) — the int8 (scale, zero) leaves
+                  split on the SAME head axis as the payload: each tp
+                  shard dequantizes exactly its own heads.
+      resident leaves (dense per-slot axis 1): slots over dp when
+                  divisible — state (nb, B, H, P, N) also takes heads
+                  over tp, conv tails (nb, B, W-1, C) channel over tp,
+                  cross_k/v (nb, B, enc, KV, hd) heads over tp.
+
+    The (n_slots, n_pages) block tables are REPLICATED (passed to the
+    cells with a None in_sharding): every shard resolves the same
+    logical->physical mapping and gathers its own head slice.
+    """
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    tp = mesh.shape.get(tp_axis, 1) if tp_axis else 1
+
+    def tp_ax(dim):
+        return tp_axis if (tp > 1 and dim % tp == 0) else None
+
+    def path_aware(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):
+            return P(None, None, None, tp_ax(x.shape[3]), None)
+        if name in ("k_sz", "v_sz"):
+            return P(None, None, tp_ax(x.shape[2]), None)
+        b_ax = dp_axes if (x.shape[1] % dp_size == 0 and dp_size > 1) \
+            else None
+        if name in ("cross_k", "cross_v"):
+            return P(None, b_ax, None, tp_ax(x.shape[3]), None)
+        if name == "state":
+            return P(None, b_ax, tp_ax(x.shape[2]), None, None)
+        # conv tails: (nb, B, W-1, C)
+        return P(None, b_ax, None, tp_ax(x.shape[3]))
+
+    return jax.tree_util.tree_map_with_path(path_aware, caches)
+
+
 def named(mesh, pspec_tree, memory_kind=None):
     kwargs = {"memory_kind": memory_kind} if memory_kind else {}
 

@@ -4,7 +4,10 @@ Takes a built TrainBundle, derives the per-device access profile of the
 training state, runs the placement policy against the emulated tier topology
 (paper-style pool_fraction), and re-jits the step with pinned_host memory
 kinds on the pool-tier leaves. Degrades per backend capability (XLA:CPU only
-supports host placement on inputs — see runtime/capability.py).
+supports host placement on inputs — see runtime/capability.py); the serving
+KV substrate (`repro.serving.substrate`) resolves the SAME probes through
+`capability.substrate_mode`, so `info["substrate_mode"]` reports whether a
+physical pinned_host pool would be live on this backend.
 """
 
 from __future__ import annotations
@@ -100,6 +103,8 @@ def apply_tier_shardings(cfg: ModelConfig, ctx: ParallelCtx,
         "predicted_slowdown_vs_all_hbm": placement.slowdown,
         "host_annotation": "inputs" if host_ok and not out_ok else (
             "inputs+outputs" if out_ok else "logical-only"),
+        # the serving substrate's resolution of the same probe set
+        "substrate_mode": capability.substrate_mode("auto"),
         "n_pool_tensors": sum(
             1 for v in placement.assignment.values() if v == "host"
         ),

@@ -16,10 +16,12 @@ kernels gather.
 
 POOL DTYPE (`EngineConfig.pool_dtype`): the pool payload is polymorphic.
 
-* "fp" (default) stores cfg.dtype bit-identically — the exact safety
-  net; the engine is token-for-token equal to the contiguous layout.
+* "fp" stores cfg.dtype bit-identically — the exact safety net; the
+  engine is token-for-token equal to the contiguous layout. Parity
+  tests and lanes that assert exactness pin this mode.
 * "bf16" stores a 2-byte cast of the payload (fp16-class pooling).
-* "int8" BLOCK-QUANTIZES every page: the payload pool is int8 and each
+* "int8" (the DEFAULT since the physical substrate made pool bytes
+  real) BLOCK-QUANTIZES every page: the payload pool is int8 and each
   attention cache dict grows per-page float32 (scale, zero) leaves
   "k_sz"/"v_sz" of shape (stack, n_slots * n_pages, kv_heads, 2)
   (`repro.kernels.quant` layout, affine mid-range: q = round((x -
@@ -68,6 +70,41 @@ shared by n slots occupies ONE page of budget (`phys_tiers()`,
 
     (n_sharers * (n_tokens - shared) + shared) * token_bytes
         / (n_sharers * n_tokens)
+
+PHYSICAL SUBSTRATE (`serving/substrate/`, `EngineConfig.substrate`):
+the pager's local/pool tier map stops being bookkeeping and becomes
+physical placement. `TierSubstrate` owns a host-resident TWIN of the
+paged pool leaves (`models.blocks.init_pool_twin`) placed through
+`runtime.sharding.named(..., memory_kind=...)` — pinned_host where the
+backend supports it ("physical" mode), default memory with identical
+program shapes where it doesn't ("emulated", the XLA:CPU CI fallback;
+`runtime.capability.substrate_mode` resolves "auto" per backend probe).
+Each decode step the engine drains the substrate: the pager's pool page
+set is diffed against the twin's residency and reconciled with jitted
+async transfer STREAMS — page_out (device pool -> twin, donated twin
+scatter), page_in (twin gather -> device, promotion), drop (freed, no
+bytes move) — every stream recorded in a completion-tracked
+`SubstrateLedger` whose `page_bytes` are MEASURED from the twin arrays'
+nbytes. Contract (bench-gated): after every drain,
+`KVPager.pool_bytes_used() == ledger.placement_bytes()` — the virtual
+clock prices exactly the bytes that physically moved. Fleet handoffs
+(`fleet/roles.py`) price their page copies off the same measured
+number. Prefix-cache interplay: trie-pinned pages keep ref > 0, so a
+shared cold prefix stays POOL-placed across donor-slot release (one
+twin page however many slots map it); reclaim drops the pin and the
+next drain turns the freed pages into a drop stream.
+
+MESH-SHARDED SERVING (`runtime.serve.make_engine_cells(mesh=...)`): all
+cells jit with NamedSharding in/out shardings — KV heads over the tp
+axis, slots over dp for contiguous leaves, the PAGE AXIS always
+unsharded (pages are gathered through the block table, which stays
+replicated as do the tokens/positions the host mutates) — see
+`runtime.sharding.paged_cache_pspec`. The substrate twin carries the
+same partitioning (pool_pspec), so tier transfers move per-shard
+without resharding. The sharded-parity CI lane forces 8 host devices
+(`--xla_force_host_platform_device_count=8`) and asserts token parity
+vs the single-device engine: bit-exact for fp pools, drift-bounded for
+int8.
 
 FUSED-SCATTER CONTRACT: on the kernel backends (pallas / interpret) no
 serving cell issues a standalone jnp page-scatter over the pool. The
@@ -131,6 +168,11 @@ Architecture (one module per concern):
   prefix_cache.py — the shared-prefix radix trie over the pager's
                 physical pages: page-block keying, LRU leaf eviction,
                 free-list-pressure reclaim (see the section above).
+  substrate/  — the physical memory substrate: `TierSubstrate` (host
+                pool twin + jitted transfer streams, drained per decode
+                step) and `SubstrateLedger` (completion-tracked events,
+                measured bytes, placement accounting) — see the
+                PHYSICAL SUBSTRATE section above.
   batcher.py  — fixed-slot continuous batching: requests flow through
                 `n_slots` decode lanes; admission on free slot, release on
                 completion; inactive slots mask their cache writes by
@@ -195,6 +237,7 @@ from repro.serving.engine import (
 )
 from repro.serving.kv_pager import KVPager, PagerConfig, StepTraffic
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
+from repro.serving.substrate import SubstrateLedger, TierSubstrate
 from repro.serving.queue import (
     Request,
     RequestQueue,
@@ -224,6 +267,8 @@ __all__ = [
     "ServingEngine",
     "Slot",
     "StepTraffic",
+    "SubstrateLedger",
+    "TierSubstrate",
     "bursty_stream",
     "chat_stream",
     "fleet",

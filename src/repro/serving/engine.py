@@ -65,11 +65,13 @@ from repro.core import roofline as rl
 from repro.core import tiers as tr
 from repro.models import model as M
 from repro.models.frontends import synthetic_frontend_embeds
+from repro.runtime import capability
 from repro.runtime import serve as serve_rt
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kv_pager import KVPager, PagerConfig
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.queue import Request, RequestQueue
+from repro.serving.substrate import TierSubstrate
 
 # Minimum per-request greedy-token agreement an int8 pool must keep vs
 # the fp reference: per-page block quantization bounds logit drift, but a
@@ -90,11 +92,13 @@ class EngineConfig:
     paged: bool = True              # cache = physical page pool + block
     # tables end-to-end (False keeps the per-slot contiguous layout — the
     # refactor's safety net, token-for-token identical)
-    pool_dtype: str = "fp"          # pool payload (models.blocks.
-    # POOL_DTYPES): "fp" stores cfg.dtype bit-identically (the exact
-    # safety net), "bf16" a 2-byte cast, "int8" per-page block
-    # quantization — ~4x fewer pool bytes per cached token at a bounded
-    # logit drift (quantize-on-insert, dequantize-in-kernel)
+    pool_dtype: str = "int8"        # pool payload (models.blocks.
+    # POOL_DTYPES): "int8" per-page block quantization — the DEFAULT now
+    # that the substrate makes pool bytes physical placement (~4x fewer
+    # pool bytes per cached token, host-side too, at a bounded logit
+    # drift; quantize-on-insert, dequantize-in-kernel); "fp" stores
+    # cfg.dtype bit-identically (the exact safety net the parity gates
+    # pin), "bf16" a 2-byte cast
     prefill_chunk: Optional[int] = None   # tokens per prefill chunk
     # (paged, attention-only archs): interleave prompt chunks with decode
     # steps instead of serializing whole prompts against the batch
@@ -123,6 +127,13 @@ class EngineConfig:
     # (per-request embeds/cross-KV make "same tokens" != "same KV")
     prefix_cache_pages: Optional[int] = None   # trie capacity cap (pages);
     # None = bounded only by free-list pressure (LRU reclaim on demand)
+    # --- physical memory substrate (serving.substrate) ---
+    substrate: str = "auto"         # off | emulated | physical | auto —
+    # realize the pool tier as a host-resident twin of the paged leaves
+    # (pinned_host NamedSharding where the backend supports it) kept in
+    # sync by async jitted transfer streams with a completion ledger;
+    # "auto" resolves per runtime.capability probes (physical on TPU,
+    # emulated on XLA:CPU — identical program shapes and accounting)
     # --- admission ---
     admission: str = "loi"                     # loi | greedy
     knee_excess: float = 0.75
@@ -219,6 +230,10 @@ class ServeStats:
     max_concurrency: int
     prefix: dict = dataclasses.field(default_factory=dict)   # prefix-cache
     # counter deltas for this run (empty when the cache is off)
+    substrate: dict = dataclasses.field(default_factory=dict)  # transfer-
+    # ledger deltas (serving.substrate) for this run; placement_bytes /
+    # resident_pages are end-of-run levels (empty when the substrate is
+    # off)
 
     def summary(self) -> Dict[str, float]:
         def pct(a, q):
@@ -242,6 +257,16 @@ class ServeStats:
         if self.prefix:
             out["prefix_hit_rate"] = self.prefix["hit_rate"]
             out["cow_splits"] = self.pager.get("cow_splits", 0)
+        if self.substrate:
+            # MEASURED physical tier traffic (real array nbytes on the
+            # transfer streams), the regression-gated bench metric
+            out["substrate_transfer_bytes"] = (
+                self.substrate["page_out_bytes"]
+                + self.substrate["page_in_bytes"]
+                + self.substrate["handoff_bytes"]
+            )
+            out["substrate_placement_bytes"] = \
+                self.substrate["placement_bytes"]
         return out
 
 
@@ -386,6 +411,29 @@ class ServingEngine:
             )
         if cells.cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cells.cache_shardings)
+        # physical memory substrate: host-resident pool twin reconciled
+        # against the pager's tier map once per decode step. Disabled
+        # when requested off, on the contiguous layout, and on cache
+        # trees with no paged leaves (SSM-only stacks).
+        self.substrate: Optional[TierSubstrate] = None
+        if cells.paged and ecfg.substrate != "off":
+            mode = capability.substrate_mode(ecfg.substrate)
+            pool_pspec = None
+            if cells.cache_shardings is not None:
+                # twin carries the pool's own partitioning: per-shard
+                # transfer streams, no resharding on the way out/in
+                pool_pspec = {
+                    pos: {k: cells.cache_shardings[pos][k].spec
+                          for k in _PAGED_KEYS if k in c}
+                    for pos, c in self.caches.items()
+                    if any(k in c for k in _PAGED_KEYS)
+                }
+            sub = TierSubstrate(
+                self.caches, ctx.mesh, mode, pool_pspec=pool_pspec,
+                host_memory_kind=(self.topo.pool.memory_kind
+                                  or "pinned_host"))
+            if sub.enabled:
+                self.substrate = sub
         self.tokens = np.zeros(ecfg.n_slots, dtype=np.int32)
         self._active_params = cfg.active_param_count()
         self.steps = 0
@@ -689,6 +737,11 @@ class ServingEngine:
             )
 
         traffic = self.pager.step(active)
+        if self.substrate is not None:
+            # reconcile physical placement with the step's tier flips
+            # (async: the streams complete under sync()/capture_stats)
+            self.substrate.drain(self.pager, self.caches,
+                                 step=self.steps)
         t_compute = (
             rl.model_flops_decode(self._active_params, n_active)
             / hw.V5E.peak_flops_bf16
@@ -830,6 +883,8 @@ class ServingEngine:
             "pager0": self.pager.counters(),
             "prefix0": (self.prefix_cache.counters()
                         if self.prefix_cache is not None else None),
+            "substrate0": (self.substrate.counters()
+                           if self.substrate is not None else None),
             "cancelled0": self.cancelled,
             "wall0": time.perf_counter(),
         }
@@ -863,6 +918,23 @@ class ServingEngine:
         blocks0, gaps0 = cap["blocks0"], cap["gaps0"]
         pager0, prefix0 = cap["pager0"], cap["prefix0"]
         max_conc = self._max_conc
+        substrate_delta: dict = {}
+        if self.substrate is not None:
+            # final reconcile (retired slots freed pages after the last
+            # decode drain) + completion barrier, so the captured ledger
+            # reflects finished transfers and current placement
+            self.substrate.drain(self.pager, self.caches,
+                                 step=self.steps)
+            self.substrate.sync()
+            s0, s1 = cap["substrate0"], self.substrate.counters()
+            substrate_delta = {
+                k: (s1[k] - s0[k]) if isinstance(s1[k], (int, float))
+                else s1[k]
+                for k in s1
+            }
+            # placement is a level, not a flow — report the current one
+            substrate_delta["resident_pages"] = s1["resident_pages"]
+            substrate_delta["placement_bytes"] = s1["placement_bytes"]
 
         done = [r for r in requests if r.output]
         ttft = np.array([r.token_times[0] - r.arrival for r in done])
@@ -927,4 +999,5 @@ class ServingEngine:
             admission_blocks=self.admission.blocks - blocks0,
             max_concurrency=max_conc,
             prefix=prefix_delta,
+            substrate=substrate_delta,
         )

@@ -117,14 +117,24 @@ def execute_handoff(rec: HandoffRecord, src: ServingEngine,
     dst.tokens[slot.index] = rec.first_token
     # the transfer serializes after first-token emission and prices the
     # page payload over the pool link — the decode engine cannot start
-    # this slot before the pages land
-    t_xfer = n_pages * src.pager.page_bytes / src.topo.pool.bandwidth
+    # this slot before the pages land. With the physical substrate on,
+    # page bytes come MEASURED from the pool twin's array nbytes (and
+    # the copy lands as a completion-tracked handoff stream in the
+    # source engine's ledger); the pager's derived page_bytes is the
+    # substrate-off fallback — the two agree to float rounding, so
+    # fleet baselines are mode-invariant.
+    if src.substrate is not None:
+        page_b = src.substrate.page_bytes
+        src.substrate.record_handoff(n_pages, step=src.steps)
+    else:
+        page_b = src.pager.page_bytes
+    t_xfer = n_pages * page_b / src.topo.pool.bandwidth
     t_ready = rec.t_emit + t_xfer
     dst.advance_to(t_ready)
     src.complete_handoff(rec)
     ledger.record(TransferRecord(
         request_id=req.request_id, src_engine=src_id, dst_engine=dst_id,
-        n_pages=n_pages, bytes=n_pages * src.pager.page_bytes,
+        n_pages=n_pages, bytes=n_pages * page_b,
         t_emit=rec.t_emit, t_ready=t_ready,
     ))
     return t_ready

@@ -134,11 +134,12 @@ class PagerConfig:
             raise ValueError("page_tokens must be >= 1")
         if self.prefetch is not None and self.prefetch not in (
                 "demand", "next_line", "stride", "stream", "markov",
-                "ghb"):
+                "ghb", "adaptive"):
             raise ValueError(
                 f"pager prefetch {self.prefetch!r} must be a stream-"
-                "learnable predictor (or 'demand'); 'static'/'frontier' "
-                "need schedules/hints the pager does not have"
+                "learnable predictor (or 'demand'/'adaptive'); "
+                "'static'/'frontier' need schedules/hints the pager "
+                "does not have"
             )
 
     @property
@@ -263,6 +264,15 @@ class KVPager:
     def pool_bytes_used(self) -> float:
         return float(((self.ref > 0) & (self.tier_phys == POOL)).sum()
                      * self.page_bytes)
+
+    def pool_page_ids(self) -> np.ndarray:
+        """Physical ids of live pool-resident pages — the reconciliation
+        target set the serving substrate (`serving.substrate`) mirrors
+        into its host twin each step. Dedup rules match
+        `pool_bytes_used`: a physical page counts once however many
+        slot/trie mappings alias it, so after a drain the substrate
+        ledger's placement_bytes equals pool_bytes_used exactly."""
+        return np.nonzero((self.ref > 0) & (self.tier_phys == POOL))[0]
 
     # --------------------------------------------------------- lifecycle
     def _take_free(self, k: int) -> List[int]:

@@ -31,6 +31,14 @@ walking. Capacity can also be capped directly (`capacity_pages`).
 The trie stores no tensor data — pages live in the engine's paged pools;
 for int8 pools the scale/zero leaves ride the same physical page ids, so
 sharing quantized payload shares its quantization metadata for free.
+
+SUBSTRATE INTERPLAY (`repro.serving.substrate`): pinned pages keep
+ref > 0, so a pool-placed cached prefix stays host-RESIDENT in the
+physical substrate across donor-slot release — one twin page no matter
+how many slots map it (dedup is physical, not just accounting). When
+`reclaim` unpins a leaf and the pager frees the page, the next drain
+retires it as a zero-byte drop stream; a slot promoting a shared page
+back to the local tier turns into a single page_in for all sharers.
 """
 
 from __future__ import annotations

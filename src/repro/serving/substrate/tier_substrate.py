@@ -1,0 +1,150 @@
+"""`TierSubstrate` — owns the host-resident pool twin and the jitted
+transfer streams that reconcile it against the pager's tier map.
+
+See the package docstring for the model. Shape notes: every paged leaf
+has the physical page axis at position 1 (k/v: (nb, P_phys,
+page_tokens, KV, hd); k_sz/v_sz: (nb, P_phys, KV, 2)), so one gather/
+scatter index vector drives all leaves of a stream.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks
+from repro.runtime import sharding as shd
+from repro.serving.substrate.ledger import SubstrateLedger
+
+
+def _pool_leaves(caches, twin):
+    """The device-pool subtree of `caches` matching `twin`'s structure."""
+    return {pos: {k: caches[pos][k] for k in sub}
+            for pos, sub in twin.items()}
+
+
+class TierSubstrate:
+    """Two-tier physical placement for the paged KV pool.
+
+    mode       — "physical" (pinned_host twin) or "emulated" (default
+                 memory, identical program shapes); resolve it with
+                 `runtime.capability.substrate_mode` first — this class
+                 does not probe.
+    pool_pspec — optional PartitionSpec tree matching the PAGED subset
+                 of the cache tree (`runtime.sharding.paged_cache_pspec`
+                 output restricted to k/v/k_sz/v_sz). The twin carries
+                 the same partitioning as the device pool so per-shard
+                 transfers never reshard. Default: replicated.
+    host_memory_kind — the jax memory kind the physical twin lands in;
+                 the engine feeds `TierTopology.pool.memory_kind`
+                 (`core.tiers.TierSpec`), so the pool tier the virtual
+                 clock prices is the tier the bytes physically occupy.
+    """
+
+    def __init__(self, caches, mesh, mode: str, *,
+                 pool_pspec=None, host_memory_kind: str = "pinned_host"):
+        if mode not in ("physical", "emulated"):
+            raise ValueError(
+                f"mode={mode!r}; resolve 'auto'/'off' via "
+                "runtime.capability.substrate_mode before constructing")
+        self.mode = mode
+        twin = blocks.init_pool_twin(caches)
+        self.enabled = bool(twin)
+        if not self.enabled:        # SSM-only stack: no paged KV leaves
+            self.twin = None
+            self.ledger = SubstrateLedger(0.0, mode)
+            return
+        if mesh is None:
+            mesh = jax.sharding.Mesh(
+                np.asarray(jax.devices()[:1]), ("_substrate",))
+        if pool_pspec is None:
+            pool_pspec = jax.tree.map(lambda _: P(), twin)
+        host_kind = host_memory_kind if mode == "physical" else None
+        self._host_sh = shd.named(mesh, pool_pspec, memory_kind=host_kind)
+        self._dev_sh = shd.named(mesh, pool_pspec)
+        self.twin = jax.device_put(twin, self._host_sh)
+        first = jax.tree.leaves(self.twin)[0]
+        self.n_phys = int(first.shape[1])
+        # MEASURED page bytes: real array nbytes over the page axis, not
+        # the closed-form kv-byte walk (they agree to float rounding)
+        self.page_bytes = float(sum(
+            leaf.nbytes / leaf.shape[1]
+            for leaf in jax.tree.leaves(self.twin)))
+        self.ledger = SubstrateLedger(self.page_bytes, mode)
+        self._resident: set = set()
+
+        def page_out(twin, pool, ids):
+            return jax.tree.map(
+                lambda t, p: t.at[:, ids].set(p[:, ids]), twin, pool)
+
+        def page_in(twin, ids):
+            return jax.tree.map(lambda t: t[:, ids], twin)
+
+        # out_shardings pin the stream direction: page_out lands in the
+        # twin's (host) placement, page_in lands in device memory. The
+        # gathered page_in result keeps each leaf's rank, so the pool
+        # pspec applies unchanged.
+        self._page_out_fn = jax.jit(
+            page_out, out_shardings=self._host_sh, donate_argnums=0)
+        self._page_in_fn = jax.jit(
+            page_in, out_shardings=self._dev_sh)
+
+    # ----------------------------------------------------------- streams
+    def _pad_ids(self, ids) -> jnp.ndarray:
+        """Pad a page-id burst to the next power of two by repeating the
+        last id (duplicate scatter of identical data is a no-op) so the
+        transfer cells compile O(log n_phys) distinct shapes."""
+        n = len(ids)
+        m = 1 << max(0, n - 1).bit_length() if n else 1
+        arr = np.full(m, ids[-1], dtype=np.int32)
+        arr[:n] = ids
+        return jnp.asarray(arr)
+
+    def drain(self, pager, caches, *, step: int = 0) -> dict:
+        """Reconcile host placement against the pager's tier map: issue
+        the page_out / page_in / drop streams for every page whose
+        placement changed since the last drain. Async — call `sync()`
+        to wait on the issued transfers. Returns the per-kind page
+        counts of this drain."""
+        if not self.enabled:
+            return {}
+        target = set(pager.pool_page_ids().tolist())
+        outs = sorted(target - self._resident)
+        gone = self._resident - target
+        promoted = sorted(p for p in gone if pager.ref[p] > 0)
+        freed = sorted(p for p in gone if pager.ref[p] <= 0)
+        if freed:
+            self.ledger.record("drop", len(freed), step=step)
+        if promoted:
+            # gather BEFORE page_out donates (and thus invalidates) the
+            # current twin buffer
+            got = self._page_in_fn(self.twin, self._pad_ids(promoted))
+            self.ledger.record("page_in", len(promoted), step=step,
+                               payload=tuple(jax.tree.leaves(got)))
+        if outs:
+            self.twin = self._page_out_fn(
+                self.twin, _pool_leaves(caches, self.twin),
+                self._pad_ids(outs))
+            self.ledger.record("page_out", len(outs), step=step,
+                               payload=tuple(jax.tree.leaves(self.twin)))
+        self._resident = target
+        return {"page_out": len(outs), "page_in": len(promoted),
+                "drop": len(freed)}
+
+    def record_handoff(self, n_pages: int, *, step: int = 0) -> None:
+        """Account a fleet prefill->decode handoff copy (roles.py runs
+        the page copy along the physical axis; the substrate prices it
+        at measured page bytes). No placement change: the source pages
+        stay wherever their tier map says."""
+        if self.enabled and n_pages:
+            self.ledger.record("handoff", int(n_pages), step=step)
+
+    # -------------------------------------------------------- accounting
+    def sync(self) -> int:
+        """Complete every in-flight stream (block_until_ready)."""
+        return self.ledger.sync()
+
+    def counters(self) -> dict:
+        return self.ledger.counters()

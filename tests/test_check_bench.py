@@ -1,0 +1,124 @@
+"""Bench-regression gate hardening: every mishap the gate can meet —
+missing file, corrupt json, missing metric, non-numeric metric — must
+come back as a SKIP or a one-line failure string, never a traceback."""
+
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, "scripts")
+import check_bench  # noqa: E402
+
+
+RULE_MAX = ("BENCH_x.json", "row", "metric", "rel_max", 1.10)
+RULE_MIN = ("BENCH_x.json", "row", "metric", "rel_min", 0.90)
+RULE_ABS = ("BENCH_x.json", "row", "metric", "abs_max", 2.0)
+
+
+def _write(d, payload, name="BENCH_x.json"):
+    p = d / name
+    p.write_text(payload if isinstance(payload, str)
+                 else json.dumps(payload))
+    return d
+
+
+def _dirs(tmp_path, fresh_payload, base_payload):
+    fresh = tmp_path / "fresh"
+    base = tmp_path / "base"
+    fresh.mkdir(parents=True)
+    base.mkdir(parents=True)
+    if fresh_payload is not None:
+        _write(fresh, fresh_payload)
+    if base_payload is not None:
+        _write(base, base_payload)
+    return str(fresh), str(base)
+
+
+def _rows(val):
+    return {"rows": [{"tag": "row", "metric": val}]}
+
+
+def test_gate_passes_within_tolerance(tmp_path, capsys):
+    fresh, base = _dirs(tmp_path, _rows(1.05), _rows(1.0))
+    assert check_bench.check(fresh, base, [RULE_MAX]) == []
+    assert "OK" in capsys.readouterr().out
+
+
+def test_gate_fails_outside_tolerance(tmp_path):
+    fresh, base = _dirs(tmp_path, _rows(0.5), _rows(1.0))
+    fails = check_bench.check(fresh, base, [RULE_MIN])
+    assert len(fails) == 1 and "rel_min" in fails[0]
+
+
+def test_missing_file_skips_with_warning(tmp_path, capsys):
+    for fresh_p, base_p, who in [(None, _rows(1.0), "fresh"),
+                                 (_rows(1.0), None, "baseline")]:
+        fresh, base = _dirs(tmp_path / who, fresh_p, base_p)
+        assert check_bench.check(fresh, base, [RULE_MAX]) == []
+        out = capsys.readouterr().out
+        assert f"SKIP" in out and f"({who} file missing)" in out
+
+
+def test_missing_fresh_metric_is_clear_failure(tmp_path):
+    fresh, base = _dirs(tmp_path, {"rows": [{"tag": "row"}]}, _rows(1.0))
+    fails = check_bench.check(fresh, base, [RULE_MAX])
+    assert len(fails) == 1
+    assert "missing row.metric" in fails[0]
+    assert "renamed or dropped" in fails[0]
+
+
+def test_missing_baseline_metric_is_clear_failure(tmp_path):
+    fresh, base = _dirs(tmp_path, _rows(1.0), {"rows": []})
+    fails = check_bench.check(fresh, base, [RULE_MAX])
+    assert len(fails) == 1 and "regenerate" in fails[0]
+    # abs_max rules never consult the baseline: same dirs must pass
+    assert check_bench.check(fresh, base, [RULE_ABS]) == []
+
+
+def test_corrupt_fresh_file_is_failure_not_traceback(tmp_path):
+    fresh, base = _dirs(tmp_path, "{not json", _rows(1.0))
+    fails = check_bench.check(fresh, base, [RULE_MAX, RULE_ABS])
+    # one failure per unreadable FILE, not per rule
+    assert len(fails) == 1 and "unreadable" in fails[0]
+
+
+def test_wrong_toplevel_shape_is_failure(tmp_path):
+    fresh, base = _dirs(tmp_path, _rows(1.0), "[1, 2]")
+    fails = check_bench.check(fresh, base, [RULE_MAX])
+    assert len(fails) == 1 and "unreadable" in fails[0]
+
+
+@pytest.mark.parametrize("bad", ["fast", None, True, [1], {"x": 1}])
+def test_non_numeric_metric_is_clear_failure(tmp_path, bad):
+    fresh, base = _dirs(tmp_path, _rows(bad), _rows(1.0))
+    fails = check_bench.check(fresh, base, [RULE_MAX])
+    assert len(fails) == 1
+    assert "not numeric" in fails[0] and repr(bad) in fails[0]
+
+
+def test_non_numeric_baseline_metric_is_clear_failure(tmp_path):
+    fresh, base = _dirs(tmp_path, _rows(1.0), _rows("n/a"))
+    fails = check_bench.check(fresh, base, [RULE_MIN])
+    assert len(fails) == 1 and "baseline" in fails[0]
+
+
+def test_main_exit_codes(tmp_path, monkeypatch):
+    fresh, base = _dirs(tmp_path, _rows(1.0), _rows(1.0))
+    monkeypatch.setattr(check_bench, "RULES", [RULE_MAX])
+    assert check_bench.main(["--fresh", fresh, "--baselines", base]) == 0
+    monkeypatch.setattr(check_bench, "RULES", [RULE_MIN])
+    _write(tmp_path / "fresh", _rows(0.1))
+    assert check_bench.main(["--fresh", fresh, "--baselines", base]) == 1
+
+
+def test_repo_rules_reference_known_files():
+    """Every gated file must be a BENCH artifact the bench runner can
+    produce, and tolerances must be sane for their rule type."""
+    for fname, tag, metric, rule, tol in check_bench.RULES:
+        assert fname.startswith("BENCH_") and fname.endswith(".json")
+        assert rule in ("rel_max", "rel_min", "abs_max")
+        if rule == "rel_max":
+            assert tol >= 1.0
+        if rule == "rel_min":
+            assert tol <= 1.0

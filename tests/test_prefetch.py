@@ -311,3 +311,79 @@ def test_ghb_in_zoo_sweep_and_pager():
     c = p.counters()
     assert c["prefetch_useful"] > 0
     assert c["demand_share"] < 1.0
+
+
+# ------------------------------------------------- adaptive switching
+def _phased_trace():
+    """Two phases with different winning predictors: a sequential walk
+    (next_line/stride territory) followed by a repeating 12-page cycle
+    whose deltas defeat the stride confirmer, overflow next_line's
+    lookahead, and collide in the GHB's two-delta index — only the
+    first-order markov table (absolute-page successors are unique)
+    nails it. No fixed candidate aces both phases."""
+    steps = [[1000 + i] for i in range(80)]
+    cycle = [200, 210, 220, 500, 510, 520, 900, 910, 920, 40, 50, 60]
+    for lap in range(8):
+        steps.extend([[p] for p in cycle])
+    return steps
+
+
+def test_adaptive_switcher_beats_best_fixed_candidate():
+    """The satellite acceptance: on a phase-changing stream the
+    accuracy-tracked switcher must match or beat the best FIXED
+    predictor from its own candidate set."""
+    from repro.prefetch import AdaptiveSwitcher
+
+    steps = _phased_trace()
+    kw = dict(local=8, bw=4, degree=2)
+    fixed = {name: _run(steps, make_predictor(name), **kw)
+             for name in AdaptiveSwitcher.CANDIDATES}
+    adaptive = _run(steps, make_predictor("adaptive"), **kw)
+    best = min(r.remote_accesses for r in fixed.values())
+    assert adaptive.remote_accesses <= best, (
+        f"adaptive={adaptive.remote_accesses} vs best fixed={best} "
+        f"({ {n: r.remote_accesses for n, r in fixed.items()} })")
+    assert adaptive.coverage > 0.5
+
+
+def test_adaptive_switcher_shadow_scores_and_switches():
+    """All candidates observe and shadow-predict; only the active one's
+    predictions surface. A phase flip moves the active role within one
+    phase window, and the switch count records it."""
+    from repro.prefetch import AdaptiveSwitcher
+
+    sw = make_predictor("adaptive", phase_steps=8, window=32, ttl=4)
+    assert isinstance(sw, AdaptiveSwitcher)
+    assert sw.active == 0 and sw.switches == 0
+    _run(_phased_trace(), sw, local=8, bw=4, degree=2)
+    assert sw.switches >= 1
+    names = [c.name for c in sw.candidates]
+    assert names[sw.active] == "markov"        # phase-2 winner holds it
+    accs = sw.accuracies()
+    assert accs[sw.active] == max(accs)
+
+
+def test_adaptive_switcher_tie_keeps_incumbent():
+    """Equal windowed accuracy must not thrash the active role."""
+    from repro.prefetch import AdaptiveSwitcher
+
+    sw = AdaptiveSwitcher(phase_steps=4)
+    # sequential walk: next_line (candidate 0, the incumbent) and
+    # stride both reach accuracy 1 in shadow
+    _run([[100 + i] for i in range(40)], sw, local=8, bw=4, degree=2)
+    assert sw.candidates[sw.active].name == "next_line"
+    assert sw.switches == 0
+
+
+def test_adaptive_switcher_validation_and_pager_acceptance():
+    from repro.prefetch import AdaptiveSwitcher
+    from repro.serving import PagerConfig
+
+    with pytest.raises(ValueError, match="candidate"):
+        AdaptiveSwitcher(candidates=[])
+    with pytest.raises(ValueError, match=">= 1"):
+        AdaptiveSwitcher(window=0)
+    # the pager accepts "adaptive" as a page-in predictor name
+    PagerConfig(page_tokens=8, prefetch="adaptive")
+    with pytest.raises(ValueError, match="static"):
+        PagerConfig(page_tokens=8, prefetch="static")

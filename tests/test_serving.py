@@ -615,7 +615,7 @@ def test_paged_cache_write_parity_with_contiguous():
         ecfg = EngineConfig(
             n_slots=2, max_seq=48, prefill_buckets=(16,), page_tokens=8,
             hot_window=8, local_budget_frac=0.5, admission="greedy",
-            paged=paged,
+            paged=paged, pool_dtype="fp",    # byte parity needs exact pool
         )
         eng = ServingEngine.build(cfg, CTX, ecfg, params=params)
         reqs = _burst(2, cfg.vocab_size, 16, 24, seed=7)
@@ -661,7 +661,7 @@ def test_chunked_prefill_config_validation():
     with pytest.raises(ValueError, match="paged"):
         ServingEngine.build(cfg, CTX, EngineConfig(
             n_slots=2, max_seq=32, prefill_buckets=(8,), paged=False,
-            prefill_chunk=8,
+            pool_dtype="fp", prefill_chunk=8,
         ))
     with pytest.raises(ValueError, match="multiple"):
         ServingEngine.build(cfg, CTX, EngineConfig(
@@ -756,7 +756,7 @@ def test_paged_park_position_clears_partial_last_page():
         ecfg = EngineConfig(
             n_slots=2, max_seq=S, prefill_buckets=(8,), page_tokens=page,
             hot_window=8, local_budget_frac=None, admission="greedy",
-            paged=paged,
+            paged=paged, pool_dtype="fp",    # exact dense/paged token match
         )
         eng = ServingEngine.build(cfg, CTX, ecfg)
         rng = np.random.default_rng(13)
@@ -1189,7 +1189,7 @@ def test_engine_prefix_cache_config_validation():
     with pytest.raises(ValueError, match="paged"):
         ServingEngine.build(cfg, CTX, EngineConfig(
             n_slots=2, max_seq=32, prefill_buckets=(8,), paged=False,
-            prefix_cache=True,
+            pool_dtype="fp", prefix_cache=True,
         ))
     with pytest.raises(ValueError, match="attention-only"):
         ServingEngine.build(_cfg("mamba2_780m"), CTX, EngineConfig(
