@@ -22,6 +22,9 @@ tolerance type —
              not collapse: tok_per_s_virtual, prefix_hit_rate)
   abs_max  — fresh <= tol              (absolute ceilings, baseline
              ignored: policy-comparison ratios like p99_ratio)
+  abs_min  — fresh >= tol              (absolute floors, baseline
+             ignored: acceptance-bar ratios like the speculative
+             tokens/s gain)
 
 A baseline file that doesn't exist is skipped with a warning (lets a PR
 introduce a new bench before its first baseline lands); a MISSING row
@@ -55,6 +58,15 @@ RULES = [
      "abs_max", 0.30),
     ("BENCH_serve.json", "serve_chunked_vs_serial", "tok_s_ratio",
      "rel_min", 0.95),
+    # speculative decoding: the virtual tokens/s gain over the greedy
+    # lane is the tentpole bar (absolute floor, not baseline-relative),
+    # backed by the acceptance length and the per-token pager-bytes cut
+    ("BENCH_serve.json", "serve_speculative_vs_greedy", "tok_s_ratio",
+     "abs_min", 1.50),
+    ("BENCH_serve.json", "serve_speculative_vs_greedy", "accept_len_mean",
+     "rel_min", 0.90),
+    ("BENCH_serve.json", "serve_speculative_vs_greedy",
+     "bytes_per_token_ratio", "rel_max", 1.10),
     # physical-substrate traffic: measured transfer bytes must not grow,
     # and the pager-vs-ledger placement contract must hold exactly
     ("BENCH_serve.json", "serve_substrate", "transfer_bytes",
@@ -149,6 +161,9 @@ def check(fresh_dir: str, base_dir: str, rules=RULES) -> list:
         if rule == "abs_max":
             ok = fval <= tol
             detail = f"fresh={fval:.4g} ceiling={tol:.4g}"
+        elif rule == "abs_min":
+            ok = fval >= tol
+            detail = f"fresh={fval:.4g} floor={tol:.4g}"
         else:
             bval, err = _metric_value(base, tag, metric)
             if err == "missing":

@@ -47,6 +47,16 @@
         # with a STRICTLY higher aggregate prefix_hit_rate — the
         # router-side radix index keeps each system prompt's pages on
         # one engine instead of cold-missing on all of them
+    PYTHONPATH=src python scripts/dev_serve.py --speculative ngram \
+        --interpret a b
+        # the CI speculative-parity lane (attention-only archs): the
+        # paged engine with speculative decoding on (--speculative
+        # ngram: self-speculative n-gram proposer; --speculative draft:
+        # self-draft model proposer) must replay the plain greedy
+        # engine's token stream BIT-FOR-BIT on fp pools — proposers and
+        # the k-candidate verify cell may only change how many tokens
+        # each sweep commits, never which tokens. Also reports the mean
+        # acceptance length per verify step.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python scripts/dev_serve.py --mesh dp2tp2 --interpret a b
         # the CI sharded-parity lane: the paged engine jitted over a
@@ -212,6 +222,40 @@ def fleet_prefix(cfg, params, n_engines):
     return parity, hits["round_robin"], hits["prefix_aware"]
 
 
+def speculative_parity(cfg, params, mode):
+    """The speculative-parity lane: paged engine with speculation on vs
+    the plain greedy paged engine, token-for-token on fp pools. The
+    proposer (ngram or self-draft) and the k-candidate verify cell must
+    be invisible to the sampled tokens — only the per-sweep commit count
+    may differ. Returns (mismatch, accept_len_mean, verify_steps)."""
+    SGEN = 12
+    maxs = S + SGEN
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(4), (B, S), 0, cfg.vocab_size))
+
+    def serve(ecfg):
+        engine = ServingEngine.build(cfg, ctx, ecfg, params=params)
+        reqs = [
+            Request(request_id=i, tokens=prompts[i], max_new_tokens=SGEN,
+                    arrival=0.0)
+            for i in range(B)
+        ]
+        stats = engine.run(reqs)
+        return np.stack([np.asarray(r.output) for r in reqs]), stats
+
+    base = dict(
+        n_slots=B, max_seq=maxs, prefill_buckets=(S,), page_tokens=PAGE,
+        hot_window=8, local_budget_frac=0.5, admission="greedy",
+        paged=True, pool_dtype="fp",
+    )
+    ref, _ = serve(EngineConfig(**base))
+    got, stats = serve(EngineConfig(**base, speculative=mode,
+                                    speculative_k=4))
+    mismatch = int((ref != got).sum())
+    return (mismatch, stats.spec["accept_len_mean"],
+            stats.spec["verify_steps"])
+
+
 def mesh_parity(cfg, params, dp, tp, pool_dtype):
     """The sharded-parity lane: the paged engine jitted over a forced
     dp x tp host mesh (KV heads over `model`, slots over `data`, block
@@ -293,6 +337,11 @@ def main():
         i = args.index("--fleet")
         fleet_n = int(args[i + 1])
         del args[i:i + 2]
+    spec_mode = None
+    if "--speculative" in args:
+        i = args.index("--speculative")
+        spec_mode = args[i + 1]
+        del args[i:i + 2]
     mesh_spec = None
     if "--mesh" in args:
         i = args.index("--mesh")
@@ -326,6 +375,32 @@ def main():
                   f"{stats.summary().get('substrate_transfer_bytes', 0):.0f}"
                   f" {status}")
             assert status == "OK ", arch
+        print("ALL OK")
+        return
+
+    if spec_mode:
+        ran = 0
+        for arch in archs:
+            cfg = dataclasses.replace(configs.reduced(arch),
+                                      dtype="float32")
+            if not chunked_prefill_supported(cfg):
+                # verify flattens slots -> slots*k token rows, which
+                # per-slot SSM/conv state cannot follow — speculation is
+                # attention-only by construction
+                print(f"{arch:28s} speculative={spec_mode} SKIP "
+                      f"(needs attention-only cache)")
+                continue
+            params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+            mismatch, accept, vsteps = speculative_parity(
+                cfg, params, spec_mode)
+            ok = mismatch == 0
+            status = "OK " if ok else "FAIL"
+            ran += 1
+            print(f"{arch:28s} speculative={spec_mode} "
+                  f"mismatch={mismatch} accept_len={accept:.2f} "
+                  f"verify_steps={vsteps} {status}")
+            assert status == "OK ", arch
+        assert ran, "no attention-only arch ran the speculative lane"
         print("ALL OK")
         return
 

@@ -83,7 +83,8 @@ POOL_SZ_BYTES = 8               # float32 (scale, zero)
 
 def kv_pool_token_bytes(n_attn_layers: int, kv_heads: int, head_dim: int,
                         page_tokens: int, pool_dtype: str,
-                        fp_bytes: int = 4) -> float:
+                        fp_bytes: int = 4,
+                        sz_granularity: str = "page") -> float:
     """Self-attention K/V bytes per cached token under a paged pool of
     `pool_dtype` — the closed-form twin of the serving engine's
     cache-tree walk (`serving.engine._kv_bytes_per_token`):
@@ -94,12 +95,19 @@ def kv_pool_token_bytes(n_attn_layers: int, kv_heads: int, head_dim: int,
     `fp_bytes` is the compute dtype's itemsize (the "fp" safety-net pool
     stores it unchanged). This is what makes the pager, `phys_tiers()`
     and the admission corridor see the real ~4x pool-byte cut of int8
-    pools instead of pricing fp bytes that never cross the link."""
+    pools instead of pricing fp bytes that never cross the link.
+
+    `sz_granularity="token"` prices the speculative-decoding per-token
+    sub-scale layout (`kernels.quant.quantize_tokens`): one (scale,
+    zero) pair per token row instead of per page, so the int8 sz term
+    loses its /page_tokens amortization."""
     payload = POOL_PAYLOAD_BYTES.get(pool_dtype, fp_bytes)
     per_tok = 2.0 * kv_heads * head_dim * payload * n_attn_layers
     if pool_dtype == "int8":
-        per_tok += (2.0 * kv_heads * POOL_SZ_BYTES * n_attn_layers
-                    / page_tokens)
+        sz = 2.0 * kv_heads * POOL_SZ_BYTES * n_attn_layers
+        if sz_granularity != "token":
+            sz /= page_tokens
+        per_tok += sz
     return per_tok
 
 

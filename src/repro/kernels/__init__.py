@@ -10,7 +10,9 @@ Each kernel package ships three modules:
 Kernels: lbench (the paper's interference/roofline kernel), flash_attention
 (prefill), decode_attention (single-token vs long KV; `paged.py` adds the
 block-index-map variant over non-contiguous KV pages, fed by
-`serving.kv_pager.KVPager.block_table`), ssd_scan (Mamba2 SSD).
+`serving.kv_pager.KVPager.block_table`), ssd_scan (Mamba2 SSD),
+matmul_w8a8 (megacore-partitioned int8 W8A8 matmul matching the int8
+pool default).
 """
 
 from __future__ import annotations

@@ -53,9 +53,12 @@ def _flash_update(s, v, acc, m_sc, l_sc):
 
 
 def _kernel(*refs, page: int, scale: float, n_pages: int, rep: int,
-            quantized: bool):
-    if quantized:
+            sz_mode: str):
+    if sz_mode == "page":
         (bt_ref, len_ref, ksz_ref, vsz_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
+    elif sz_mode == "token":
+        (bt_ref, len_ref, q_ref, k_ref, v_ref, ksz_ref, vsz_ref, o_ref,
          acc, m_sc, l_sc) = refs
     else:
         (bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -72,13 +75,19 @@ def _kernel(*refs, page: int, scale: float, n_pages: int, rep: int,
     q = q_ref[0, 0, :].astype(jnp.float32)            # (D,)
     k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
-    if quantized:
+    if sz_mode == "page":
         # fused dequant epilogue: the page's (scale, zero) scalars sit in
         # SMEM next to the block table entry that fetched it
         pid = bt_ref[b, pi]
         kvh = pl.program_id(1) // rep
         k = k * ksz_ref[pid, kvh, 0] + ksz_ref[pid, kvh, 1]
         v = v * vsz_ref[pid, kvh, 0] + vsz_ref[pid, kvh, 1]
+    elif sz_mode == "token":
+        # per-token sub-scales travel as VMEM tensor blocks next to the
+        # page payload (one (page, 2) tile per grid step, same
+        # bt-chasing index map), dequantized row-wise
+        k = k * ksz_ref[0, :, 0, 0][:, None] + ksz_ref[0, :, 0, 1][:, None]
+        v = v * vsz_ref[0, :, 0, 0][:, None] + vsz_ref[0, :, 0, 1][:, None]
 
     s = (k @ q) * scale                               # (page,)
     pos = pi * page + jax.lax.iota(jnp.int32, page)   # logical positions
@@ -104,16 +113,25 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
     `block_tables[b, i]`. Entries past the valid length must be in
     [0, P_phys) — use ops.paged_decode_mha, which clamps.
 
-    With `k_sz`/`v_sz` (P_phys, KV, 2) float32 per-page (scale, zero)
-    arrays, the pool payload is int8 and the kernel dequantizes each
-    gathered page in the epilogue (`repro.kernels.quant` layout)."""
+    With `k_sz`/`v_sz` float32 (scale, zero) arrays, the pool payload is
+    int8 and the kernel dequantizes each gathered page in the epilogue
+    (`repro.kernels.quant` layout). The sz grain dispatches on rank:
+    per-page (P_phys, KV, 2) rides the scalar-prefetch channel;
+    per-token (P_phys, page, KV, 2) — the speculative-decoding
+    sub-scale layout — travels as regular tensor operands whose
+    BlockSpec chases the same block-table entry as the payload."""
     from jax.experimental.pallas import tpu as pltpu
 
     B, H, D = q.shape
     _, page, KV, _ = k_pages.shape
     n_pages = block_tables.shape[1]
     rep = H // KV
-    quantized = k_sz is not None
+    if k_sz is None:
+        sz_mode = "none"
+    elif jnp.ndim(k_sz) == k_pages.ndim:
+        sz_mode = "token"
+    else:
+        sz_mode = "page"
     scale = scale if scale is not None else D ** -0.5
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     block_tables = jnp.asarray(block_tables, jnp.int32)
@@ -122,16 +140,26 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
         (1, page, 1, D),
         (lambda b, h, pi, bt, ln, *sz, rep=rep: (bt[b, pi], 0, h // rep, 0)),
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, D),
+                     lambda b, h, pi, bt, ln, *sz: (b, h, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = (q, k_pages, v_pages)
+    if sz_mode == "token":
+        sz_spec = pl.BlockSpec(
+            (1, page, 1, 2),
+            (lambda b, h, pi, bt, ln, rep=rep: (bt[b, pi], 0, h // rep, 0)),
+        )
+        in_specs += [sz_spec, sz_spec]
+        operands += (jnp.asarray(k_sz, jnp.float32),
+                     jnp.asarray(v_sz, jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         # block tables + lengths (+ per-page k/v (scale, zero) when int8)
-        num_scalar_prefetch=4 if quantized else 2,
+        num_scalar_prefetch=4 if sz_mode == "page" else 2,
         grid=(B, H, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, D),
-                         lambda b, h, pi, bt, ln, *sz: (b, h, 0)),
-            page_spec,
-            page_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, D),
                                lambda b, h, pi, bt, ln, *sz: (b, h, 0)),
         scratch_shapes=[
@@ -141,16 +169,19 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
         ],
     )
     scalars = (block_tables, lengths)
-    if quantized:
+    if sz_mode == "page":
         scalars += (jnp.asarray(k_sz, jnp.float32),
                     jnp.asarray(v_sz, jnp.float32))
     return pl.pallas_call(
         functools.partial(_kernel, page=page, scale=scale, n_pages=n_pages,
-                          rep=rep, quantized=quantized),
+                          rep=rep, sz_mode=sz_mode),
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
         compiler_params=pltpu.CompilerParams(
+            # MEGACORE partitioning: batch and head grid dimensions are
+            # "parallel" so Mosaic splits them across TensorCores; only
+            # the page dimension is sequential (online-softmax carry)
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ) if not interpret else None,
-    )(*scalars, q, k_pages, v_pages)
+    )(*scalars, *operands)

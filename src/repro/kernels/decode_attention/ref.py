@@ -28,15 +28,20 @@ def gather_pages(pages: jnp.ndarray, block_tables) -> jnp.ndarray:
 def gather_pages_q8(pages: jnp.ndarray, sz: jnp.ndarray, block_tables,
                     dtype=jnp.float32) -> jnp.ndarray:
     """`gather_pages` for a block-quantized pool: int8 payload
-    (P_phys, page, KV, D) plus per-page (scale, zero) ``sz``
-    (P_phys, KV, 2) float32 (`repro.kernels.quant` layout), dequantized
-    to a dense (B, S, KV, D) cache."""
+    (P_phys, page, KV, D) plus (scale, zero) ``sz`` float32
+    (`repro.kernels.quant` layout), dequantized to a dense (B, S, KV, D)
+    cache. The sz grain is dispatched on rank: per-page
+    (P_phys, KV, 2) or per-token (P_phys, page, KV, 2) — the
+    speculative-decoding sub-scale layout."""
     from repro.kernels import quant
 
     block_tables = jnp.asarray(block_tables, jnp.int32)
     g = pages[block_tables]                 # (B, n_logical, page, KV, D)
-    s = sz[block_tables]                    # (B, n_logical, KV, 2)
-    d = quant.dequantize_pages(g, s, dtype=dtype)
+    s = sz[block_tables]
+    if sz.ndim == pages.ndim:               # per-token sub-scales
+        d = quant.dequantize_tokens(g, s, dtype=dtype)
+    else:                                   # per-page (B, n, KV, 2)
+        d = quant.dequantize_pages(g, s, dtype=dtype)
     B, n, page, KV, D = d.shape
     return d.reshape(B, n * page, KV, D)
 

@@ -96,10 +96,13 @@ def _finalize(o_ref, acc, l_sc, pi, n_pages):
 
 
 def _gather_kernel(*refs, page: int, chunk: int, scale: float,
-                   n_pages: int, rep: int, quantized: bool):
+                   n_pages: int, rep: int, sz_mode: str):
     """Attention only; the chunk's K/V is already in the pool."""
-    if quantized:
+    if sz_mode == "page":
         (bt_ref, c0_ref, ksz_ref, vsz_ref, q_ref, k_ref, v_ref, o_ref,
+         acc, m_sc, l_sc) = refs
+    elif sz_mode == "token":
+        (bt_ref, c0_ref, q_ref, k_ref, v_ref, ksz_ref, vsz_ref, o_ref,
          acc, m_sc, l_sc) = refs
     else:
         (bt_ref, c0_ref, q_ref, k_ref, v_ref, o_ref,
@@ -124,10 +127,17 @@ def _gather_kernel(*refs, page: int, chunk: int, scale: float,
         q = q_ref[0, :, 0, :].astype(jnp.float32)      # (C, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        if quantized:
+        if sz_mode == "page":
             pid = bt_ref[b, pi]
             k = k * ksz_ref[pid, kvh, 0] + ksz_ref[pid, kvh, 1]
             v = v * vsz_ref[pid, kvh, 0] + vsz_ref[pid, kvh, 1]
+        elif sz_mode == "token":
+            # per-token sub-scales: a (page, 2) VMEM tile per grid step,
+            # fetched through the same block-table chase as the payload
+            k = (k * ksz_ref[0, :, 0, 0][:, None]
+                 + ksz_ref[0, :, 0, 1][:, None])
+            v = (v * vsz_ref[0, :, 0, 0][:, None]
+                 + vsz_ref[0, :, 0, 1][:, None])
         _tile_update(q, k, v, c0, pi, page=page, chunk=chunk, scale=scale,
                      acc=acc, m_sc=m_sc, l_sc=l_sc)
 
@@ -260,15 +270,23 @@ def paged_prefill_flash(q, k_pages, v_pages, block_tables, c0, *,
     int32 chunk starts. Causal: query i attends to positions <= c0+i.
     The chunk's own K/V must already be written into the pool. Entries
     past the causal frontier must be in [0, P_phys) — use
-    ops.paged_prefill_mha, which clamps. `k_sz`/`v_sz` (P_phys, KV, 2)
-    float32 switch on the int8 dequant epilogue."""
+    ops.paged_prefill_mha, which clamps. `k_sz`/`v_sz` float32 switch on
+    the int8 dequant epilogue; their grain dispatches on rank: per-page
+    (P_phys, KV, 2) rides the scalar-prefetch channel, per-token
+    (P_phys, page, KV, 2) travels as tensor operands block-indexed
+    through the same table chase as the payload."""
     from jax.experimental.pallas import tpu as pltpu
 
     B, C, H, D = q.shape
     _, page, KV, _ = k_pages.shape
     n_pages = block_tables.shape[1]
     rep = H // KV
-    quantized = k_sz is not None
+    if k_sz is None:
+        sz_mode = "none"
+    elif jnp.ndim(k_sz) == k_pages.ndim:
+        sz_mode = "token"
+    else:
+        sz_mode = "page"
     scale = scale if scale is not None else D ** -0.5
     c0 = jnp.broadcast_to(jnp.asarray(c0, jnp.int32), (B,))
     block_tables = jnp.asarray(block_tables, jnp.int32)
@@ -278,34 +296,47 @@ def paged_prefill_flash(q, k_pages, v_pages, block_tables, c0, *,
         (lambda b, h, pi, bt, c0, *sz, rep=rep:
          (bt[b, pi], 0, h // rep, 0)),
     )
+    in_specs = [
+        pl.BlockSpec((1, C, 1, D),
+                     lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = (q, k_pages, v_pages)
+    if sz_mode == "token":
+        sz_spec = pl.BlockSpec(
+            (1, page, 1, 2),
+            (lambda b, h, pi, bt, c0, rep=rep:
+             (bt[b, pi], 0, h // rep, 0)),
+        )
+        in_specs += [sz_spec, sz_spec]
+        operands += (jnp.asarray(k_sz, jnp.float32),
+                     jnp.asarray(v_sz, jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         # block tables + c0 (+ per-page k/v (scale, zero) when int8)
-        num_scalar_prefetch=4 if quantized else 2,
+        num_scalar_prefetch=4 if sz_mode == "page" else 2,
         grid=(B, H, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, C, 1, D),
-                         lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
-            page_spec,
-            page_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, 1, D),
                                lambda b, h, pi, bt, c0, *sz: (b, 0, h, 0)),
         scratch_shapes=_scratch(C, D),
     )
     scalars = (block_tables, c0)
-    if quantized:
+    if sz_mode == "page":
         scalars += (jnp.asarray(k_sz, jnp.float32),
                     jnp.asarray(v_sz, jnp.float32))
     return pl.pallas_call(
         functools.partial(_gather_kernel, page=page, chunk=C, scale=scale,
-                          n_pages=n_pages, rep=rep, quantized=quantized),
+                          n_pages=n_pages, rep=rep, sz_mode=sz_mode),
         out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
         compiler_params=pltpu.CompilerParams(
+            # MEGACORE partitioning: batch and head dims "parallel";
+            # only the page walk is sequential (online-softmax carry)
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ) if not interpret else None,
-    )(*scalars, q, k_pages, v_pages)
+    )(*scalars, *operands)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))

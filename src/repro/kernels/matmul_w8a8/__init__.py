@@ -1,0 +1,5 @@
+from repro.kernels.matmul_w8a8.ops import quantize_rows  # noqa: F401
+
+# the W8A8 op itself lives in ops.py; import it from there
+# (`repro.kernels.matmul_w8a8.ops.matmul_w8a8`) — re-exporting it here
+# would shadow the same-named kernel submodule on the package.

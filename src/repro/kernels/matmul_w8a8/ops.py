@@ -1,0 +1,63 @@
+"""Public W8A8 int8 matmul op. Dispatches pallas / interpret / reference
+via `kernels.select_impl`; zero-pads ragged shapes to block multiples
+(zero rows and columns contract to zero, so the visible (M, N) slice is
+unchanged)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import select_impl
+from repro.kernels.matmul_w8a8 import ref
+from repro.kernels.matmul_w8a8.ref import quantize_rows  # noqa: F401
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "impl"),
+)
+def matmul_w8a8(
+    a8,
+    b8,
+    sa,
+    sb,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    impl: Optional[str] = None,
+):
+    """int8 activation/weight matmul with symmetric per-row / per-column
+    scales: a8 (M, K) int8, b8 (K, N) int8, sa (M,) float32, sb (N,)
+    float32 -> (M, N) float32. Quantize fp operands with
+    `quantize_rows`: ``quantize_rows(a)`` reduces each activation row
+    over K; ``quantize_rows(w, axis=0)`` reduces each weight column
+    over K."""
+    kind, interpret = select_impl(impl)
+    if kind == "reference":
+        return ref.matmul_w8a8(a8, b8, sa, sb)
+    from repro.kernels.matmul_w8a8 import matmul_w8a8 as mm
+
+    M, N = a8.shape[0], b8.shape[1]
+    a8p = _pad_to(_pad_to(a8, block_m, 0), block_k, 1)
+    b8p = _pad_to(_pad_to(b8, block_k, 0), block_n, 1)
+    sap = _pad_to(jnp.asarray(sa, jnp.float32), block_m, 0)
+    sbp = _pad_to(jnp.asarray(sb, jnp.float32), block_n, 0)
+    out = mm.matmul_w8a8_pallas(
+        a8p, b8p, sap, sbp, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )
+    return out[:M, :N]

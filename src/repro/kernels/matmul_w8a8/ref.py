@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the W8A8 int8 matmul cell.
+
+Symmetric per-row / per-column quantization: activations carry one
+float32 scale per row (reduced over K), weights one per output column,
+so the int32 accumulator dequantizes with a rank-1 outer product of
+scales in the epilogue — no zero-point cross terms, which is what keeps
+the whole contraction on the int8 MXU path. `MIN_SCALE` keeps all-zero
+rows exact (q == 0 -> 0.0), mirroring `repro.kernels.quant`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.quant import INT8_QMAX, MIN_SCALE
+
+
+def quantize_rows(x: jnp.ndarray, axis: int = -1):
+    """Symmetric int8 quantization of ``x`` with one scale per slice
+    along ``axis``: scale = max|x| / 127 (floored at MIN_SCALE).
+    Returns ``(q8, scale)`` with ``scale`` shaped like ``x`` minus
+    ``axis``."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(x).max(axis=axis) / INT8_QMAX, MIN_SCALE)
+    q = jnp.round(x / jnp.expand_dims(scale, axis))
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8), scale
+
+
+def matmul_w8a8(a8: jnp.ndarray, b8: jnp.ndarray, sa: jnp.ndarray,
+                sb: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """int8 x int8 -> int32 -> scaled float: a8 (M, K), b8 (K, N),
+    sa (M,) per-row activation scales, sb (N,) per-column weight
+    scales. Returns (M, N) in ``dtype``."""
+    acc = jnp.dot(a8.astype(jnp.int32), b8.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * sa[:, None] * sb[None, :]
+    return out.astype(dtype)

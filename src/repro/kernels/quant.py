@@ -76,3 +76,35 @@ def dequantize_pages(q8: jnp.ndarray, sz: jnp.ndarray,
     """Inverse of `quantize_pages`: ``q8`` ``(..., page, KV, hd)``,
     ``sz`` ``(..., KV, 2)``."""
     return dequantize(q8, _per_page(sz), dtype=dtype)
+
+
+# ---------------------------------------------------- per-token sub-scales
+# The speculative-decoding hot-page layout: one (scale, zero) pair per
+# (token row, KV head) instead of per (page, KV head). A token write is
+# then a pure disjoint scatter — quantize the token over head_dim, land
+# payload + sz row — with NO dequant->modify->requantize round trip over
+# the page, so a verify step can land all k candidate tokens of a slot in
+# one collision-free scatter. Costs page_tokens x more sz bytes per page
+# (`core.access.kv_pool_token_bytes(..., sz_granularity="token")`); the
+# engine selects it only when speculative decoding is on.
+
+
+def token_sz(x: jnp.ndarray) -> jnp.ndarray:
+    """(scale, zero) per token row: reduce over the trailing head_dim
+    only. ``x`` ``(..., hd)`` -> ``(..., 2)`` float32."""
+    return page_sz(x, axis=(-1,))
+
+
+def quantize_tokens(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize token rows ``(..., hd)`` with one (scale, zero) per row.
+    Returns ``(q8, sz)`` with ``q8`` matching ``x.shape`` in int8 and
+    ``sz`` ``(..., 2)``."""
+    sz = token_sz(x)
+    return quantize(x, sz[..., None, :]), sz
+
+
+def dequantize_tokens(q8: jnp.ndarray, sz: jnp.ndarray,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of `quantize_tokens`: ``q8`` ``(..., hd)``, ``sz``
+    ``(..., 2)`` broadcasting the row's pair over head_dim."""
+    return dequantize(q8, sz[..., None, :], dtype=dtype)

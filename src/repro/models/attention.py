@@ -231,13 +231,27 @@ def paged_quant_cache_insert(pool, sz, new, t, block_table,
     One page per slot per step — the hot tail the pager keeps local —
     and rows whose range did not move requantize onto the identical int8
     grid, so steady pages round-trip bit-stably. Parked positions drop
-    exactly like the fp path. Returns (pool, sz)."""
+    exactly like the fp path. Returns (pool, sz).
+
+    With PER-TOKEN sub-scales (`sz` ranked like the pool itself:
+    (P_phys, page, KV, 2) — the speculative-decoding hot-page layout)
+    the round trip disappears entirely: each token row quantizes against
+    its own (scale, zero) over head_dim and lands payload + sz row as a
+    pure disjoint scatter, so a verify step's k rows per slot (distinct
+    positions, hence distinct (page, offset) targets) never collide and
+    nothing already stored is ever re-quantized."""
     from repro.kernels import quant
 
     B = new.shape[0]
     t = jnp.asarray(t)
     t_vec = (t if t.ndim else jnp.full((B,), t)).astype(jnp.int32)
     phys, in_range, off = _page_coords(t_vec, block_table, page_tokens)
+    if sz.ndim == pool.ndim:                 # per-token sub-scales
+        q8, tsz = quant.quantize_tokens(new[:, 0].astype(jnp.float32))
+        phys_w = jnp.where(in_range, phys, pool.shape[0])  # OOB -> dropped
+        pool = pool.at[phys_w, off].set(q8, mode="drop")
+        sz = sz.at[phys_w, off].set(tsz, mode="drop")
+        return pool, sz
     phys_r = jnp.where(in_range, phys, 0)        # safe gather, discarded
     page_q = pool[phys_r]                        # (B, page, KV, hd) int8
     page_f = quant.dequantize_pages(page_q, sz[phys_r])
@@ -343,7 +357,29 @@ def paged_prefill_chunk_attention(
     positions = c0 + jnp.broadcast_to(jnp.arange(C)[None, :], (B, C))
     q, k, v = _qkv(params, x, cfg, positions, rope)
     quantized = "k_sz" in cache
-    if quantized:
+    if quantized and cache["k_sz"].ndim == cache["k"].ndim:
+        # per-token sub-scale pool (speculative decoding): quantize each
+        # chunk token row against its own (scale, zero), whole-page
+        # scatter payload + sz rows, then gather-attend — the fused
+        # insert kernel stays per-page-only, and chunked prefill is off
+        # the decode hot loop so the unfused write is acceptable here
+        from repro.kernels import quant
+
+        k8, ksz = quant.quantize_tokens(k.astype(jnp.float32))
+        v8, vsz = quant.quantize_tokens(v.astype(jnp.float32))
+        k_pool = paged_chunk_insert(cache["k"], k8, c0, block_row,
+                                    page_tokens)
+        v_pool = paged_chunk_insert(cache["v"], v8, c0, block_row,
+                                    page_tokens)
+        k_sz = paged_chunk_insert(cache["k_sz"], ksz, c0, block_row,
+                                  page_tokens)
+        v_sz = paged_chunk_insert(cache["v_sz"], vsz, c0, block_row,
+                                  page_tokens)
+        out = flash_ops.paged_prefill_mha(
+            q, k_pool, v_pool, block_row, c0, k_sz=k_sz, v_sz=v_sz,
+        )
+        updates = {"k": k_pool, "v": v_pool, "k_sz": k_sz, "v_sz": v_sz}
+    elif quantized:
         from repro.kernels import quant
 
         n_wp = C // page_tokens

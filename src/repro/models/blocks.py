@@ -200,7 +200,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
 
 def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
                       page_tokens: int, cross: bool = False,
-                      enc_len: int = 0, pool_dtype: str = "fp"):
+                      enc_len: int = 0, pool_dtype: str = "fp",
+                      sz_granularity: str = "page"):
     """Decode caches with self-attention K/V laid out as a PHYSICAL page
     pool: (nb, n_slots * n_pages, page_tokens, KV, hd) instead of the
     per-slot contiguous (nb, n_slots, max_seq, KV, hd). Each valid
@@ -211,18 +212,32 @@ def init_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
 
     `pool_dtype` picks the pool payload (see `POOL_DTYPES`): "fp" keeps
     cfg.dtype bit-identically; "bf16" stores a 2-byte cast; "int8" stores
-    int8 payload plus per-page (nb, n_phys_pages, KV, 2) float32
-    (scale, zero) arrays as "k_sz"/"v_sz" leaves."""
+    int8 payload plus float32 (scale, zero) arrays as "k_sz"/"v_sz"
+    leaves. `sz_granularity` picks the quantization grain of those
+    leaves: "page" (default) stores one pair per (physical page, KV head)
+    — (nb, p_phys, KV, 2); "token" stores one pair per (page row, KV
+    head) — (nb, p_phys, page_tokens, KV, 2) — the speculative-decoding
+    hot-page layout whose token writes are pure disjoint scatters
+    (`kernels.quant.quantize_tokens`). The kernels dispatch on the static
+    rank of the sz leaf, so both layouts flow through the same cells."""
+    if sz_granularity not in ("page", "token"):
+        raise ValueError(f"unknown sz_granularity {sz_granularity!r}; "
+                         "expected 'page' or 'token'")
     descs = pattern(cfg, cross)
     nb = cfg.num_layers // len(descs)
     n_pages = -(-max_seq // page_tokens)       # ceil
     p_phys = n_slots * n_pages
+    if pool_dtype != "int8":
+        sz_shape = None
+    elif sz_granularity == "token":
+        sz_shape = (nb, p_phys, page_tokens, cfg.num_kv_heads, 2)
+    else:
+        sz_shape = (nb, p_phys, cfg.num_kv_heads, 2)
     return init_caches(
         cfg, n_slots, max_seq, cross=cross, enc_len=enc_len,
         kv_shape=(nb, p_phys, page_tokens, cfg.num_kv_heads, cfg.head_dim),
         kv_dtype=pool_kv_dtype(cfg, pool_dtype),
-        kv_sz_shape=((nb, p_phys, cfg.num_kv_heads, 2)
-                     if pool_dtype == "int8" else None),
+        kv_sz_shape=sz_shape,
     )
 
 

@@ -191,13 +191,15 @@ def make_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
 
 def make_paged_decode_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
                              page_tokens: int, enc_len: int = 0,
-                             pool_dtype: str = "fp"):
+                             pool_dtype: str = "fp",
+                             sz_granularity: str = "page"):
     """Decode caches with self-attention K/V as a physical page pool
     (see blocks.init_paged_caches); the serving engine's paged layout.
     `pool_dtype` ("fp" | "bf16" | "int8") picks the pool payload; int8
-    adds the per-page (scale, zero) leaves."""
+    adds the (scale, zero) leaves at `sz_granularity` ("page" default,
+    "token" for the speculative-decoding per-token sub-scale pool)."""
     return blocks.init_paged_caches(
         cfg, n_slots, max_seq, page_tokens,
         cross=bool(cfg.num_encoder_layers), enc_len=enc_len,
-        pool_dtype=pool_dtype,
+        pool_dtype=pool_dtype, sz_granularity=sz_granularity,
     )

@@ -43,7 +43,32 @@ cache dicts carry per-page float32 (scale, zero) leaves ("k_sz"/"v_sz",
 (nb, n_slots * n_pages, KV, 2), `repro.kernels.quant`), the insert and
 chunk cells quantize whole pages on the way in (the decode cell
 requantizes the slot's tail page around each new token), and both paged
-kernels dequantize in their gather epilogue. Bytes per cached token =
+kernels dequantize in their gather epilogue. `sz_granularity="token"`
+swaps the per-page (scale, zero) rows for PER-TOKEN sub-scales
+((nb, P, page_tokens, KV, 2) — rank-dispatched everywhere on
+`sz.ndim == pool.ndim`): each cached token quantizes independently over
+its head dim, so inserting a token is a pure disjoint scatter with no
+read-modify-write of the page's neighbours — the layout speculative
+verify requires (k candidate rows of one slot land in the same tail
+page concurrently) and the KV-side twin of the W8A8 activation-row
+quantization in `kernels/matmul_w8a8`.
+
+SPECULATIVE DECODING: `build_decode_verify_paged` scores k candidate
+tokens per slot in ONE paged-decode call by flattening (S, k)
+candidates to S*k decode rows with vector positions t[s]+j and
+k-repeated block-table rows. Greedy acceptance
+(`serving.speculative.accept_greedy`) emits the longest candidate
+prefix that matches what greedy decode would have produced — bit-
+identical token streams by construction — so each sweep of the pool-
+resident KV pages is amortized over `1 + accepted` tokens instead of
+exactly one (decode is the lowest-arithmetic-intensity loop in the
+system; this is the AI lever). Proposers live in `serving.speculative`:
+"ngram" (self-speculative suffix matching over the slot's own history,
+zero extra parameters) and "draft" (a small draft model decoded by
+`build_decode_draft` against its own contiguous caches, weights shared
+across a fleet through `EngineCells`). Rejected positions leave garbage
+KV beyond the frontier; every kernel already masks beyond the slot
+length and `KVPager.truncate` rolls back the page accounting. Bytes per cached token =
 2 * KV * hd * payload_bytes * nb (+ 2 * KV * 8 * nb / page_tokens for
 the int8 scale arrays) — `core.access.kv_pool_token_bytes` — which is
 what the pager and admission corridor price.
@@ -203,11 +228,12 @@ def chunked_prefill_supported(cfg: ModelConfig) -> bool:
 
 def abstract_paged_caches(cfg: ModelConfig, n_slots: int, max_seq: int,
                           page_tokens: int, enc_len: int = 0,
-                          pool_dtype: str = "fp"):
+                          pool_dtype: str = "fp",
+                          sz_granularity: str = "page"):
     return jax.eval_shape(
         lambda: M.make_paged_decode_caches(
             cfg, n_slots, max_seq, page_tokens, enc_len,
-            pool_dtype=pool_dtype,
+            pool_dtype=pool_dtype, sz_granularity=sz_granularity,
         )
     )
 
@@ -259,6 +285,56 @@ def build_decode_greedy_paged(cfg: ModelConfig, ctx: ParallelCtx,
     return cell
 
 
+def build_decode_verify_paged(cfg: ModelConfig, ctx: ParallelCtx,
+                              page_tokens: int, k: int):
+    """SPECULATIVE VERIFY cell: score k candidate tokens per slot in ONE
+    paged-decode call — the vector-`t` extension of
+    `build_decode_greedy_paged` that amortizes each sweep of the
+    pool-resident KV pages over k tokens instead of one (the
+    arithmetic-intensity lever the paper's pooled-memory corridor prices;
+    greedy decode is the lowest-AI loop in the system).
+
+    Contract: `cand` (S, k) int32 with cand[s, 0] the slot's last emitted
+    (not yet inserted) token and cand[s, 1:] the proposer's drafts; `t`
+    (S,) the position cand[s, 0] will occupy. The (S, k) batch flattens
+    to S*k decode rows: row j of slot s feeds cand[s, j] at position
+    t[s]+j against the slot's OWN block-table row (repeated k times), so
+    the flattened KV insert lands all k candidate tokens before
+    attention and row j's length mask (t+j+1) lets it see candidates
+    0..j — teacher-forced causal scoring. Returns (greedy (S, k) int32,
+    finite (S,), caches) where greedy[s, j] is the model's pick FOR
+    position t[s]+j+1, i.e. the token that follows cand[s, j]:
+
+        accept a = max prefix with cand[s, i+1] == greedy[s, i];
+        emit greedy[s, 0..a] (a+1 tokens) — bit-identical to running
+        greedy decode a+1 times, by construction.
+
+    Positions t+e..t+k-1 of a partially-accepted slot hold wrong-token
+    KV afterwards; every kernel masks them out (length <= frontier) and
+    the next verify call overwrites them, so only the pager's page
+    accounting needs rollback (`KVPager.truncate`). int8 pools MUST use
+    the per-token sub-scale layout (`sz_granularity="token"`): the
+    per-page requantize round trip would make a slot's k rows
+    read-modify-write the same tail page concurrently."""
+
+    def cell(params, cand, caches, t, block_table):
+        S = cand.shape[0]
+        tok_flat = cand.reshape(S * k)
+        t_flat = (
+            t[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+        ).reshape(S * k)
+        bt_flat = jnp.repeat(block_table, k, axis=0)
+        logits, caches = M.decode_step(
+            params, tok_flat, caches, t_flat, cfg, ctx,
+            block_table=bt_flat, page_tokens=page_tokens,
+        )
+        finite = jnp.isfinite(logits).all(axis=-1).reshape(S, k).all(axis=1)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy.reshape(S, k), finite, caches
+
+    return cell
+
+
 def build_cache_insert():
     """Splice a prefilled request's caches (batch=1, short seq extent) into
     the global slot caches at a traced slot index. A dynamic-update-slice
@@ -278,8 +354,24 @@ def build_cache_insert():
     return insert
 
 
+def build_decode_draft(cfg: ModelConfig, ctx: ParallelCtx):
+    """Draft-model decode cell for the speculative "draft" proposer: one
+    greedy token per slot against the draft's own CONTIGUOUS caches
+    (`M.make_decode_caches` — the draft prefix is short-lived scratch,
+    so it skips the paged pool entirely). Same vector-`t` contract as
+    `build_decode_greedy`; the finite flag is dropped (a non-finite
+    draft can only propose tokens the verify cell rejects)."""
+
+    def cell(params, token, caches, t):
+        logits, caches = M.decode_step(params, token, caches, t, cfg, ctx)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return cell
+
+
 def build_paged_cache_insert(bucket_total: int, page_tokens: int,
-                             pool_dtype: str = "fp"):
+                             pool_dtype: str = "fp",
+                             sz_granularity: str = "page"):
     """Land a prefilled request's caches in the PAGED layout: the
     request's `bucket_total` tokens of K/V (batch=1, dense from the
     prefill cell) go whole-page into the physical pool at the pages the
@@ -295,13 +387,17 @@ def build_paged_cache_insert(bucket_total: int, page_tokens: int,
     `bucket_total` — those positions are >= the slot's length, so the
     kernels' masks exclude them and decode overwrites them before the
     length ever reaches them (the quantized insert zero-fills them so
-    they cannot pollute the page's range)."""
+    they cannot pollute the page's range). With
+    `sz_granularity="token"` the prompt pages get per-token sub-scales
+    instead (`kernels.quant.quantize_tokens`) and the (page_tokens, KV,
+    2) sz tiles land through the same generic page writer."""
     from repro.kernels import quant
     from repro.kernels.page_io import ops as page_ops
 
     n_wp = -(-bucket_total // page_tokens)     # pages the prompt spans
     pad = n_wp * page_tokens - bucket_total
     quantized = pool_dtype == "int8"
+    per_token = quantized and sz_granularity == "token"
 
     def insert(caches, slot_caches, slot, block_table):
         slot = jnp.asarray(slot, jnp.int32)
@@ -336,7 +432,10 @@ def build_paged_cache_insert(bucket_total: int, page_tokens: int,
                     continue
                 tiles = page_tiles(slot_caches[pos][key])
                 if quantized:
-                    q8, sz_rows = quant.quantize_pages(tiles)
+                    if per_token:
+                        q8, sz_rows = quant.quantize_tokens(tiles)
+                    else:
+                        q8, sz_rows = quant.quantize_pages(tiles)
                     oc[key] = page_ops.write_pages(c[key], q8, phys)
                     oc[key + "_sz"] = page_ops.write_pages(
                         c[key + "_sz"], sz_rows, phys
@@ -432,6 +531,16 @@ class EngineCells:
     chunk: int = 0                 # tokens per prefill chunk
     copy_fn: Any = None            # COW page-copy cell (paged mode):
     #                     (caches, src_phys, dst_phys) -> caches [donates]
+    sz_granularity: str = "page"   # int8 sub-scale layout: page | token
+    verify_fn: Any = None          # speculative verify cell (paged mode):
+    #    (params, cand (S, k), caches, t (S,), bt) ->
+    #    (greedy (S, k), finite (S,), caches) [donates caches]
+    spec_k: int = 0                # candidate tokens per verify call
+    draft_fn: Any = None           # draft-proposer decode cell:
+    #    (params, tok (S,), caches, t (S,)) -> (tok (S,), caches) [donates]
+    draft_params: Any = None       # draft weights (PRNGKey(0); one tree
+    #                                shared across a fleet via the cells)
+    draft_cfg: Any = None          # draft ModelConfig (sizes draft caches)
 
     def compile_counts(self) -> Dict[str, int]:
         """Executable-cache sizes of every cell — the no-recompile
@@ -451,6 +560,10 @@ class EngineCells:
             out["prefill_chunk"] = size(self.chunk_fn)
         if self.copy_fn is not None:
             out["page_copy"] = size(self.copy_fn)
+        if self.verify_fn is not None:
+            out["verify"] = size(self.verify_fn)
+        if self.draft_fn is not None:
+            out["draft"] = size(self.draft_fn)
         return out
 
 
@@ -460,6 +573,9 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
                       buckets: Sequence[int], enc_len: int = 0,
                       paged: bool = False, page_tokens: int = 16,
                       prefill_chunk: int = 0, pool_dtype: str = "fp",
+                      sz_granularity: str = "page",
+                      speculative: str = "off", spec_k: int = 4,
+                      draft_cfg: ModelConfig | None = None,
                       ) -> EngineCells:
     """Build the engine's cells. With a mesh, shardings come from the same
     rules as `make_bundle` (this is the ServeBundle path refactored for
@@ -471,12 +587,45 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
     the chunked-prefill cell. `pool_dtype` picks the pool payload
     (models.blocks.POOL_DTYPES): "fp" is the exact safety net, "int8"
     block-quantizes every pool page (quantize-on-insert in the insert/
-    chunk/decode cells, dequantize-in-kernel on the gather side)."""
+    chunk/decode cells, dequantize-in-kernel on the gather side).
+
+    `speculative` ("off" | "ngram" | "draft") additionally builds the
+    k-candidate verify cell (`build_decode_verify_paged`) and, for
+    "draft", the draft-proposer cell + its weights. Speculative mode
+    requires the paged layout and an attention-only decoder (the verify
+    cell flattens S slots to S*k decode rows, which only the paged
+    attention path supports), and int8 pools must use
+    `sz_granularity="token"` (see module docstring)."""
     from repro.models import blocks as blk
 
     blk.pool_kv_dtype(cfg, pool_dtype)         # validate early
     if pool_dtype != "fp" and not paged:
         raise ValueError("pool_dtype applies to the paged layout only")
+    if sz_granularity not in ("page", "token"):
+        raise ValueError(f"unknown sz_granularity {sz_granularity!r}")
+    if sz_granularity == "token" and pool_dtype != "int8":
+        raise ValueError("sz_granularity='token' applies to int8 pools only")
+    if speculative not in ("off", "ngram", "draft"):
+        raise ValueError(f"unknown speculative mode {speculative!r}")
+    if speculative != "off":
+        if not paged:
+            raise ValueError("speculative decoding requires the paged layout")
+        if not chunked_prefill_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: speculative decoding needs an attention-only "
+                "decoder without frontend/encoder (the verify cell batches "
+                "S*k rows, which SSM/conv state cannot follow)"
+            )
+        if spec_k < 2:
+            raise ValueError("spec_k must be >= 2 (k=1 is plain greedy)")
+        if pool_dtype == "int8" and sz_granularity != "token":
+            raise ValueError(
+                "speculative + int8 pools need sz_granularity='token': the "
+                "per-page requantize round trip would make a slot's k "
+                "candidate rows read-modify-write the same tail page"
+            )
+        if speculative == "draft" and draft_cfg is None:
+            raise ValueError("speculative='draft' needs a draft_cfg")
     npfx = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
     if cfg.num_encoder_layers and len(set(buckets)) != 1:
         raise ValueError(
@@ -525,7 +674,7 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
             # trailing None in_sharding below)
             acaches = abstract_paged_caches(
                 cfg, n_slots, max_seq_total, page_tokens, enc_len,
-                pool_dtype=pool_dtype,
+                pool_dtype=pool_dtype, sz_granularity=sz_granularity,
             )
             cache_sh = shd.named(
                 mesh,
@@ -552,7 +701,8 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         aparams, _ = abstract_params(cfg)
         acaches = (
             abstract_paged_caches(cfg, n_slots, max_seq_total, page_tokens,
-                                  enc_len, pool_dtype=pool_dtype)
+                                  enc_len, pool_dtype=pool_dtype,
+                                  sz_granularity=sz_granularity)
             if paged else abstract_caches(cfg, n_slots, max_seq_total,
                                           enc_len)
         )
@@ -566,7 +716,8 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
     for b in sorted(set(buckets)):
         cell = build_prefill_greedy(cfg, ctx, b)
         ins_cell = (
-            build_paged_cache_insert(b + npfx, page_tokens, pool_dtype)
+            build_paged_cache_insert(b + npfx, page_tokens, pool_dtype,
+                                     sz_granularity)
             if paged else build_cache_insert()
         )
         if mesh is not None:
@@ -611,6 +762,37 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         else:
             copy_fn = jax.jit(copy_cell, donate_argnums=(0,))
 
+    verify_fn = draft_fn = draft_params = None
+    if speculative != "off":
+        verify_cell = build_decode_verify_paged(cfg, ctx, page_tokens,
+                                                spec_k)
+        if mesh is not None:
+            # cand (S, k) and t (S,) replicated like the greedy token
+            # vector; caches keep the decode cell's sharding
+            verify_fn = jax.jit(
+                verify_cell,
+                in_shardings=(param_sh, None, cache_sh, None, None),
+                out_shardings=(None, None, cache_sh),
+                donate_argnums=(2,),
+            )
+        else:
+            verify_fn = jax.jit(verify_cell, donate_argnums=(2,))
+    if speculative == "draft":
+        # the draft model is small scratch state: plain replicated jit
+        # even under a mesh (its caches never join the paged pool).
+        # PRNGKey(0) init makes the weights deterministic, so every
+        # engine in a fleet — and every process — shares one bit-exact
+        # draft tree through the shared EngineCells.
+        draft_fn = jax.jit(build_decode_draft(draft_cfg, ctx),
+                           donate_argnums=(2,))
+        dparams, _ = M.init_model(draft_cfg, jax.random.PRNGKey(0))
+        ddt = jnp.dtype(draft_cfg.dtype)
+        draft_params = jax.tree.map(
+            lambda p: p.astype(ddt)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            dparams,
+        )
+
     return EngineCells(
         decode_fn=decode,
         prefill_fns=prefills,
@@ -628,4 +810,10 @@ def make_engine_cells(cfg: ModelConfig, ctx: ParallelCtx,
         chunk_fn=chunk_fn,
         chunk=prefill_chunk,
         copy_fn=copy_fn,
+        sz_granularity=sz_granularity if paged else "page",
+        verify_fn=verify_fn,
+        spec_k=spec_k if speculative != "off" else 0,
+        draft_fn=draft_fn,
+        draft_params=draft_params,
+        draft_cfg=draft_cfg if speculative == "draft" else None,
     )

@@ -179,9 +179,11 @@ def paged_cache_pspec(caches, dp_axes, tp_axis, mesh):
                   is gathered through the block table, so it must stay
                   unsharded; page_tokens/head_dim stay local to keep the
                   attention contraction shard-local per head group.
-      k_sz/v_sz:  (nb, P_phys, KV, 2) — the int8 (scale, zero) leaves
-                  split on the SAME head axis as the payload: each tp
-                  shard dequantizes exactly its own heads.
+      k_sz/v_sz:  (nb, P_phys, KV, 2) per-page, or (nb, P_phys,
+                  page_tokens, KV, 2) per-token (rank-dispatched like
+                  the kernels) — the int8 (scale, zero) leaves split on
+                  the SAME head axis as the payload: each tp shard
+                  dequantizes exactly its own heads.
       resident leaves (dense per-slot axis 1): slots over dp when
                   divisible — state (nb, B, H, P, N) also takes heads
                   over tp, conv tails (nb, B, W-1, C) channel over tp,
@@ -204,6 +206,8 @@ def paged_cache_pspec(caches, dp_axes, tp_axis, mesh):
         if name in ("k", "v"):
             return P(None, None, None, tp_ax(x.shape[3]), None)
         if name in ("k_sz", "v_sz"):
+            if x.ndim == 5:                    # per-token sub-scales
+                return P(None, None, None, tp_ax(x.shape[3]), None)
             return P(None, None, tp_ax(x.shape[2]), None)
         b_ax = dp_axes if (x.shape[1] % dp_size == 0 and dp_size > 1) \
             else None

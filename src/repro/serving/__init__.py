@@ -43,6 +43,38 @@ POOL DTYPE (`EngineConfig.pool_dtype`): the pool payload is polymorphic.
   (the serve_int8 bench lane asserts <= 0.30x of the fp16 lane's pool
   bytes at >= 0.95x tokens/s).
 
+SPECULATIVE DECODING (`EngineConfig.speculative`, `serving/
+speculative.py`): greedy decode is the serving stack's lowest-
+arithmetic-intensity loop — every emitted token costs one full sweep of
+the slot batch's pool-resident KV pages, which is exactly the traffic
+the paper's corridor prices. Speculation raises that intensity without
+changing the tokens: a PROPOSER guesses `speculative_k - 1` draft
+tokens per slot ("ngram" — self-speculative suffix matching over the
+slot's own history, zero parameters, zero device work; or "draft" — a
+small draft model decoding ahead against its own contiguous scratch
+caches, weights deterministic and shared engine-wide through
+`EngineCells`), the VERIFY cell (`runtime.serve.
+build_decode_verify_paged`) flattens the (slots, k) candidates to
+slots*k decode rows with vector positions and k-repeated block-table
+rows and scores all of them in ONE paged-decode call, and greedy
+acceptance commits the longest candidate prefix matching the verify
+argmaxes — `1 + accepted` tokens per slot per sweep, BIT-IDENTICAL to
+plain greedy decode on fp pools by construction (int8 pools keep the
+same bounded drift either way). The pager's multi-token accounting
+(`KVPager.step(tokens=...)`) charges the sweep once while lengths
+advance by the acceptance length; `ensure_tail_pages(lookahead=k)`
+makes all k candidate write positions live+private up front, and
+`KVPager.truncate` rolls the page accounting back over the rejected
+tail (whose dead KV every kernel already masks and the next verify
+overwrites). int8 pools switch to the PER-TOKEN sub-scale layout
+(`sz_granularity="token"`, k_sz/v_sz at (stack, P, page_tokens,
+kv_heads, 2)): each candidate row quantizes its own K/V rows
+independently, a pure disjoint scatter — the per-page requantize
+round trip would have k rows of one slot read-modify-writing the same
+tail page concurrently. `ServeStats.spec` reports verify steps and the
+mean acceptance length; the serve_speculative bench lane gates the
+tokens/s win (>= 1.5x the greedy chat lane at equal output tokens).
+
 SHARED-PREFIX RADIX CACHE (`EngineConfig.prefix_cache`): requests behind
 the same system prompt share bit-identical prefix KV (K/V at position i
 depends on token i, the weights and the rotary phase — not the suffix),
@@ -173,6 +205,12 @@ Architecture (one module per concern):
                 step) and `SubstrateLedger` (completion-tracked events,
                 measured bytes, placement accounting) — see the
                 PHYSICAL SUBSTRATE section above.
+  speculative.py — speculative-decoding proposers and the greedy
+                acceptance ladder: `ngram_propose` (self-speculative
+                suffix matching, stateless) and `accept_greedy` (longest
+                candidate prefix matching the verify argmaxes). The
+                engine drives them per verify step; see the SPECULATIVE
+                DECODING section above.
   batcher.py  — fixed-slot continuous batching: requests flow through
                 `n_slots` decode lanes; admission on free slot, release on
                 completion; inactive slots mask their cache writes by
@@ -237,6 +275,7 @@ from repro.serving.engine import (
 )
 from repro.serving.kv_pager import KVPager, PagerConfig, StepTraffic
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
+from repro.serving.speculative import accept_greedy, ngram_propose
 from repro.serving.substrate import SubstrateLedger, TierSubstrate
 from repro.serving.queue import (
     Request,
@@ -269,11 +308,13 @@ __all__ = [
     "StepTraffic",
     "SubstrateLedger",
     "TierSubstrate",
+    "accept_greedy",
     "bursty_stream",
     "chat_stream",
     "fleet",
     "long_context_stream",
     "make_scenario",
     "multi_tenant_stream",
+    "ngram_propose",
     "shared_prefix_stream",
 ]

@@ -155,8 +155,12 @@ class ContinuousBatcher:
             dtype=np.int32,
         )
 
-    def advance(self) -> None:
+    def advance(self, counts: Optional[np.ndarray] = None) -> None:
+        """Advance every active slot's cursor: by 1 (plain greedy decode)
+        or by `counts[slot.index]` tokens (speculative decode — one
+        verify step commits `1 + accepted` tokens per slot)."""
         for s in self.slots:
             if s.active:
-                s.t += 1
-                s.emitted += 1
+                n = 1 if counts is None else int(counts[s.index])
+                s.t += n
+                s.emitted += n

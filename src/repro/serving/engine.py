@@ -139,6 +139,20 @@ class EngineConfig:
     knee_excess: float = 0.75
     catalog_arch: Optional[str] = None         # profile_for prior (paper
     catalog_shape: str = "decode_32k"          # §7.2 submission metrics)
+    # --- speculative decoding (serving.speculative) ---
+    speculative: str = "off"        # off | ngram | draft — propose
+    # speculative_k-1 draft tokens per slot and score all k candidates in
+    # ONE paged verify call (runtime.serve.build_decode_verify_paged);
+    # greedy acceptance keeps the token stream bit-identical to plain
+    # greedy decode while each pool sweep yields 1 + accepted tokens.
+    # Paged + attention-only archs; int8 pools switch to the per-token
+    # sub-scale layout automatically (sz_granularity="token")
+    speculative_k: int = 4          # candidates per verify call (>= 2)
+    draft_arch: Optional[str] = None   # draft model for "draft" mode:
+    # an arch name resolved through configs.reduced (this stack only ever
+    # instantiates reduced models), or None to draft with the TARGET
+    # arch itself — deterministic PRNGKey(0) weights either way, shared
+    # engine-wide through EngineCells
     # --- virtual clock ---
     step_overhead_s: float = 5e-6              # host dispatch/launch floor
     # per decode step; keeps the virtual clock of tiny reduced models in a
@@ -234,6 +248,13 @@ class ServeStats:
     # ledger deltas (serving.substrate) for this run; placement_bytes /
     # resident_pages are end-of-run levels (empty when the substrate is
     # off)
+    spec: dict = dataclasses.field(default_factory=dict)   # speculative-
+    # decoding deltas: verify_steps / emitted / draft_calls /
+    # accept_len_mean (tokens per verify step, = 1 + mean accepted
+    # drafts). Empty when speculation is off. `tokens` above already
+    # counts every ACCEPTED token (multi-token steps append each emitted
+    # token to the request output), so tok_per_s_* and bytes-per-token
+    # ratios need no special-casing
 
     def summary(self) -> Dict[str, float]:
         def pct(a, q):
@@ -267,6 +288,9 @@ class ServeStats:
             )
             out["substrate_placement_bytes"] = \
                 self.substrate["placement_bytes"]
+        if self.spec:
+            out["accept_len_mean"] = self.spec["accept_len_mean"]
+            out["verify_steps"] = self.spec["verify_steps"]
         return out
 
 
@@ -403,6 +427,7 @@ class ServingEngine:
             self.caches = M.make_paged_decode_caches(
                 cfg, ecfg.n_slots, cells.max_seq_total, cells.page_tokens,
                 enc_len=self._enc_len(), pool_dtype=cells.pool_dtype,
+                sz_granularity=cells.sz_granularity,
             )
         else:
             self.caches = M.make_decode_caches(
@@ -435,6 +460,28 @@ class ServingEngine:
             if sub.enabled:
                 self.substrate = sub
         self.tokens = np.zeros(ecfg.n_slots, dtype=np.int32)
+        # --- speculative decoding (serving.speculative) ---
+        self.spec_verify_steps = 0     # verify calls (speculative steps)
+        self.spec_slot_steps = 0       # per-slot verify rows (sum active)
+        self.spec_emitted = 0          # tokens committed by verify steps
+        self.spec_draft_calls = 0      # draft-cell invocations
+        self.draft_caches = None
+        self._draft_fed = np.zeros(ecfg.n_slots, dtype=np.int64)
+        self._draft_park = 0
+        self._draft_tok_bytes = 0.0
+        self._draft_params_n = 0
+        if cells.draft_fn is not None:
+            # contiguous fp scratch caches for the draft model, sized so
+            # the k-1 self-fed proposal positions fit past max_seq_total
+            dseq = cells.max_seq_total + cells.spec_k
+            self.draft_caches = M.make_decode_caches(
+                cells.draft_cfg, ecfg.n_slots, dseq,
+            )
+            self._draft_park = dseq
+            total_b = sum(leaf_bytes(leaf) for leaf in
+                          jax.tree.leaves(self.draft_caches))
+            self._draft_tok_bytes = total_b / (ecfg.n_slots * dseq)
+            self._draft_params_n = cells.draft_cfg.active_param_count()
         self._active_params = cfg.active_param_count()
         self.steps = 0
         self.virtual_s = 0.0
@@ -462,6 +509,23 @@ class ServingEngine:
         enc_len = (
             max(ecfg.prefill_buckets) if cfg.num_encoder_layers else 0
         )
+        draft_cfg = None
+        if ecfg.speculative == "draft":
+            if ecfg.draft_arch is None:
+                draft_cfg = cfg      # self-draft: the target drafts for
+                # itself (perfect-proposer ceiling; useful for parity and
+                # acceptance-dynamics testing)
+            else:
+                from repro import configs
+
+                draft_cfg = dataclasses.replace(
+                    configs.reduced(ecfg.draft_arch), dtype=cfg.dtype,
+                )
+        # int8 pools flip to per-token sub-scales under speculation: the
+        # verify cell's k candidate rows land in one tail page, which the
+        # per-page requantize round trip cannot do collision-free
+        sz_gran = ("token" if ecfg.speculative != "off"
+                   and ecfg.pool_dtype == "int8" else "page")
         cells = serve_rt.make_engine_cells(
             cfg, ctx, rules, mesh,
             n_slots=ecfg.n_slots, max_seq=ecfg.max_seq,
@@ -469,6 +533,9 @@ class ServingEngine:
             paged=ecfg.paged, page_tokens=ecfg.page_tokens,
             prefill_chunk=ecfg.prefill_chunk or 0,
             pool_dtype=ecfg.pool_dtype,
+            sz_granularity=sz_gran,
+            speculative=ecfg.speculative, spec_k=ecfg.speculative_k,
+            draft_cfg=draft_cfg,
         )
         if params is None:
             params, _ = M.init_model(cfg, jax.random.PRNGKey(seed))
@@ -691,6 +758,7 @@ class ServingEngine:
     def _retire(self, slot) -> Request:
         req = self.batcher.release(slot)
         self.pager.release(slot.index)
+        self._draft_fed[slot.index] = 0
         return req
 
     def _block_table_dev(self):
@@ -785,6 +853,208 @@ class ServingEngine:
                 req.finished = self.virtual_s
                 self._retire(slot)
 
+    # ------------------------------------------------------- speculative
+    def _history(self, slot) -> np.ndarray:
+        """The slot's committed token history: prompt + everything
+        emitted (the last element is the token the next step feeds)."""
+        req = slot.request
+        return np.concatenate([
+            np.asarray(req.tokens, dtype=np.int64),
+            np.asarray(req.output, dtype=np.int64),
+        ])
+
+    def _propose(self, cand: np.ndarray, active: np.ndarray) -> float:
+        """Fill `cand[:, 1:]` with draft tokens for active slots; returns
+        the proposal's virtual-time cost (0 for the host-side n-gram
+        proposer)."""
+        from repro.serving import speculative as spec
+
+        k = self.cells.spec_k
+        if self.ecfg.speculative == "ngram":
+            for slot in self.batcher.slots:
+                if slot.active:
+                    cand[slot.index, 1:] = spec.ngram_propose(
+                        self._history(slot), k - 1
+                    )
+            return 0.0
+        return self._propose_draft(cand, active)
+
+    def _propose_draft(self, cand: np.ndarray,
+                       active: np.ndarray) -> float:
+        """Draft-model proposal: catch the draft's contiguous caches up
+        to each active slot's committed history (refeed overwrites any
+        rejected speculation from earlier steps — garbage past the
+        frontier is masked by the vector-`t` length masks, same
+        invariant as the paged pool), then feed the last committed token
+        and self-feed k-2 more times. `_draft_fed[s]` counts committed
+        tokens already in the draft cache."""
+        k = self.cells.spec_k
+        n_slots = self.ecfg.n_slots
+        idxs = np.nonzero(active)[0]
+        hists = {int(i): self._history(self.batcher.slots[i])
+                 for i in idxs}
+        calls = 0
+        park = self._draft_park
+        # catch-up: one committed token per call, all slots in parallel,
+        # until every active slot holds all but its last token
+        while True:
+            tok = np.zeros(n_slots, dtype=np.int32)
+            t = np.full(n_slots, park, dtype=np.int32)
+            any_feed = False
+            for i in idxs:
+                h, f = hists[int(i)], int(self._draft_fed[i])
+                if f < len(h) - 1:
+                    tok[i] = h[f]
+                    t[i] = f
+                    self._draft_fed[i] = f + 1
+                    any_feed = True
+            if not any_feed:
+                break
+            _, self.draft_caches = self.cells.draft_fn(
+                self.cells.draft_params, jnp.asarray(tok),
+                self.draft_caches, jnp.asarray(t),
+            )
+            calls += 1
+        # proposal: feed the last committed token, then self-feed
+        cur = np.zeros(n_slots, dtype=np.int32)
+        t = np.full(n_slots, park, dtype=np.int32)
+        for i in idxs:
+            cur[i] = hists[int(i)][-1]
+            t[i] = len(hists[int(i)]) - 1
+        for j in range(1, k):
+            nxt, self.draft_caches = self.cells.draft_fn(
+                self.cells.draft_params, jnp.asarray(cur),
+                self.draft_caches, jnp.asarray(t),
+            )
+            calls += 1
+            nxt = np.asarray(nxt)
+            for i in idxs:
+                cand[i, j] = nxt[i]
+            cur = np.where(active, nxt, cur).astype(np.int32)
+            t = np.where(active, t + 1, t).astype(np.int32)
+        for i in idxs:
+            # the proposal loop's first feed (the last committed token)
+            # counts as fed; the self-fed drafts do not — they refeed
+            # above if accepted, overwrite-in-place if not
+            self._draft_fed[i] = len(hists[int(i)])
+        self.spec_draft_calls += calls
+        # virtual cost: the draft runs serially before verify — its
+        # flops plus its contiguous-cache reads from the LOCAL tier
+        # (draft caches are slot-local scratch, never pooled)
+        n_active = int(active.sum())
+        lengths = float(sum(len(hists[int(i)]) for i in idxs))
+        t_comp = calls * (
+            rl.model_flops_decode(self._draft_params_n, n_active)
+            / hw.V5E.peak_flops_bf16
+        )
+        t_read = (calls * lengths * self._draft_tok_bytes
+                  / self.topo.local.bandwidth)
+        return t_comp + t_read
+
+    def _step_speculative(self) -> None:
+        """One speculative verify step: propose k-1 drafts per slot,
+        score all k candidates in ONE paged verify call, commit the
+        greedy-matching prefix, roll the page accounting back over the
+        rejected tail. Emits 1..k tokens per active slot against ONE
+        pool sweep — the amortization `KVPager.step(tokens=...)` prices.
+        Token-stream parity with `_step_decode` is by construction
+        (serving.speculative module docstring)."""
+        from repro.serving import speculative as spec
+
+        k = self.cells.spec_k
+        if self._last_decode_end is not None:
+            self._decode_gaps.append(self.virtual_s - self._last_decode_end)
+        active = self.batcher.active_mask()
+        n_active = int(active.sum())
+        t_vec = self.batcher.t_vector()
+        cand = np.zeros((self.ecfg.n_slots, k), dtype=np.int32)
+        cand[:, 0] = self.tokens
+        t_draft = self._propose(cand, active)
+        # all k candidate rows write KV: their pages must be live and
+        # private BEFORE the verify cell runs (rejected tails roll back
+        # through truncate below)
+        for old, new in self.pager.ensure_tail_pages(active, lookahead=k):
+            self.caches = self.cells.copy_fn(
+                self.caches, np.int32(old), np.int32(new)
+            )
+        greedy, finite, self.caches = self.cells.verify_fn(
+            self.params, jnp.asarray(cand), self.caches,
+            jnp.asarray(t_vec), self._block_table_dev(),
+        )
+        greedy_np = np.asarray(greedy)
+        if not bool(np.asarray(finite)[active].all()):
+            raise FloatingPointError(
+                f"non-finite verify logits at step {self.steps} "
+                f"(active slots: {n_active})"
+            )
+
+        # greedy acceptance per slot, capped by the request's remaining
+        # decode budget (the verify row may overshoot max_new_tokens)
+        counts = np.zeros(self.ecfg.n_slots, dtype=np.int64)
+        emits: Dict[int, List[int]] = {}
+        for slot in self.batcher.slots:
+            if not slot.active:
+                continue
+            i = slot.index
+            _, emit = spec.accept_greedy(cand[i], greedy_np[i])
+            budget = slot.request.max_new_tokens - len(slot.request.output)
+            emit = emit[:max(1, min(len(emit), budget))]
+            counts[i] = len(emit)
+            emits[i] = emit
+
+        traffic = self.pager.step(active, tokens=counts)
+        if self.substrate is not None:
+            self.substrate.drain(self.pager, self.caches, step=self.steps)
+        # ONE pool sweep (the reads in `traffic`) scored k tokens per
+        # slot: compute scales with k, memory does not — that asymmetry
+        # is the whole speedup
+        t_compute = (
+            rl.model_flops_decode(self._active_params, k * n_active)
+            / hw.V5E.peak_flops_bf16
+        )
+        t_local = traffic.local_bytes / self.topo.local.bandwidth
+        t_staged = traffic.prefetch_pool_bytes / self.topo.pool.bandwidth
+        t_demand = traffic.demand_pool_bytes / self.topo.pool.bandwidth
+        t_pool = t_staged + t_demand
+        dt = float(
+            itf.step_time_vec(t_staged, t_local, t_compute, 0.0)
+        ) + t_demand + self.ecfg.step_overhead_s + t_draft
+        self.virtual_s += dt
+        self._last_decode_end = self.virtual_s
+        self.steps += 1
+        self.spec_verify_steps += 1
+        self.spec_slot_steps += n_active
+        self.spec_emitted += int(counts.sum())
+        self._t_compute_s += t_compute
+        excess_b = (
+            (self.pager.prefetch_issued - self.pager.prefetch_useful)
+            * self.pager.page_bytes
+        )
+        t_excess = max(0.0, excess_b - self._prev_excess_b) \
+            / self.topo.pool.bandwidth
+        self._prev_excess_b = excess_b
+        self.admission.observe(n_active, t_pool, dt, t_excess=t_excess)
+
+        self.batcher.advance(counts)
+        for slot in self.batcher.slots:
+            if not slot.active:
+                continue
+            req = slot.request
+            emit = emits[slot.index]
+            self.tokens[slot.index] = emit[-1]
+            for tok in emit:
+                req.output.append(int(tok))
+                req.token_times.append(self.virtual_s)
+            if req.done:
+                req.finished = self.virtual_s
+                self._retire(slot)     # releases every page incl. lookahead
+            else:
+                # partial acceptance: free the lookahead pages past the
+                # committed frontier so pool footprint tracks ACCEPTED
+                # tokens (the rejected KV itself is dead weight the
+                # kernels mask and the next verify overwrites)
+                self.pager.truncate(slot.index)
+
     # ----------------------------------------------- admission <-> sched
     def measured_profile(self) -> itf.InterferenceProfile:
         """The engine's MEASURED interference profile (paper §7.2 closed
@@ -868,7 +1138,10 @@ class ServingEngine:
                 return "chunk"
             return "admit" if admitted else "idle"
         self._max_conc = max(self._max_conc, self.batcher.n_active)
-        self._step_decode()
+        if self.cells.verify_fn is not None:
+            self._step_speculative()
+        else:
+            self._step_decode()
         return "decode"
 
     def begin_capture(self) -> dict:
@@ -885,6 +1158,8 @@ class ServingEngine:
                         if self.prefix_cache is not None else None),
             "substrate0": (self.substrate.counters()
                            if self.substrate is not None else None),
+            "spec0": (self.spec_verify_steps, self.spec_slot_steps,
+                      self.spec_emitted, self.spec_draft_calls),
             "cancelled0": self.cancelled,
             "wall0": time.perf_counter(),
         }
@@ -986,6 +1261,21 @@ class ServingEngine:
                 prefix_delta["hits"] / n if n else 0.0
             )
             prefix_delta["cached_pages"] = prefix1["cached_pages"]
+        spec_delta: dict = {}
+        if self.cells.verify_fn is not None:
+            v0, s0_, e0, d0 = cap["spec0"]
+            vsteps = self.spec_verify_steps - v0
+            slot_steps = self.spec_slot_steps - s0_
+            emitted = self.spec_emitted - e0
+            spec_delta = {
+                "verify_steps": vsteps,
+                "emitted": emitted,
+                "draft_calls": self.spec_draft_calls - d0,
+                # tokens each slot commits per verify step it takes part
+                # in (1 = no draft ever accepted, k = perfect proposer)
+                "accept_len_mean": (emitted / slot_steps
+                                    if slot_steps else 0.0),
+            }
         return ServeStats(
             n_requests=len(done),
             tokens=sum(len(r.output) for r in done),
@@ -1000,4 +1290,5 @@ class ServingEngine:
             max_concurrency=max_conc,
             prefix=prefix_delta,
             substrate=substrate_delta,
+            spec=spec_delta,
         )

@@ -447,26 +447,74 @@ class KVPager:
             self._cow_local_pending += 2.0 * self.page_bytes
         return (old, new)
 
-    def ensure_tail_pages(self, active: np.ndarray) -> List[Tuple[int, int]]:
-        """Make every active slot's write-position page PRIVATE and live —
-        called by the engine BEFORE the paged decode cell so the block
-        table it passes already names a physical page the slot exclusively
-        owns for the token about to be written (`step` allocates/splits
-        lazily otherwise, which is too late for a layout that is real on
-        device). Returns the (old_phys, new_phys) COW pairs the engine
-        must copy before the write."""
+    def ensure_tail_pages(self, active: np.ndarray,
+                          lookahead: int = 1) -> List[Tuple[int, int]]:
+        """Make every active slot's next `lookahead` write-position pages
+        PRIVATE and live — called by the engine BEFORE the paged decode
+        cell so the block table it passes already names physical pages
+        the slot exclusively owns for the tokens about to be written
+        (`step` allocates/splits lazily otherwise, which is too late for
+        a layout that is real on device). `lookahead=1` covers plain
+        greedy decode (the single tail token); the speculative engine
+        passes `lookahead=spec_k` so all k candidate rows of the verify
+        cell land in live private pages (only the first page can be
+        shared — pages past the tail are fresh allocations — but the COW
+        check runs over the whole window anyway). Pages a partial
+        acceptance leaves unused are rolled back by `truncate`. Returns
+        the (old_phys, new_phys) COW pairs the engine must copy before
+        the write."""
         cow: List[Tuple[int, int]] = []
         for s in np.nonzero(np.asarray(active, dtype=bool))[0]:
-            p = self._page_of(int(self.lengths[s]))
-            if p >= self.n_pages:
-                continue
-            if not self.valid[s, p]:
-                self._alloc_pages(int(s), p + 1)
-            elif self.ref[self.phys[s, p]] > 1:
-                pair = self.cow_split(int(s), p)
-                if pair is not None:
-                    cow.append(pair)
+            lo = self._page_of(int(self.lengths[s]))
+            hi = self._page_of(int(self.lengths[s]) + lookahead - 1)
+            for p in range(lo, min(hi, self.n_pages - 1) + 1):
+                if not self.valid[s, p]:
+                    self._alloc_pages(int(s), p + 1)
+                elif self.ref[self.phys[s, p]] > 1:
+                    pair = self.cow_split(int(s), p)
+                    if pair is not None:
+                        cow.append(pair)
         return cow
+
+    def truncate(self, slot: int) -> int:
+        """Roll back `slot`'s page table to its committed length:
+        release every valid page wholly beyond `lengths[slot]` — the
+        speculative-decode rollback. A partially accepted verify step
+        leaves the pages `ensure_tail_pages(lookahead=k)` allocated for
+        the rejected candidates mapped but unused (and their KV content
+        is garbage beyond the frontier, which every kernel masks); this
+        returns them to the free list so the pool footprint tracks
+        ACCEPTED tokens, not proposed ones. The pages are private by
+        construction (fresh allocations or COW splits), but the release
+        is refcounted like every other decref anyway. Returns the number
+        of table entries dropped."""
+        length = int(self.lengths[slot])
+        first_keep = 0 if length <= 0 else self._page_of(length - 1) + 1
+        drop = np.nonzero(self.valid[slot, first_keep:])[0] + first_keep
+        if drop.size == 0:
+            return 0
+        self._bt_cache = None
+        pages = self.phys[slot, drop]
+        self.ref[pages] -= 1
+        if self.cfg.validate and (self.ref[pages] < 0).any():
+            raise RuntimeError(
+                f"truncate: slot {slot} released a page whose refcount "
+                "was already zero"
+            )
+        self.valid[slot, drop] = False
+        self.phys[slot, drop] = -1
+        dead = pages[self.ref[pages] == 0]
+        if dead.size:
+            if self.cfg.validate:
+                self._validate_freed(dead)
+            self._free_phys.extend(dead.tolist())
+        if self._staged:
+            dropped = set(drop.tolist())
+            self._staged = {
+                (s, p) for (s, p) in self._staged
+                if not (s == slot and p in dropped)
+            }
+        return int(drop.size)
 
     def release(self, slot: int) -> None:
         """Decref a finished/evicted slot's pages in ONE batched call;
@@ -588,11 +636,24 @@ class KVPager:
     def _gid(self, slot: int, page: int) -> int:
         return slot * self.n_pages + page
 
-    def step(self, active: np.ndarray) -> StepTraffic:
+    def step(self, active: np.ndarray,
+             tokens: Optional[np.ndarray] = None) -> StepTraffic:
         """Account one decode step for the `active` slot mask: reads per
         the traffic model against current page tiers, plus the new token's
         KV write into its (tail) page and the resident state. Pending COW
-        copy bytes (splits since the last step) are flushed here."""
+        copy bytes (splits since the last step) are flushed here.
+
+        `tokens` (n_slots,) commits a PER-SLOT token count instead of 1 —
+        the speculative-verify path: one verify call emits `1 + accepted`
+        tokens per slot but sweeps the pool-resident pages ONCE, so the
+        read side of this accounting is charged once per call while the
+        lengths (and tail writes) advance by `tokens[s]`. That read-once/
+        advance-many asymmetry IS the speculative speedup under the
+        paper's corridor: decode traffic is page reads, and amortizing a
+        sweep over the acceptance length divides the bytes per emitted
+        token by it. (Rejected candidate rows also wrote KV, but those
+        are overwritten in place before ever being read — sub-token
+        noise against the per-step page sweep, excluded by the model.)"""
         active = np.asarray(active, dtype=bool)
         touches = None
         if self.recorder is not None or self._predictor is not None:
@@ -647,13 +708,17 @@ class KVPager:
                     self.prefetch_issued += 1
                     staged_b += self.page_bytes
 
-        # one token of KV written at the tail of each active slot — the
-        # write page must be private, so a shared tail page splits first
-        # (COW; never mutate a page with ref > 1)
+        # tokens[s] (default 1) tokens of KV written at the tail of each
+        # active slot — each write page must be private, so a shared tail
+        # page splits first (COW; never mutate a page with ref > 1)
         wr_local = wr_pool = 0.0
+        counts = None if tokens is None else np.asarray(tokens)
         for s in np.nonzero(active)[0]:
-            p = self._page_of(int(self.lengths[s]))  # write position == len
-            if p < self.n_pages:
+            n_s = 1 if counts is None else int(counts[s])
+            for _ in range(n_s):
+                p = self._page_of(int(self.lengths[s]))  # write pos == len
+                if p >= self.n_pages:
+                    break
                 if not self.valid[s, p]:
                     self._alloc_pages(int(s), p + 1)
                 elif self.ref[self.phys[s, p]] > 1:

@@ -117,8 +117,10 @@ def test_repo_rules_reference_known_files():
     produce, and tolerances must be sane for their rule type."""
     for fname, tag, metric, rule, tol in check_bench.RULES:
         assert fname.startswith("BENCH_") and fname.endswith(".json")
-        assert rule in ("rel_max", "rel_min", "abs_max")
+        assert rule in ("rel_max", "rel_min", "abs_max", "abs_min")
         if rule == "rel_max":
             assert tol >= 1.0
         if rule == "rel_min":
             assert tol <= 1.0
+        if rule == "abs_min":
+            assert tol > 0.0

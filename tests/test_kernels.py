@@ -645,3 +645,114 @@ def test_select_impl_dispatch():
     assert select_impl("pallas") == ("pallas", False)
     with pytest.raises(ValueError):
         select_impl("cuda")
+
+# ------------------------- per-token sub-scales (speculative int8 pools)
+def test_token_sz_roundtrip_tighter_than_page():
+    """Per-token (scale, zero) rows are a strict refinement of per-page
+    blocks: the round-trip error is bounded by half the TOKEN row's step
+    and never exceeds the per-page round-trip error materially."""
+    page, KV, D = 16, 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, page, KV, D),
+                          jnp.float32)
+    # one hot token per page stretches the page-level range
+    x = x.at[:, 3].mul(50.0)
+    q8t, szt = quant.quantize_tokens(x)
+    back_t = quant.dequantize_tokens(q8t, szt)
+    err_t = np.abs(np.asarray(back_t - x))
+    bound_t = np.asarray(szt[..., 0])[..., None] / 2
+    assert (err_t <= bound_t + 1e-6).all()
+    q8p, szp = quant.quantize_pages(x)
+    err_p = np.abs(np.asarray(quant.dequantize_pages(q8p, szp) - x))
+    # the cold tokens next to the outlier are where per-page collapses
+    assert err_t.mean() < err_p.mean()
+    # all-zero rows round-trip exactly (MIN_SCALE floor, no 0/0)
+    z8, zsz = quant.quantize_tokens(jnp.zeros_like(x))
+    assert np.abs(np.asarray(quant.dequantize_tokens(z8, zsz))).max() == 0.0
+
+
+@pytest.mark.parametrize("page", [16, 64])
+def test_paged_decode_token_sz_matches_quant_oracle(page):
+    """The decode kernel with PER-TOKEN sub-scales (k_sz/v_sz carrying a
+    page_tokens axis) == the dequant-gather oracle, and tracks the fp
+    dense oracle within a TIGHTER drift than the per-page path needs."""
+    B, S, H, KV, D = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(page + 1), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    lengths = jnp.array([(S // 2 + 17 * i) % S + 1 for i in range(B)],
+                        jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, page, seed=page)
+    k8, ksz = quant.quantize_tokens(kp)
+    v8, vsz = quant.quantize_tokens(vp)
+    assert ksz.shape == (kp.shape[0], page, KV, 2)
+    r = dops.paged_decode_mha(q, k8, v8, bt, lengths, k_sz=ksz, v_sz=vsz,
+                              impl="reference")
+    p = dops.paged_decode_mha(q, k8, v8, bt, lengths, k_sz=ksz, v_sz=vsz,
+                              impl="interpret")
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+    dense = dref.decode_mha(q, k, v, lengths)
+    assert float(jnp.abs(p - dense).max()) < 0.05
+
+
+def test_paged_prefill_token_sz_gather_matches_quant_oracle():
+    """The gather-only prefill kernel with per-token sub-scales == the
+    dequant-gather oracle across chunk offsets."""
+    B, S, C, H, KV, D, page = 1, 256, 64, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = _rand(ks[0], (B, C, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    kp, vp, bt = _paged_layout(k, v, page, seed=13)
+    k8, ksz = quant.quantize_tokens(kp)
+    v8, vsz = quant.quantize_tokens(vp)
+    for c0 in (0, 64, S - C):
+        c0v = jnp.full((B,), c0, jnp.int32)
+        r = fops.paged_prefill_mha(q, k8, v8, bt, c0v, k_sz=ksz, v_sz=vsz,
+                                   impl="reference")
+        p = fops.paged_prefill_mha(q, k8, v8, bt, c0v, k_sz=ksz, v_sz=vsz,
+                                   impl="interpret")
+        np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------ W8A8 int8 matmul cell
+from repro.kernels.matmul_w8a8 import ops as w8ops
+
+
+@pytest.mark.parametrize(
+    "M_,K_,N_",
+    [
+        (128, 128, 128),    # exact single block
+        (256, 384, 256),    # multi-block K walk (megacore grid)
+        (130, 96, 200),     # ragged: every axis zero-padded to blocks
+        (1, 128, 256),      # decode-like single row
+    ],
+)
+def test_matmul_w8a8_pallas_matches_ref(M_, K_, N_):
+    """The pallas W8A8 kernel (int32 VMEM accumulator, dequant epilogue
+    on the last K step) == the pure-jnp int8 reference on exact and
+    ragged shapes, and both track the fp matmul within the symmetric
+    per-row/per-column quantization drift."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(M_ + K_ + N_))
+    a = jax.random.normal(ka, (M_, K_), jnp.float32)
+    b = jax.random.normal(kb, (K_, N_), jnp.float32) * 0.5
+    a8, sa = w8ops.quantize_rows(a)             # per activation row
+    b8, sb = w8ops.quantize_rows(b, axis=0)     # per weight column
+    r = w8ops.matmul_w8a8(a8, b8, sa, sb, impl="reference")
+    p = w8ops.matmul_w8a8(a8, b8, sa, sb, impl="interpret")
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               rtol=1e-6, atol=1e-6)
+    fp = a @ b
+    denom = max(float(jnp.abs(fp).max()), 1e-6)
+    assert float(jnp.abs(p - fp).max()) / denom < 0.05
+
+
+def test_matmul_w8a8_zero_operands_exact():
+    """All-zero operands survive the MIN_SCALE floor exactly (no 0/0)."""
+    a8, sa = w8ops.quantize_rows(jnp.zeros((64, 128), jnp.float32))
+    b8, sb = w8ops.quantize_rows(jnp.zeros((128, 64), jnp.float32),
+                                 axis=0)
+    out = w8ops.matmul_w8a8(a8, b8, sa, sb, impl="interpret")
+    assert np.abs(np.asarray(out)).max() == 0.0

@@ -513,7 +513,7 @@ try:
 
     churn_ops = st.lists(
         st.tuples(
-            st.integers(min_value=0, max_value=6),    # op kind
+            st.integers(min_value=0, max_value=7),    # op kind
             st.integers(min_value=0, max_value=2),    # slot
             st.integers(min_value=1, max_value=64),   # length
         ),
@@ -526,7 +526,9 @@ try:
         """Free-list reuse, block-table consistency, refcount cover,
         no-double-free/no-leak and the COW write-privacy invariant hold
         under any randomized admit/release/extend/step/rebalance/share/
-        pin sequence (the PR-5 churn test extended with sharing ops,
+        pin/speculate sequence (the PR-5 churn test extended with
+        sharing ops and the speculative-decode cycle — lookahead
+        allocation, multi-token commit, rejected-tail truncate —
         debug-mode validation ON)."""
         pcfg = PagerConfig(page_tokens=8, local_budget_bytes=4 * 8 * 100.0,
                            policy="hotness", hot_window=16, cold_touch=0.1,
@@ -565,6 +567,25 @@ try:
                         pages = p.phys[donor, :k].copy()
                         p.map_shared(tgt, pages,
                                      k * p.cfg.page_tokens)
+                elif kind == 6:
+                    # speculate: one engine verify cycle at pager level —
+                    # lookahead-k tail pages made live+private up front,
+                    # a 1..k-token commit through the multi-token step,
+                    # then truncate rolls the rejected tail's pages back
+                    k = 1 + length % 4
+                    active = (p.lengths > 0) & (p.lengths + k
+                                                <= p.max_seq)
+                    if active.any():
+                        p.ensure_tail_pages(active, lookahead=k)
+                        counts = np.zeros(p.n_slots, dtype=np.int64)
+                        counts[active] = 1 + (slot + length) % k
+                        p.step(active, tokens=counts)
+                        for s in np.nonzero(active)[0]:
+                            p.truncate(int(s))
+                            # the committed tail page stays live+private
+                            g = p.phys[
+                                s, p._page_of(int(p.lengths[s]) - 1)]
+                            assert p.ref[g] == 1
                 else:
                     # pin/unpin churn (the trie's non-slot references)
                     if len(pinned) < 2 and p.valid[slot].any():
@@ -1224,3 +1245,188 @@ def test_bench_pager_churn_acceptance():
     assert chat["token_parity"]
     assert chat["pool_bytes_per_token_ratio"] <= B.DEDUP_CUT
     assert chat["tok_rate_ratio"] >= 0.95
+
+
+# ------------------------------------------------- speculative decoding
+def test_ngram_propose_deterministic_replay():
+    """The self-speculative proposer is a pure function of the history:
+    deterministic, replays the continuation of the most recent earlier
+    suffix match, pads with the tail, and falls back to repeating the
+    last token when nothing recurs."""
+    from repro.serving import ngram_propose
+
+    hist = np.array([5, 6, 7, 9, 5, 6, 7], dtype=np.int64)
+    a = ngram_propose(hist, 3)
+    b = ngram_propose(hist, 3)
+    np.testing.assert_array_equal(a, b)
+    # suffix [5,6,7] recurred at position 0 -> replay what followed
+    np.testing.assert_array_equal(a, [9, 5, 6])
+    # short continuation pads by repeating its tail
+    np.testing.assert_array_equal(
+        ngram_propose(np.array([4, 2, 4, 2], dtype=np.int64), 3),
+        [4, 2, 2])
+    # longest match wins and prefers the MOST RECENT earlier occurrence
+    h2 = np.array([1, 2, 3, 4, 1, 2, 8, 1, 2], dtype=np.int64)
+    np.testing.assert_array_equal(ngram_propose(h2, 2), [8, 1])
+    # nothing recurs -> repeat the last token
+    h3 = np.array([3, 1, 4, 1, 5], dtype=np.int64)
+    np.testing.assert_array_equal(ngram_propose(h3, 2)[:1], [5])
+    # empty history -> zeros, right length
+    assert ngram_propose(np.array([], dtype=np.int64), 4).shape == (4,)
+
+
+def test_accept_greedy_acceptance_ladder():
+    """The greedy-verification ladder over every acceptance count 0..k-1:
+    emit = greedy[:a+1] where a is the first draft mismatch; at least one
+    token always lands; a fully accepted ladder emits k tokens."""
+    from repro.serving import accept_greedy
+
+    k = 4
+    greedy = [10, 11, 12, 13]
+    # cand[0] is the last emitted token; drafts follow
+    for a_want in range(k):
+        cand = [7] + greedy[:a_want] + [99] * (k - 1 - a_want)
+        a, emit = accept_greedy(np.array(cand), np.array(greedy))
+        assert a == a_want
+        assert emit == greedy[:a_want + 1]
+    # perfect drafts accept everything: k tokens per sweep
+    a, emit = accept_greedy(np.array([7] + greedy[:3]), np.array(greedy))
+    assert a == k - 1 and emit == greedy
+
+
+@pytest.mark.parametrize("mode", ["ngram", "draft"])
+def test_engine_speculative_matches_greedy(mode):
+    """Tentpole acceptance: the speculative engine (either proposer)
+    emits BIT-FOR-BIT the plain greedy engine's tokens on fp pools —
+    acceptance counts 0..k-1 all occur naturally across the trace — and
+    drains the pager clean (every page back on the free list)."""
+    cfg = _cfg()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    B, S, GEN = 2, 8, 12
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size))
+
+    def serve(**kw):
+        ecfg = EngineConfig(
+            n_slots=B, max_seq=S + GEN, prefill_buckets=(S,),
+            page_tokens=4, hot_window=8, local_budget_frac=0.5,
+            # fp pools: the gate is BIT-exact (int8 speculation uses a
+            # different quantization grid — per-token sub-scales — than
+            # per-page greedy; the int8 test below bounds that drift)
+            admission="greedy", paged=True, pool_dtype="fp", **kw,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg, params=params)
+        reqs = [Request(request_id=i, tokens=prompts[i],
+                        max_new_tokens=GEN) for i in range(B)]
+        stats = eng.run(reqs)
+        return np.stack([np.asarray(r.output) for r in reqs]), stats, eng
+
+    ref, ref_stats, _ = serve()
+    got, stats, eng = serve(speculative=mode, speculative_k=4)
+    np.testing.assert_array_equal(got, ref)
+    # speculation must BEAT one-sweep-per-token: fewer verify steps than
+    # emitted tokens, acceptance within [1, k]
+    assert stats.spec["verify_steps"] < ref_stats.steps
+    assert 1.0 <= stats.spec["accept_len_mean"] <= 4.0
+    # verify steps commit everything past each request's prefill token
+    assert stats.spec["emitted"] == B * (GEN - 1)
+    if mode == "draft":
+        assert stats.spec["draft_calls"] > 0
+    # rollback left the pager exact: all slots retired, no leaked pages
+    p = eng.pager
+    assert sorted(p._free_phys) == list(range(p.n_phys))
+    assert (p.ref == 0).all() and not p.valid.any()
+
+
+def test_engine_speculative_int8_token_scales():
+    """Speculative decoding over int8 pools auto-selects the per-token
+    sub-scale layout (collision-free k-row scatter) and stays within the
+    documented drift bound of the int8 greedy stream."""
+    cfg = _cfg()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    B, S, GEN = 2, 8, 10
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(8), (B, S), 0, cfg.vocab_size))
+
+    def serve(**kw):
+        ecfg = EngineConfig(
+            n_slots=B, max_seq=S + GEN, prefill_buckets=(S,),
+            page_tokens=4, hot_window=8, local_budget_frac=0.5,
+            admission="greedy", paged=True, pool_dtype="int8", **kw,
+        )
+        eng = ServingEngine.build(cfg, CTX, ecfg, params=params)
+        reqs = [Request(request_id=i, tokens=prompts[i],
+                        max_new_tokens=GEN) for i in range(B)]
+        eng.run(reqs)
+        return np.stack([np.asarray(r.output) for r in reqs]), eng
+
+    ref, _ = serve()
+    got, eng = serve(speculative="ngram", speculative_k=4)
+    assert eng.cells.sz_granularity == "token"
+    # per-token k_sz/v_sz leaves carry the page_tokens axis
+    for pos in eng.caches:
+        if "k_sz" in eng.caches[pos]:
+            assert eng.caches[pos]["k_sz"].ndim == 5
+    assert float((ref == got).mean()) >= INT8_TOKEN_AGREEMENT
+
+
+def test_speculative_config_validation():
+    """Unsupported speculative configs fail loudly at build time."""
+    cfg = _cfg()
+    base = dict(n_slots=2, max_seq=16, prefill_buckets=(8,),
+                page_tokens=4, hot_window=8, local_budget_frac=0.5,
+                admission="greedy")
+    with pytest.raises(ValueError, match="speculative"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            **base, paged=True, speculative="beam"))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            **base, paged=False, speculative="ngram"))
+    with pytest.raises(ValueError, match="spec_k|speculative_k"):
+        ServingEngine.build(cfg, CTX, EngineConfig(
+            **base, paged=True, speculative="ngram", speculative_k=1))
+    # verify flattens slots -> slots*k rows; SSM state cannot follow
+    with pytest.raises(ValueError, match="attention"):
+        ServingEngine.build(_cfg("mamba2_780m"), CTX, EngineConfig(
+            **base, paged=True, speculative="ngram"))
+
+
+def test_pager_speculative_cycle_refcounts_exact():
+    """Deterministic lookahead/commit/truncate cycle at pager level:
+    ensure_tail_pages makes k positions live, the multi-token step
+    charges ONE read sweep while lengths advance by the acceptance
+    count, and truncate returns exactly the rejected tail's pages."""
+    pcfg = PagerConfig(page_tokens=4, local_budget_bytes=1e9,
+                       policy="hotness", hot_window=8, cold_touch=0.1,
+                       validate=True)
+    p = KVPager(2, 32, bytes_per_token=100.0, resident_bytes=0.0,
+                pcfg=pcfg)
+    p.admit(0, 7)                       # mid-page frontier
+    p.admit(1, 8)                       # page-aligned frontier
+    free0 = len(p._free_phys)
+    active = np.array([True, True])
+    k = 4
+    p.ensure_tail_pages(active, lookahead=k)
+    # slot 0 writes 7..10 (page 1 already live, page 2 new), slot 1
+    # writes 8..11 (page 2 new)
+    assert len(p._free_phys) == free0 - 2
+    t = p.step(active, tokens=np.array([1, 3]))
+    assert list(p.lengths) == [8, 11]
+    # ONE read sweep charged for the whole verify call: the multi-token
+    # step moves strictly fewer bytes than the equivalent single-token
+    # step sequence (which re-reads the growing cache every token)
+    q = KVPager(2, 32, bytes_per_token=100.0, resident_bytes=0.0,
+                pcfg=pcfg)
+    q.admit(0, 7)
+    q.admit(1, 8)
+    serial = q.step(np.array([True, True])).total
+    serial += q.step(np.array([False, True])).total
+    serial += q.step(np.array([False, True])).total
+    assert list(q.lengths) == [8, 11]
+    assert t.total < serial
+    freed = p.truncate(0) + p.truncate(1)
+    # slot 0 committed through position 7 (page 1 full): page 2 dies;
+    # slot 1 committed through 10 (page 2 live): nothing to roll back
+    assert freed == 1
+    assert len(p._free_phys) == free0 - 1
+    _pager_invariants(p)
