@@ -28,6 +28,16 @@ latency):
                          transfer; the row reports the transfer ledger
                          (pages, bytes, mean handoff latency) and
                          asserts one transfer per request.
+  fleet_faults         — chaos recovery pricing: the bursty trace served
+                         fault-free and under the deterministic
+                         `chaos_smoke` plan (engine 1 killed mid-decode
+                         + 10% pool-link flaking). Bit parity on fp
+                         pools is a hard assert; the row prices recovery
+                         — recovery_overhead_tokens (teacher-forced
+                         refill), retry_bytes (failed attempts re-priced
+                         through the ledgers), and p99_ttft_ratio
+                         (faulted p99 TTFT / fault-free p99 TTFT, the
+                         watchdog + re-route tail cost).
 
 Every row records p50/p95/p99 TTFT and virtual tokens/s on the fleet's
 virtual clocks (wall time is reported but NOT gated — CI machines are
@@ -45,7 +55,7 @@ import os
 
 from repro import configs
 from repro.common.parallel import ParallelCtx
-from repro.serving import EngineConfig
+from repro.serving import EngineConfig, make_plan
 from repro.serving.fleet import FleetConfig, FleetRouter
 from repro.serving.queue import shared_prefix_stream
 from repro.sched.workload import fleet_request_stream
@@ -211,6 +221,71 @@ def run_roles(cfg, params):
     return [row]
 
 
+def run_faults(cfg, params):
+    """Chaos recovery pricing: the identical bursty trace served fault-
+    free and under the chaos_smoke plan (engine 1 killed mid-decode +
+    10% transfer flaking). Bit parity is a hard assert (fp pools ->
+    greedy argmax is placement- and recovery-invariant); the row prices
+    what recovery COSTS — teacher-forced refill tokens, retry bytes,
+    and the p99 TTFT inflation from the watchdog + re-route."""
+    n = 16 if SMOKE else 48
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=96, prefill_buckets=(16, 32, 64),
+        page_tokens=8, hot_window=16, local_budget_frac=0.5,
+        admission="greedy", pool_dtype="fp",
+    )
+
+    def _trace():
+        return fleet_request_stream(
+            n, cfg.vocab_size, seed=5, arrival_rate=4e4,
+            gen_interactive=(4, 8), gen_batch=(24, 32),
+        )
+
+    clean_router = _router(ecfg, cfg, "round_robin", params=params)
+    clean = _trace()
+    clean_stats = clean_router.run(clean)
+
+    router = FleetRouter.build(
+        cfg, ParallelCtx(remat="none"), ecfg,
+        FleetConfig(n_engines=N_ENGINES, policy="round_robin",
+                    faults=make_plan("chaos_smoke")),
+        params=params,
+    )
+    faulted = _trace()
+    stats = router.run(faulted)
+    f = stats.faults
+    p99_clean = clean_stats.summary()["ttft_p99"]
+    p99_fault = stats.summary()["ttft_p99"]
+    ratio = p99_fault / max(p99_clean, 1e-12)
+    parity = [r.output for r in faulted] == [r.output for r in clean]
+    row = _emit_fleet(
+        "fleet_faults", stats,
+        extra=(f" killed={f.get('engines_killed', 0)} "
+               f"refill={f.get('reprefilled_tokens', 0)} "
+               f"retries={f.get('retries', 0)} "
+               f"retry_bytes={f.get('retry_bytes', 0.0):.0f} "
+               f"p99_ttft_ratio={ratio:.3f} parity={parity}"),
+    )
+    row.update({
+        "recovery_overhead_tokens": float(f.get("reprefilled_tokens", 0)),
+        "retry_bytes": float(f.get("retry_bytes", 0.0)),
+        "p99_ttft_ratio": float(ratio),
+        "token_parity": bool(parity),
+    })
+    assert parity, "recovery must be invisible to the tokens (fp pools)"
+    assert f.get("engines_killed", 0) == 1
+    assert f.get("reprefilled_tokens", 0) > 0, (
+        "the kill must land mid-decode so adoption has tokens to refill"
+    )
+    for h in router.handles:
+        p = h.engine.pager
+        assert p.counters()["free_pages"] == p.n_phys
+        if h.engine.substrate is not None:
+            assert (p.pool_bytes_used()
+                    == h.engine.substrate.ledger.placement_bytes())
+    return [row]
+
+
 def run():
     cfg = _cfg()
     # one param tree + one compiled cell set per EngineConfig shape; the
@@ -219,4 +294,4 @@ def run():
     from repro.models import model as M
     params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
     return (run_bursty(cfg, params) + run_shared_prefix(cfg, params)
-            + run_roles(cfg, params))
+            + run_roles(cfg, params) + run_faults(cfg, params))

@@ -33,6 +33,11 @@ renames are exactly what a gate must catch. So is a file that fails to
 parse or a metric that isn't a number: every mishap the gate can meet
 turns into a one-line failure string, never a traceback. Exit 0 = all
 rules pass.
+
+After the rules run, a NON-FATAL pass prints one WARN line per baseline
+file that carries numeric metrics no rule references — so a new bench
+row can't quietly ship deterministic numbers the gate ignores. Warns
+never change the exit code.
 """
 
 from __future__ import annotations
@@ -89,6 +94,19 @@ RULES = [
      "rel_min", 0.95),
     ("BENCH_fleet.json", "fleet_roles", "transfer_bytes",
      "rel_max", 1.10),
+    # fault-recovery pricing: refill tokens and retry bytes are exact
+    # functions of the chaos_smoke plan's Philox draws + the trace, so
+    # rel_max catches any recovery-path change that re-prefills or
+    # re-prices more than it used to; the p99 TTFT inflation is
+    # watchdog-dominated (the killed engine's work waits out watchdog_s
+    # on the virtual clock before re-routing), hence the wide absolute
+    # ceiling rather than a vs-clean bar like fleet_bursty's
+    ("BENCH_fleet.json", "fleet_faults", "recovery_overhead_tokens",
+     "rel_max", 1.10),
+    ("BENCH_fleet.json", "fleet_faults", "retry_bytes",
+     "rel_max", 1.10),
+    ("BENCH_fleet.json", "fleet_faults", "p99_ttft_ratio",
+     "abs_max", 25.0),
 ]
 
 
@@ -192,6 +210,37 @@ def check(fresh_dir: str, base_dir: str, rules=RULES) -> list:
     return failures
 
 
+def warn_unreferenced(base_dir: str, rules=RULES) -> None:
+    """Non-fatal visibility pass: one WARN line per baseline file whose
+    rows carry numeric metrics NO rule references — deterministic
+    numbers that can drift silently because nothing gates them. This
+    never fails the run (percentile families and raw counters are
+    recorded for humans, not all gated by design); it exists so a new
+    bench row doesn't quietly ship metrics the gate ignores."""
+    referenced = {(f, t, m) for f, t, m, _, _ in rules}
+    if not os.path.isdir(base_dir):
+        return
+    for fname in sorted(os.listdir(base_dir)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        try:
+            rows = load_rows(os.path.join(base_dir, fname))
+        except (ValueError, OSError):
+            continue                 # unreadable baselines fail the gate
+        loose = [
+            f"{tag}.{metric}"
+            for tag, row in rows.items()
+            for metric, val in row.items()
+            if metric != "tag"
+            and not isinstance(val, bool)
+            and isinstance(val, (int, float))
+            and (fname, tag, metric) not in referenced
+        ]
+        if loose:
+            print(f"WARN {fname}: {len(loose)} baseline metric(s) no "
+                  f"rule references (e.g. {', '.join(sorted(loose)[:3])})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True,
@@ -200,6 +249,7 @@ def main(argv=None) -> int:
                     help="directory with the committed baselines")
     args = ap.parse_args(argv)
     failures = check(args.fresh, args.baselines, RULES)
+    warn_unreferenced(args.baselines, RULES)
     if failures:
         print(f"\nbench regression gate FAILED "
               f"({len(failures)} rule(s)):", file=sys.stderr)

@@ -47,6 +47,17 @@
         # with a STRICTLY higher aggregate prefix_hit_rate — the
         # router-side radix index keeps each system prompt's pages on
         # one engine instead of cold-missing on all of them
+    PYTHONPATH=src python scripts/dev_serve.py --fault-plan chaos_smoke \
+        --fleet 2 --interpret a b
+        # the CI chaos-parity lane: the SAME staggered trace served
+        # fault-free and under a named deterministic FaultPlan
+        # (`serving.faults.PLANS`: chaos_smoke = engine 1 killed at
+        # decode step 3 + 10% substrate transfer flaking, seed 0) must
+        # emit BIT-IDENTICAL greedy tokens — the watchdog re-routes the
+        # dead engine's queue and re-adopts its in-flight slots by
+        # teacher-forced refill, retries re-price flaky transfers —
+        # with every pool drained fully free (zero refcounts) and
+        # `pool_bytes_used == ledger.placement_bytes()` on both engines
     PYTHONPATH=src python scripts/dev_serve.py --speculative ngram \
         --interpret a b
         # the CI speculative-parity lane (attention-only archs): the
@@ -222,6 +233,63 @@ def fleet_prefix(cfg, params, n_engines):
     return parity, hits["round_robin"], hits["prefix_aware"]
 
 
+def fleet_chaos(cfg, params, n_engines, plan_name):
+    """The chaos-parity lane: one staggered trace, served fault-free and
+    under a named deterministic `FaultPlan`, must emit bit-identical
+    greedy tokens (fp pools) — recovery re-routes the dead engine's
+    queued work and re-adopts its in-flight slots by teacher-forced
+    refill — and every engine's pool must drain fully free with the
+    substrate placement contract intact."""
+    from repro.serving.faults import make_plan
+    from repro.serving.fleet import FleetConfig, FleetRouter
+
+    plan = make_plan(plan_name)
+    ecfg = EngineConfig(
+        n_slots=B, max_seq=MAXS, prefill_buckets=(S,),
+        page_tokens=PAGE, hot_window=8, local_budget_frac=0.5,
+        admission="greedy", paged=True, pool_dtype="fp",
+    )
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (3 * n_engines * B, S), 0, cfg.vocab_size
+    ))
+
+    def mk():
+        return [Request(request_id=i, tokens=toks[i], max_new_tokens=GEN,
+                        arrival=0.05 * i) for i in range(len(toks))]
+
+    clean_router = FleetRouter.build(
+        cfg, ctx, ecfg,
+        FleetConfig(n_engines=n_engines, policy="round_robin"),
+        params=params,
+    )
+    clean = mk()
+    clean_router.run(clean)
+
+    router = FleetRouter.build(
+        cfg, ctx, ecfg,
+        FleetConfig(n_engines=n_engines, policy="round_robin",
+                    faults=plan),
+        params=params,
+    )
+    got = mk()
+    stats = router.run(got)
+    mismatch = sum(int(a.output != b.output) for a, b in zip(got, clean))
+    drained = all(
+        h.engine.pager.counters()["free_pages"] == h.engine.pager.n_phys
+        and (h.engine.pager.ref == 0).all() and h.engine.pager.pins == 0
+        for h in router.handles
+    )
+    placement_ok = all(
+        h.engine.substrate is None
+        or h.engine.pager.pool_bytes_used()
+        == h.engine.substrate.ledger.placement_bytes()
+        for h in router.handles
+    )
+    # SSM archs have no tier substrate — no transfer sites to flake
+    has_sub = any(h.engine.substrate is not None for h in router.handles)
+    return mismatch, drained, placement_ok, has_sub, plan, stats
+
+
 def speculative_parity(cfg, params, mode):
     """The speculative-parity lane: paged engine with speculation on vs
     the plain greedy paged engine, token-for-token on fp pools. The
@@ -337,6 +405,11 @@ def main():
         i = args.index("--fleet")
         fleet_n = int(args[i + 1])
         del args[i:i + 2]
+    fault_plan = None
+    if "--fault-plan" in args:
+        i = args.index("--fault-plan")
+        fault_plan = args[i + 1]
+        del args[i:i + 2]
     spec_mode = None
     if "--speculative" in args:
         i = args.index("--speculative")
@@ -401,6 +474,31 @@ def main():
                   f"verify_steps={vsteps} {status}")
             assert status == "OK ", arch
         assert ran, "no attention-only arch ran the speculative lane"
+        print("ALL OK")
+        return
+
+    if fleet_n and fault_plan:
+        for arch in archs:
+            cfg = dataclasses.replace(configs.reduced(arch),
+                                      dtype="float32")
+            params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+            (mismatch, drained, placement_ok, has_sub, plan,
+             stats) = fleet_chaos(cfg, params, fleet_n, fault_plan)
+            f = stats.faults
+            ok = (mismatch == 0 and drained and placement_ok
+                  and (not (plan.active and has_sub)
+                       or f.get("retries", 0) >= 1)
+                  and (plan.kill_engine is None
+                       or f.get("engines_killed", 0) == 1))
+            status = "OK " if ok else "FAIL"
+            print(f"{arch:28s} chaos={fault_plan} fleet={fleet_n} "
+                  f"mismatch={mismatch} "
+                  f"killed={f.get('engines_killed', 0)} "
+                  f"retries={f.get('retries', 0)} "
+                  f"refill={f.get('reprefilled_tokens', 0)} "
+                  f"drained={drained} placement_ok={placement_ok} "
+                  f"{status}")
+            assert status == "OK ", arch
         print("ALL OK")
         return
 

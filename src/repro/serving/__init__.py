@@ -190,13 +190,67 @@ with its own page pool, pager and virtual clock.
   (`ServingEngine.sweep_cancelled` -> `KVPager.release`).
 * AUTOSCALING (`fleet/autoscale.py`): queue-depth hysteresis
   (watermarks + patience + cooldown) activates/drains engines between
-  min/max; the decision loop is side-effect-free and unit-tested.
+  min/max; the decision loop is side-effect-free and unit-tested. A
+  scale-down drains the victim engine IMMEDIATELY through the fault
+  layer's migration path below — pools verified fully free, nothing
+  lingers.
+
+FAULT TOLERANCE (`serving/faults.py`, `FleetConfig.faults`): the
+paper's pooled tier is a shared, link-attached resource — transfers
+flake, engines die, budgets shrink — so the serving stack treats
+failure as a first-class, DETERMINISTIC input rather than an
+environmental accident.
+
+* FAULT PLANS: a `FaultPlan` (seedable, frozen) names every injection
+  site up front — substrate page_in/page_out transfer failure and
+  fleet handoff flaking (per-site Philox streams keyed on
+  crc32(site), so one site's draw sequence never depends on another's
+  interleaving), engine kill/stall at decode step t, pool-page-budget
+  shrink, whole-pool loss. `FaultInjector` wraps a plan with consumed
+  one-shot triggers and counters; `make_plan("chaos_smoke")` et al.
+  name the canonical scenarios. Every chaos run is exactly replayable.
+* PREEMPTION / MIGRATION: `ServingEngine.freeze_slot` evicts a live
+  slot wholesale — pages pinned and force-placed POOL (or spilled:
+  released outright), a `FrozenSlot` snapshot keeps the request,
+  emitted history and last token; `thaw_slot` remaps the pages and
+  resumes bit-exactly. `adopt` migrates a frozen/displaced request to
+  ANOTHER engine by teacher-forced refill: bucketed re-prefill of the
+  prompt, then the emitted history is force-fed one token per decode
+  step (other slots' clocks parked, writes masked) — greedy decode is
+  deterministic per request, so the rebuilt KV is the KV, and on fp
+  pools the resumed stream is bit-identical to the never-failed one.
+  Admission uses the same lever: when a prompt cannot get pages, the
+  lowest-priority active slot is frozen-with-spill instead of
+  deadlocking the queue (`_ensure_pages_for`), and `_thaw_tick`
+  restores frozen work FIFO ahead of lower-priority arrivals.
+* RECOVERY POLICY: substrate transfers and handoffs retry with
+  exponential backoff (`_attempt_transfer`), every failed attempt
+  logged in the ledgers as a "retry" stream — wasted link bytes move,
+  placement unchanged — and fatal past `max_retries`. The router's
+  watchdog marks an engine dead when `pump` reports it (or a stall
+  outlives `watchdog_s`), then `_recover_engine` evacuates it: queued
+  work re-routes with ORIGINAL arrivals, in-flight slots re-adopt on
+  survivors, and the dead engine's pool is asserted fully free (zero
+  refcounts, empty placement). Pool-loss degrades the engine to
+  local-only paging with tightened admission (`degrade_pool`).
+  `ServeStats.faults` / `FleetStats.faults` carry the whole bill —
+  retries, retry_bytes, re-prefilled tokens, preempt/restore counts,
+  backoff seconds — and stay EMPTY ({}) on fault-free runs; the
+  chaos-parity CI lane and the bench_fleet fault lane gate the
+  headline contract: a fleet with one engine killed mid-decode and
+  10% transfer flaking emits bit-identical tokens to the fault-free
+  run on fp pools.
 
 Architecture (one module per concern):
 
   queue.py    — `Request` / `RequestQueue` and deterministic arrival
                 scenarios (chat / long-context / bursty /
                 shared-prefix).
+  faults.py   — deterministic fault injection: `FaultPlan` (seedable
+                scenario description), `FaultInjector` (per-site
+                Philox streams + one-shot triggers + counters), and
+                the named `PLANS` registry — see the FAULT TOLERANCE
+                section above.
   prefix_cache.py — the shared-prefix radix trie over the pager's
                 physical pages: page-block keying, LRU leaf eviction,
                 free-list-pressure reclaim (see the section above).
@@ -273,6 +327,7 @@ from repro.serving.engine import (
     ServeStats,
     ServingEngine,
 )
+from repro.serving.faults import FaultInjector, FaultPlan, PLANS, make_plan
 from repro.serving.kv_pager import KVPager, PagerConfig, StepTraffic
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.speculative import accept_greedy, ngram_propose
@@ -294,8 +349,11 @@ __all__ = [
     "AdmissionController",
     "ContinuousBatcher",
     "EngineConfig",
+    "FaultInjector",
+    "FaultPlan",
     "INT8_TOKEN_AGREEMENT",
     "KVPager",
+    "PLANS",
     "PagerConfig",
     "PrefixCache",
     "PrefixHit",
@@ -313,6 +371,7 @@ __all__ = [
     "chat_stream",
     "fleet",
     "long_context_stream",
+    "make_plan",
     "make_scenario",
     "multi_tenant_stream",
     "ngram_propose",

@@ -105,10 +105,14 @@ class ContinuousBatcher:
         )
 
     def admit(self, request: Request, start_pos: int,
-              phase: str = "decode", prefill_pos: int = 0) -> Slot:
+              phase: str = "decode", prefill_pos: int = 0,
+              emitted: Optional[int] = None) -> Slot:
         """`prefill_pos` (prefill phase only): first prompt token still to
         be prefilled — a prefix-cache hit maps the leading pages shared
-        and starts chunking at the first divergent page instead of 0."""
+        and starts chunking at the first divergent page instead of 0.
+        `emitted` (decode phase only) overrides the default of 1 — the
+        thaw/migration path resumes a request that already generated
+        several tokens before it was preempted or its engine died."""
         if not self._free:
             raise RuntimeError("no free slot")
         slot = self.slots[self._free.pop()]
@@ -117,7 +121,9 @@ class ContinuousBatcher:
         slot.seq = next(self._seq)
         if phase == "decode":
             slot.t = start_pos
-            slot.emitted = 1        # prefill emits the first token
+            # prefill emits the first token; a resumed slot picks up its
+            # pre-preemption count
+            slot.emitted = 1 if emitted is None else emitted
         else:
             slot.t = self.park_pos  # masked until begin_decode
             slot.emitted = 0

@@ -8,6 +8,13 @@ removal).  Keeping the decision side effect free makes the hysteresis
 behaviour directly unit-testable: feed a synthetic load series, assert
 the scale events.
 
+A scale-down drains the chosen engine *immediately* through the fault
+layer's migration path (`FleetRouter._evacuate_handle`): queued work
+re-routes with original arrivals, in-flight slots migrate to the
+survivors by teacher-forced refill, and the engine parks with its page
+pool verified fully free — rather than lingering half-occupied until
+its slowest slot finishes.
+
 Hysteresis has three guards against flapping:
 
 * watermarks — scale up only above ``high_watermark`` occupancy,

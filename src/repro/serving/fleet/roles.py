@@ -45,6 +45,7 @@ class TransferRecord:
     bytes: float
     t_emit: float                 # prefill clock at first-token emission
     t_ready: float                # decode clock when pages landed
+    retries: int = 0              # failed copy attempts (fault injection)
 
 
 class TransferLedger:
@@ -66,6 +67,11 @@ class TransferLedger:
                 sum(r.t_ready - r.t_emit for r in self.records) / n
                 if n else 0.0
             ),
+            # fault-recovery accounting: failed attempts re-crossed the
+            # link, so their bytes are real interference even though no
+            # page ever landed from them
+            "retries": sum(r.retries for r in self.records),
+            "retry_bytes": sum(r.retries * r.bytes for r in self.records),
         }
 
 
@@ -99,9 +105,15 @@ def can_accept_handoff(dst: ServingEngine, rec: HandoffRecord) -> bool:
 
 def execute_handoff(rec: HandoffRecord, src: ServingEngine,
                     dst: ServingEngine, *, src_id: int, dst_id: int,
-                    ledger: TransferLedger) -> float:
+                    ledger: TransferLedger, faults=None) -> float:
     """Move `rec`'s request from the prefill engine `src` into a decode
-    slot on `dst`. Returns the decode-side ready time (virtual s)."""
+    slot on `dst`. Returns the decode-side ready time (virtual s).
+
+    `faults` (a `serving.faults.FaultInjector`) flakes the copy at the
+    "handoff" site: each failed attempt re-prices the full payload over
+    the link plus exponential backoff, bounded by `plan.max_retries`
+    before the fault surfaces as fatal. The payload lands exactly once
+    — only the t_ready bill and the ledger's retry counters change."""
     if not can_accept_handoff(dst, rec):
         raise RuntimeError(
             f"decode engine {dst_id} cannot accept handoff for request "
@@ -129,12 +141,21 @@ def execute_handoff(rec: HandoffRecord, src: ServingEngine,
     else:
         page_b = src.pager.page_bytes
     t_xfer = n_pages * page_b / src.topo.pool.bandwidth
-    t_ready = rec.t_emit + t_xfer
+    retries, t_backoff = 0, 0.0
+    if faults is not None:
+        while faults.transfer_fails("handoff"):
+            retries += 1
+            t_backoff += faults.backoff_s(retries)
+            if retries >= faults.plan.max_retries:
+                raise RuntimeError(
+                    f"handoff for request {req.request_id} failed "
+                    f"{retries} consecutive attempts — link unreachable")
+    t_ready = rec.t_emit + (1 + retries) * t_xfer + t_backoff
     dst.advance_to(t_ready)
     src.complete_handoff(rec)
     ledger.record(TransferRecord(
         request_id=req.request_id, src_engine=src_id, dst_engine=dst_id,
         n_pages=n_pages, bytes=n_pages * page_b,
-        t_emit=rec.t_emit, t_ready=t_ready,
+        t_emit=rec.t_emit, t_ready=t_ready, retries=retries,
     ))
     return t_ready

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.engine import ServeStats, ServingEngine
+from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.fleet.autoscale import AutoscaleConfig, Autoscaler
 from repro.serving.fleet.placement import (
@@ -51,6 +52,12 @@ class FleetConfig:
     policy: str = "round_robin"
     roles: bool = False          # True: engine 0 prefill-role, rest decode
     autoscale: Optional[AutoscaleConfig] = None
+    # --- fault injection + recovery (serving.faults) ---
+    faults: Optional[FaultPlan] = None   # chaos schedule; None/no-op plan
+    # leaves every engine on the byte-identical fault-free path
+    watchdog_s: float = 5e-3     # virtual seconds an engine may fail to
+    # make progress before the router declares it dead and recovers its
+    # queued + in-flight requests onto the survivors
 
     def __post_init__(self) -> None:
         if self.n_engines < 1:
@@ -62,6 +69,16 @@ class FleetConfig:
         if self.autoscale is not None \
                 and self.autoscale.max_engines > self.n_engines:
             raise ValueError("autoscale.max_engines exceeds built engines")
+        if self.watchdog_s <= 0:
+            raise ValueError("watchdog_s must be > 0")
+        if self.roles and self.faults is not None and (
+                self.faults.kill_engine is not None
+                or self.faults.stall_engine is not None):
+            raise ValueError(
+                "engine kill/stall under a role split is unsupported: "
+                "recovery migrates by teacher-forced refill through the "
+                "bucketed prefill cell, which chunked prefill-role "
+                "engines do not expose (transfer flaking is fine)")
 
 
 class EngineHandle:
@@ -77,6 +94,10 @@ class EngineHandle:
         self.routed: List[Request] = []
         self.stalled = False      # pump made no progress on arrived work;
         # cleared when routing/handoff/clock events change its inputs
+        self.dead = False         # watchdog-recovered: permanently fenced
+        self.recover_at: Optional[float] = None   # suspect since pump
+        # returned "dead"/an over-watchdog stall; recovery fires when the
+        # router clock reaches this
 
     def view(self) -> EngineView:
         eng = self.engine
@@ -109,12 +130,21 @@ class EngineHandle:
     def ready_time(self) -> float:
         """Virtual time at which pumping this engine can make progress:
         its own clock while it holds live work, else the earliest queued
-        arrival (never earlier than its clock), else never."""
-        if self.engine.pending_work:
-            return self.engine.virtual_s
+        arrival (never earlier than its clock), else never. A dead
+        engine is never ready; a suspect one becomes the router's
+        business again exactly at its watchdog deadline; an injected
+        stall pushes readiness to the stall's end."""
+        if self.dead:
+            return float("inf")
+        if self.recover_at is not None:
+            return self.recover_at
+        eng = self.engine
+        if eng.pending_work:
+            return max(eng.virtual_s, eng._stall_until)
         if self.stalled or not len(self.queue):
             return float("inf")
-        return max(self.engine.virtual_s, self.queue.next_arrival())
+        return max(eng.virtual_s, eng._stall_until,
+                   self.queue.next_arrival())
 
 
 @dataclasses.dataclass
@@ -132,11 +162,15 @@ class FleetStats:
     cancelled: int                # in-flight sweeps + queue drops
     scale_events: List[tuple]     # (virtual_t, delta, n_accepting)
     policy: dict                  # policy-internal counters
+    faults: dict = dataclasses.field(default_factory=dict)  # fleet-wide
+    # fault-recovery accounting: per-engine ServeStats.faults summed,
+    # plus engines_killed / recoveries / handoff retry traffic. Empty on
+    # fault-free runs
 
     def summary(self) -> dict:
         def pct(a, q):
             return float(np.percentile(a, q)) if len(a) else 0.0
-        return {
+        out = {
             "requests": self.n_requests,
             "tokens": self.tokens,
             "virtual_s": self.virtual_s,
@@ -152,6 +186,13 @@ class FleetStats:
             "scale_events": len(self.scale_events),
             "routed": list(self.routed),
         }
+        if self.faults:
+            out["engines_killed"] = self.faults.get("engines_killed", 0)
+            out["fault_retries"] = self.faults.get("retries", 0)
+            out["fault_retry_bytes"] = self.faults.get("retry_bytes", 0.0)
+            out["recovery_overhead_tokens"] = \
+                self.faults.get("reprefilled_tokens", 0)
+        return out
 
 
 class FleetRouter:
@@ -165,6 +206,12 @@ class FleetRouter:
         page_tokens = engines[0].ecfg.page_tokens
         self.policy = policy or make_policy(
             fcfg.policy, page_tokens=page_tokens)
+        # ONE injector shared by every engine + substrate: per-site
+        # Philox streams make the chaos schedule a pure function of the
+        # plan, however engine events interleave
+        self.faults: Optional[FaultInjector] = None
+        if fcfg.faults is not None and fcfg.faults.active:
+            self.faults = FaultInjector(fcfg.faults)
         self.handles: List[EngineHandle] = []
         n_start = (fcfg.autoscale.min_engines if fcfg.autoscale
                    else fcfg.n_engines)
@@ -178,6 +225,12 @@ class FleetRouter:
                         "prefill role needs chunked prefill cells "
                         "(EngineConfig.prefill_chunk)"
                     )
+            if self.faults is not None:
+                eng.faults = self.faults
+                eng.engine_id = i
+                if eng.substrate is not None:
+                    eng.substrate.faults = self.faults
+                    eng.substrate.engine_id = i
             self.handles.append(EngineHandle(
                 i, eng, role=role, accepting=(i < n_start)))
         self.autoscaler = (Autoscaler(fcfg.autoscale)
@@ -185,6 +238,9 @@ class FleetRouter:
         self.ledger = TransferLedger()
         self.scale_events: List[tuple] = []
         self._pending_handoffs: List[tuple] = []   # (src_handle, record)
+        self._pending_adoptions: List[Request] = []   # displaced in-
+        # flight requests (emitted history) awaiting a live engine slot
+        self.recoveries = 0
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -237,11 +293,81 @@ class FleetRouter:
                 self.scale_events.append(
                     (t, +1, sum(h.accepting for h in self.handles)))
         elif delta < 0:
-            # drain the highest-id accepting engine: stop placements,
-            # let its queued/busy work finish naturally
-            acc[-1].accepting = False
+            # drain the highest-id accepting engine IMMEDIATELY through
+            # the migration path: queued work re-routes, in-flight slots
+            # freeze and adopt onto the survivors, and the engine's page
+            # pool is verified fully free — the engine parks empty
+            # instead of tapering off for its slowest slot's tail
+            self._evacuate_handle(acc[-1])
             self.scale_events.append(
                 (t, -1, sum(h.accepting for h in self.handles)))
+
+    # ------------------------------------------------------ fault recovery
+    def _evacuate_handle(self, h: EngineHandle, *,
+                         dead: bool = False) -> None:
+        """Strip `h` of every queued and in-flight request and verify its
+        pools drained clean. Queued requests re-route through placement
+        with their ORIGINAL arrivals (the queue orders re-admissions by
+        (priority, original arrival), so recovered work is deterministic
+        and never jumps the line); in-flight requests with emitted
+        history await adoption (teacher-forced refill) on a live engine;
+        prefill-phase ones are clean requeues. `dead` fences the engine
+        permanently (watchdog recovery); otherwise it parks empty and an
+        autoscale-up may re-admit to it later."""
+        h.accepting = False
+        if dead:
+            h.dead = True
+            h.engine._dead = True
+        moved = list(h.queue.drain())
+        displaced = h.engine.evacuate()
+        gone = set(map(id, moved)) | set(map(id, displaced))
+        h.routed[:] = [r for r in h.routed if id(r) not in gone]
+        for req in moved:
+            self._route(req)
+        for req in displaced:
+            if req.output:
+                self._pending_adoptions.append(req)
+            else:
+                self._route(req)
+        c = h.engine.pager.counters()
+        if c["free_pages"] != h.engine.pager.n_phys or c["pins"] != 0:
+            raise RuntimeError(
+                f"evacuation leaked pages on engine {h.engine_id}: "
+                f"free {c['free_pages']}/{h.engine.pager.n_phys}, "
+                f"pins {c['pins']}")
+
+    def _recover_engine(self, h: EngineHandle, now: float) -> None:
+        """The watchdog expired on a suspect engine: declare it dead and
+        move everything it owned onto the survivors."""
+        h.recover_at = None
+        self.recoveries += 1
+        self._evacuate_handle(h, dead=True)
+
+    def _drain_adoptions(self) -> None:
+        """Place displaced in-flight requests onto live engines: the
+        least-busy decode-capable engine with a free slot replays prompt
+        + emitted history (teacher-forced) and continues the stream
+        bit-identically. Requests that do not fit yet stay pending."""
+        if not self._pending_adoptions:
+            return
+        still = []
+        for req in self._pending_adoptions:
+            dsts = [d for d in self.handles
+                    if not d.dead and d.recover_at is None
+                    and d.role != "prefill"
+                    and d.engine.batcher.n_free > 0]
+            placed = None
+            for d in sorted(dsts, key=lambda d: (d.engine.batcher.n_busy,
+                                                 d.engine_id)):
+                if d.engine.adopt(req, d.engine.virtual_s):
+                    placed = d
+                    break
+            if placed is None:
+                still.append(req)
+                continue
+            placed.routed.append(req)
+            placed.stalled = False
+        self._pending_adoptions = still
 
     # ---------------------------------------------------------- handoffs
     def _drain_handoffs(self) -> None:
@@ -263,7 +389,7 @@ class FleetRouter:
                                            d.engine_id))
             execute_handoff(rec, src_h.engine, dst.engine,
                             src_id=src_h.engine_id, dst_id=dst.engine_id,
-                            ledger=self.ledger)
+                            ledger=self.ledger, faults=self.faults)
             src_h.stalled = False     # a parked slot freed
             dst.stalled = False       # new live work landed
         self._pending_handoffs = still
@@ -283,6 +409,7 @@ class FleetRouter:
                 raise RuntimeError("fleet router exceeded max_iters — "
                                    "stuck trace?")
             self._drain_handoffs()
+            self._drain_adoptions()
             t_engines = min((h.ready_time() for h in self.handles),
                             default=float("inf"))
             t_arrival = pending[i].arrival if i < len(pending) \
@@ -294,7 +421,21 @@ class FleetRouter:
                         "handoffs pending but no decode engine can ever "
                         "accept them (capacity too small for one prompt)"
                     )
+                if self._pending_adoptions:
+                    raise RuntimeError(
+                        "displaced requests pending adoption but no live "
+                        "engine can ever take them (fleet capacity lost)"
+                    )
                 break
+            # watchdog: suspects whose deadline the clock just reached
+            # are recovered before anything else happens at `now`
+            recovered = False
+            for h in self.handles:
+                if h.recover_at is not None and now >= h.recover_at:
+                    self._recover_engine(h, now)
+                    recovered = True
+            if recovered:
+                continue      # re-routes changed queues + ready times
             routed_any = False
             while i < len(pending) and pending[i].arrival <= now:
                 self._route(pending[i])
@@ -310,7 +451,20 @@ class FleetRouter:
             h = min(ready, key=lambda x: (x.ready_time(), x.engine_id))
             h.engine.advance_to(now)
             act = h.engine.pump(h.queue)
-            if act == "idle" and len(h.queue) \
+            if act == "dead":
+                if h.recover_at is None and not h.dead:
+                    # first silence: suspect now, dead at the deadline
+                    h.recover_at = (h.engine.virtual_s
+                                    + self.fcfg.watchdog_s)
+            elif act == "stalled":
+                stall_left = h.engine._stall_until - h.engine.virtual_s
+                if stall_left > self.fcfg.watchdog_s \
+                        and h.recover_at is None:
+                    # a stall past the watchdog is indistinguishable
+                    # from a kill: fence and recover the same way
+                    h.recover_at = (h.engine.virtual_s
+                                    + self.fcfg.watchdog_s)
+            elif act == "idle" and len(h.queue) \
                     and h.queue.next_arrival() <= h.engine.virtual_s:
                 # arrived work it cannot start (slots full of parked
                 # handoffs / admission floor): wait for an external event
@@ -348,6 +502,20 @@ class FleetRouter:
         for key in ("steered", "cold"):
             if hasattr(self.policy, key):
                 policy_counters[key] = getattr(self.policy, key)
+        faults_agg: Dict[str, float] = {}
+        if self.faults is not None:
+            for s in per:
+                for k, v in s.faults.items():
+                    faults_agg[k] = faults_agg.get(k, 0) + v
+            tc = self.ledger.counters()
+            faults_agg["retries"] = (
+                faults_agg.get("retries", 0) + tc["retries"])
+            faults_agg["retry_bytes"] = (
+                faults_agg.get("retry_bytes", 0.0) + tc["retry_bytes"])
+            faults_agg["engines_killed"] = \
+                sum(1 for h in self.handles if h.dead)
+            faults_agg["recoveries"] = self.recoveries
+            faults_agg["injected"] = self.faults.counters()
         return FleetStats(
             n_requests=len(done),
             tokens=sum(len(r.output) for r in done),
@@ -362,4 +530,5 @@ class FleetRouter:
             cancelled=cancelled,
             scale_events=self.scale_events,
             policy=policy_counters,
+            faults=faults_agg,
         )

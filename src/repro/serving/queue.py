@@ -93,7 +93,13 @@ class RequestQueue:
 
     def __init__(self, requests: Sequence[Request] = ()):
         # arrival-sorted feed list (stable for ties) + a ready-heap of
-        # arrived requests keyed (priority, absorb order)
+        # arrived requests keyed (priority, ORIGINAL arrival, absorb
+        # order). Keying on the original arrival — not absorb time —
+        # makes REQUEUED requests (fault recovery re-routing a dead
+        # engine's queue) re-admit in the same deterministic
+        # (priority, original_arrival) order the fault-free run used;
+        # the absorb-order seq only breaks exact (priority, arrival)
+        # ties, so a single-class trace stays plain FIFO.
         self._items: List[Request] = sorted(requests, key=lambda r: r.arrival)
         self._head = 0
         self._ready: List[tuple] = []
@@ -121,15 +127,16 @@ class RequestQueue:
             if r.is_cancelled(now):
                 self.drop_cancelled += 1
                 continue
-            heapq.heappush(self._ready, (r.priority, self._seq, r))
+            heapq.heappush(self._ready,
+                           (r.priority, r.arrival, self._seq, r))
             self._seq += 1
-        while self._ready and self._ready[0][2].is_cancelled(now):
+        while self._ready and self._ready[0][-1].is_cancelled(now):
             heapq.heappop(self._ready)
             self.drop_cancelled += 1
 
     def peek(self, now: float) -> Optional[Request]:
         self._absorb(now)
-        return self._ready[0][2] if self._ready else None
+        return self._ready[0][-1] if self._ready else None
 
     def pop(self, now: float) -> Optional[Request]:
         r = self.peek(now)
@@ -137,12 +144,24 @@ class RequestQueue:
             heapq.heappop(self._ready)
         return r
 
+    def drain(self) -> List[Request]:
+        """Remove and return EVERY remaining request — ready ones in
+        (priority, original arrival) order, then the not-yet-arrived
+        feed in arrival order. The fault-recovery path: a dead engine's
+        queue drains back through the fleet placement policies, and the
+        original-arrival heap key on the destination makes re-admission
+        order-stable."""
+        out = [item[-1] for item in sorted(self._ready)]
+        out += self._items[self._head:]
+        self._items, self._head, self._ready = [], 0, []
+        return out
+
     def next_arrival(self) -> float:
         """Earliest event time among queued requests: ready requests have
         already arrived (their arrival), otherwise the feed head's arrival
         (inf when drained)."""
         if self._ready:
-            return min(item[2].arrival for item in self._ready)
+            return min(item[-1].arrival for item in self._ready)
         if self._head < len(self._items):
             return self._items[self._head].arrival
         return float("inf")

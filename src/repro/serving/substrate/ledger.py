@@ -15,12 +15,18 @@ import dataclasses
 from typing import List, Tuple
 
 
-# stream kinds -> whether bytes actually move on the tier link
-KINDS = ("page_out", "page_in", "drop", "handoff")
+# stream kinds -> whether bytes actually move on the tier link.
+# "retry" is a FAILED transfer attempt re-issued by the fault-recovery
+# layer: the bytes crossed the link and were wasted, so they count as
+# moved, but the pages never changed placement — the placement contract
+# (`pool_bytes_used == placement_bytes`) stays exact through any number
+# of retries.
+KINDS = ("page_out", "page_in", "drop", "handoff", "retry")
 _MOVES = {"page_out": True, "page_in": True, "drop": False,
-          "handoff": True}
+          "handoff": True, "retry": True}
 # placement delta (host-resident pages) per stream page
-_PLACEMENT = {"page_out": +1, "page_in": -1, "drop": -1, "handoff": 0}
+_PLACEMENT = {"page_out": +1, "page_in": -1, "drop": -1, "handoff": 0,
+              "retry": 0}
 
 
 @dataclasses.dataclass

@@ -50,6 +50,16 @@ class TierSubstrate:
                 f"mode={mode!r}; resolve 'auto'/'off' via "
                 "runtime.capability.substrate_mode before constructing")
         self.mode = mode
+        # fault-injection wiring (serving.faults): the fleet router sets
+        # `faults`/`engine_id` after construction; when unset every
+        # transfer succeeds on the first attempt and no retry state is
+        # touched — the fault-free path is byte-identical to pre-fault
+        # builds of this class.
+        self.faults = None
+        self.engine_id = 0
+        self.retries = 0
+        self.retry_bytes = 0.0
+        self._backoff_pending_s = 0.0
         twin = blocks.init_pool_twin(caches)
         self.enabled = bool(twin)
         if not self.enabled:        # SSM-only stack: no paged KV leaves
@@ -92,6 +102,35 @@ class TierSubstrate:
             page_in, out_shardings=self._dev_sh)
 
     # ----------------------------------------------------------- streams
+    def _attempt_transfer(self, site: str, n_pages: int, step: int) -> None:
+        """Consult the fault injector before issuing a stream: each
+        injected failure logs a `retry` event (wasted link bytes, zero
+        placement delta) and accrues exponential backoff on the pending
+        virtual-time bill (`take_backoff`). Bounded: after
+        `plan.max_retries` failed attempts the fault is fatal — an
+        unreachable tier must surface, not spin."""
+        if self.faults is None:
+            return
+        attempt = 1
+        while self.faults.transfer_fails(f"substrate/{site}"):
+            self.ledger.record("retry", n_pages, step=step)
+            self.retries += 1
+            self.retry_bytes += n_pages * self.page_bytes
+            self._backoff_pending_s += self.faults.backoff_s(attempt)
+            attempt += 1
+            if attempt > self.faults.plan.max_retries:
+                raise RuntimeError(
+                    f"substrate {site} failed "
+                    f"{self.faults.plan.max_retries} consecutive "
+                    f"attempts (engine {self.engine_id}, step {step}) — "
+                    f"tier unreachable")
+
+    def take_backoff(self) -> float:
+        """Drain the accumulated retry backoff (seconds of virtual time
+        the engine must charge to its clock)."""
+        dt, self._backoff_pending_s = self._backoff_pending_s, 0.0
+        return dt
+
     def _pad_ids(self, ids) -> jnp.ndarray:
         """Pad a page-id burst to the next power of two by repeating the
         last id (duplicate scatter of identical data is a no-op) so the
@@ -118,12 +157,14 @@ class TierSubstrate:
         if freed:
             self.ledger.record("drop", len(freed), step=step)
         if promoted:
+            self._attempt_transfer("page_in", len(promoted), step)
             # gather BEFORE page_out donates (and thus invalidates) the
             # current twin buffer
             got = self._page_in_fn(self.twin, self._pad_ids(promoted))
             self.ledger.record("page_in", len(promoted), step=step,
                                payload=tuple(jax.tree.leaves(got)))
         if outs:
+            self._attempt_transfer("page_out", len(outs), step)
             self.twin = self._page_out_fn(
                 self.twin, _pool_leaves(caches, self.twin),
                 self._pad_ids(outs))

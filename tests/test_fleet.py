@@ -364,6 +364,30 @@ def test_check_bench_default_rules_reference_real_artifacts():
             assert metric in rows[tag], f"{fname}:{tag} lacks {metric!r}"
 
 
+def test_check_bench_warns_on_unreferenced_metrics(tmp_path, capsys):
+    """The visibility pass: a baseline metric no rule references gets
+    exactly one non-fatal WARN line per file — and a fully-referenced
+    file stays silent."""
+    cb = _load_check_bench()
+    base = tmp_path / "base"
+    base.mkdir()
+    _write_bench(base, "BENCH_x.json",
+                 [{"tag": "t", "gated": 1.0, "loose_a": 2.0,
+                   "loose_b": 3.0, "flag": True, "note": "text"}])
+    _write_bench(base, "BENCH_y.json", [{"tag": "u", "gated": 1.0}])
+    rules = [("BENCH_x.json", "t", "gated", "rel_max", 1.1),
+             ("BENCH_y.json", "u", "gated", "rel_max", 1.1)]
+    cb.warn_unreferenced(str(base), rules=rules)
+    out = capsys.readouterr().out
+    warns = [ln for ln in out.splitlines() if ln.startswith("WARN")]
+    assert len(warns) == 1 and "BENCH_x.json" in warns[0]
+    # bools and strings are not driftable numbers — only the two loose
+    # floats count, and both are named for grepping
+    assert "2 baseline metric(s)" in warns[0]
+    assert "t.loose_a" in warns[0] and "t.loose_b" in warns[0]
+    assert "BENCH_y.json" not in out
+
+
 # ----------------------------------------------------------- fleet e2e (fast)
 def _small_ecfg(**kw):
     base = dict(n_slots=2, max_seq=14, prefill_buckets=(8,), page_tokens=4,
@@ -552,3 +576,223 @@ def test_fleet_autoscale_scales_up_under_burst():
     assert stats.n_requests == 8
     assert any(d == +1 for _, d, _n in stats.scale_events)
     assert stats.routed[1] > 0              # the activated engine served
+
+
+# ------------------------------------------------- fault tolerance (PR 10)
+from repro.serving import FaultPlan, make_plan     # noqa: E402
+
+
+def test_queue_requeue_preserves_priority_original_arrival():
+    """Fault recovery drains a dead engine's queue and re-routes it; the
+    destination queue must re-admit in (priority, ORIGINAL arrival)
+    order — requeued work neither jumps the line nor loses its place."""
+    reqs = [
+        _req(0, arrival=0.3, priority=1),
+        _req(1, arrival=0.1, priority=0),
+        _req(2, arrival=0.2, priority=1),
+        _req(3, arrival=0.4, priority=0),
+        _req(4, arrival=9.0, priority=0),    # not yet arrived
+    ]
+    q = RequestQueue(reqs)
+    assert q.peek(1.0).request_id == 1       # absorb the arrived four
+    moved = q.drain()
+    # ready set in (priority, original arrival), then the future feed
+    assert [r.request_id for r in moved] == [1, 3, 2, 0, 4]
+    assert len(q) == 0
+    # re-admission on the destination replays the same order even though
+    # the requests are pushed post-arrival (absorb time is NOT the key)
+    q2 = RequestQueue()
+    for r in moved:
+        q2.push(r)
+    got = [q2.pop(10.0).request_id for _ in range(5)]
+    assert got == [1, 3, 4, 2, 0]            # (priority, original arrival)
+    # single class: requeue keeps plain arrival FIFO bit-identical
+    fifo = [_req(i, arrival=a) for i, a in enumerate([0.5, 0.2, 0.9, 0.1])]
+    q3 = RequestQueue(fifo)
+    q3.peek(1.0)
+    q4 = RequestQueue()
+    for r in q3.drain():
+        q4.push(r)
+    assert [q4.pop(1.0).arrival for _ in range(4)] == [0.1, 0.2, 0.5, 0.9]
+
+
+def test_fleet_config_rejects_roles_with_kill_faults():
+    """Chunked prefill-role engines cannot replay a migrated request
+    (adopt needs the bucketed prefill cell), so kill/stall plans are
+    rejected up front; pure transfer flaking stays allowed."""
+    kill = FaultPlan(seed=0, kill_engine=1, kill_at_step=2)
+    with pytest.raises(ValueError, match="role split"):
+        FleetConfig(n_engines=2, roles=True, faults=kill)
+    with pytest.raises(ValueError, match="watchdog"):
+        FleetConfig(n_engines=2, watchdog_s=0.0)
+    FleetConfig(n_engines=2, roles=True,
+                faults=FaultPlan(seed=0, transfer_fail_rate=0.25))
+
+
+def test_fault_plan_registry_and_determinism():
+    """Named plans resolve; per-site Philox streams are deterministic
+    and independent across sites (one site's draws never shift
+    another's)."""
+    from repro.serving.faults import FaultInjector
+    plan = make_plan("transfer_flake")
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+    seq_a = [a.transfer_fails("substrate/page_in") for _ in range(40)]
+    # interleave draws on ANOTHER site: page_in's sequence must not move
+    seq_b = []
+    for _ in range(40):
+        b.transfer_fails("substrate/page_out")
+        seq_b.append(b.transfer_fails("substrate/page_in"))
+    assert seq_a == seq_b
+    assert any(seq_a)                        # 0.25 rate over 40 draws
+    assert not make_plan("none").active
+    with pytest.raises(ValueError):
+        make_plan("earthquake")
+
+
+def test_fleet_chaos_kill_bit_parity():
+    """THE headline contract: a 2-engine fp-pool fleet with engine 1
+    killed mid-decode and 10% substrate transfer flaking emits
+    BIT-IDENTICAL token streams to the fault-free fleet — recovery
+    re-routes the dead engine's queue and re-adopts its in-flight slots
+    by teacher-forced refill — and both pools drain exactly free with
+    placement ledgers empty. The whole chaos run replays exactly."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(pool_dtype="fp")
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+
+    clean = _stream(cfg, 6, gen=6)
+    FleetRouter(_clone_engines(eng, cfg, ecfg, 2),
+                FleetConfig(n_engines=2, policy="round_robin")).run(clean)
+
+    plan = FaultPlan(seed=0, transfer_fail_rate=0.10,
+                     kill_engine=1, kill_at_step=3)
+    outs, counters = [], []
+    for _ in range(2):                       # exact replayability
+        chaos = _stream(cfg, 6, gen=6)
+        router = FleetRouter(
+            _clone_engines(eng, cfg, ecfg, 2),
+            FleetConfig(n_engines=2, policy="round_robin", faults=plan),
+        )
+        stats = router.run(chaos)
+        outs.append([r.output for r in chaos])
+        counters.append(stats.faults)
+        assert router.handles[1].dead
+        for h in router.handles:
+            p = h.engine.pager
+            assert p.counters()["free_pages"] == p.n_phys
+            assert (p.ref == 0).all() and p.pins == 0
+            sub = h.engine.substrate
+            if sub is not None:
+                assert p.pool_bytes_used() == sub.ledger.placement_bytes()
+    assert outs[0] == [r.output for r in clean]      # bit parity
+    assert outs[1] == outs[0]
+    assert counters[1] == counters[0]
+    f = counters[0]
+    assert f["engines_killed"] == 1 and f["recoveries"] == 1
+    assert f["restores"] >= 1 and f["reprefilled_tokens"] > 0
+    assert f["retries"] >= 1 and f["retry_bytes"] > 0
+    s = stats.summary()
+    assert s["engines_killed"] == 1
+    assert s["recovery_overhead_tokens"] == f["reprefilled_tokens"]
+
+
+def test_fleet_transfer_flake_retry_accounting():
+    """Pure link flaking (no kill): tokens stay bit-identical, every
+    failed attempt shows up as retry bytes in the substrate ledgers
+    (moved, placement unchanged), and nothing dies."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(pool_dtype="fp")
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    clean = _stream(cfg, 6, gen=6)
+    FleetRouter(_clone_engines(eng, cfg, ecfg, 2),
+                FleetConfig(n_engines=2, policy="round_robin")).run(clean)
+
+    flaky = _stream(cfg, 6, gen=6)
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="round_robin",
+                    faults=make_plan("transfer_flake")),
+    )
+    stats = router.run(flaky)
+    assert [r.output for r in flaky] == [r.output for r in clean]
+    assert stats.faults["engines_killed"] == 0
+    assert stats.faults["retries"] >= 1
+    assert stats.faults["retry_bytes"] > 0
+    assert stats.faults["backoff_s"] > 0
+    for h in router.handles:
+        p = h.engine.pager
+        assert p.counters()["free_pages"] == p.n_phys
+        sub = h.engine.substrate
+        if sub is not None:
+            c = sub.ledger.counters()
+            assert c["retry_bytes"] == pytest.approx(
+                sub.retry_bytes)
+            assert p.pool_bytes_used() == sub.ledger.placement_bytes()
+
+
+def test_fleet_watchdog_recovers_stalled_engine():
+    """A stall longer than the watchdog is indistinguishable from death:
+    the router evacuates the wedged engine and the fleet still serves
+    every request with bit-identical tokens."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(pool_dtype="fp")
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    clean = _stream(cfg, 6, gen=4)
+    FleetRouter(_clone_engines(eng, cfg, ecfg, 2),
+                FleetConfig(n_engines=2, policy="round_robin")).run(clean)
+
+    stalled = _stream(cfg, 6, gen=4)
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="round_robin", watchdog_s=1e-3,
+                    faults=FaultPlan(seed=0, stall_engine=1,
+                                     stall_at_step=2, stall_s=1.0)),
+    )
+    stats = router.run(stalled)
+    assert [r.output for r in stalled] == [r.output for r in clean]
+    assert stats.faults["engines_killed"] == 1
+    assert all(len(r.output) == r.max_new_tokens for r in stalled)
+
+
+def test_fleet_autoscale_drain_frees_pools_immediately():
+    """A scale-down drains the victim through the fault layer's
+    migration path right AT the event — queued work re-routes with its
+    original arrivals instead of tapering off — and the parked engine's
+    pool is verified fully free. Token streams still match the
+    unconstrained fleet bit-for-bit (greedy tokens are placement- and
+    evacuation-invariant)."""
+    cfg = _cfg()
+    ecfg = _small_ecfg(pool_dtype="fp")
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+
+    def _trace():
+        reqs = _stream(cfg, 8, gen=4)
+        for i, r in enumerate(reqs):
+            r.arrival = 1e-5 * i             # burst: drives the scale-up
+        reqs += [r for r in _stream(cfg, 10, gen=4)[8:]]
+        reqs[8].arrival, reqs[9].arrival = 0.02, 0.05   # quiet tail:
+        return reqs                          # drives the scale-down
+
+    clean = _trace()
+    FleetRouter(_clone_engines(eng, cfg, ecfg, 2),
+                FleetConfig(n_engines=2, policy="round_robin")).run(clean)
+
+    acfg = AutoscaleConfig(min_engines=1, max_engines=2,
+                           high_watermark=1.0, low_watermark=0.5,
+                           up_patience=1, down_patience=1, cooldown=0)
+    drained = _trace()
+    router = FleetRouter(
+        _clone_engines(eng, cfg, ecfg, 2),
+        FleetConfig(n_engines=2, policy="round_robin", autoscale=acfg),
+    )
+    stats = router.run(drained)
+    assert any(d == +1 for _, d, _n in stats.scale_events)
+    assert any(d == -1 for _, d, _n in stats.scale_events)
+    assert [r.output for r in drained] == [r.output for r in clean]
+    assert all(len(r.output) == r.max_new_tokens for r in drained)
+    victim = router.handles[1]               # highest-id accepting drains
+    assert not victim.accepting and not victim.dead
+    p = victim.engine.pager
+    assert p.counters()["free_pages"] == p.n_phys
+    assert (p.ref == 0).all() and p.pins == 0

@@ -513,7 +513,7 @@ try:
 
     churn_ops = st.lists(
         st.tuples(
-            st.integers(min_value=0, max_value=7),    # op kind
+            st.integers(min_value=0, max_value=8),    # op kind
             st.integers(min_value=0, max_value=2),    # slot
             st.integers(min_value=1, max_value=64),   # length
         ),
@@ -526,9 +526,11 @@ try:
         """Free-list reuse, block-table consistency, refcount cover,
         no-double-free/no-leak and the COW write-privacy invariant hold
         under any randomized admit/release/extend/step/rebalance/share/
-        pin/speculate sequence (the PR-5 churn test extended with
-        sharing ops and the speculative-decode cycle — lookahead
-        allocation, multi-token commit, rejected-tail truncate —
+        pin/speculate/freeze-thaw sequence (the PR-5 churn test extended
+        with sharing ops, the speculative-decode cycle — lookahead
+        allocation, multi-token commit, rejected-tail truncate — and the
+        fault layer's preemption cycle: freeze holds interleaved with
+        shares and pins, spill-freezes, thaws into different slots —
         debug-mode validation ON)."""
         pcfg = PagerConfig(page_tokens=8, local_budget_bytes=4 * 8 * 100.0,
                            policy="hotness", hot_window=16, cold_touch=0.1,
@@ -536,6 +538,7 @@ try:
         p = KVPager(3, 64, bytes_per_token=100.0, resident_bytes=0.0,
                     pcfg=pcfg)
         pinned = []                       # outstanding test-held pins
+        frozen = []                       # outstanding freeze snapshots
         for kind, slot, length in ops:
             try:
                 if kind == 0:
@@ -586,6 +589,21 @@ try:
                             g = p.phys[
                                 s, p._page_of(int(p.lengths[s]) - 1)]
                             assert p.ref[g] == 1
+                elif kind == 7:
+                    # freeze/thaw churn (the fault layer's preemption):
+                    # a live slot's table is snapshotted and handed back
+                    # — held under a freeze pin (thawable) or spilled
+                    # outright — and held snapshots thaw into whichever
+                    # slot is free, interleaved with shares and pins
+                    owned = np.nonzero(p.valid[slot])[0]
+                    contig = (owned.size > 0
+                              and (owned == np.arange(owned.size)).all())
+                    if frozen and not p.valid[slot].any():
+                        p.thaw(slot, frozen.pop(0))
+                    elif contig and len(frozen) < 2:
+                        snap = p.freeze(slot, spill=(length % 2 == 0))
+                        if snap["pages"] is not None:
+                            frozen.append(snap)
                 else:
                     # pin/unpin churn (the trie's non-slot references)
                     if len(pinned) < 2 and p.valid[slot].any():
@@ -602,12 +620,16 @@ try:
                 assert "pool exhausted" in str(e)
                 while pinned:
                     p.unpin([pinned.pop()])
+                while frozen:
+                    p.drop_frozen(frozen.pop())
                 for s in range(p.n_slots):
                     p.release(s)
             _pager_invariants(p)
         # drain: every page returns exactly once, all refcounts zero
         while pinned:
             p.unpin([pinned.pop()])
+        while frozen:
+            p.drop_frozen(frozen.pop())
         for s in range(p.n_slots):
             p.release(s)
         _pager_invariants(p)
@@ -1430,3 +1452,85 @@ def test_pager_speculative_cycle_refcounts_exact():
     assert freed == 1
     assert len(p._free_phys) == free0 - 1
     _pager_invariants(p)
+
+
+# ------------------------------------------- fault-layer preemption (PR 10)
+def test_engine_preempts_low_priority_under_pool_exhaustion():
+    """Admission under pool-exhaustion preempts instead of deadlocking:
+    with pages stranded under an external hold (a handoff guard pin in
+    flight), a high-priority prompt that cannot get pages spill-freezes
+    the lowest-priority active decode slot, runs, and the victim resumes
+    by teacher-forced refill — BOTH token streams bit-identical to an
+    uncontended engine (fp pools), the pool drained exactly free."""
+    cfg = _cfg()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        n_slots=2, max_seq=16, prefill_buckets=(8, 12), page_tokens=4,
+        hot_window=8, local_budget_frac=0.5, admission="greedy",
+        paged=True, pool_dtype="fp",
+    )
+    rng = np.random.default_rng(21)
+    tok_b = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    tok_c = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+
+    # uncontended reference streams (greedy decode: a request's tokens
+    # depend only on its prompt, so solo runs give the ground truth)
+    ref = ServingEngine.build(cfg, CTX, ecfg, params=params)
+    ref_b = Request(request_id=0, tokens=tok_b, max_new_tokens=6)
+    ref_c = Request(request_id=1, tokens=tok_c, max_new_tokens=4)
+    ref.run([ref_b, ref_c])
+
+    eng = ServingEngine.build(cfg, CTX, ecfg, params=params)
+    # phase 1: a sacrificial request decodes mid-flight, then its pages
+    # go under a guard pin and the slot retires — the handoff-in-flight
+    # shape: 3 of 8 physical pages stranded outside any slot
+    sac = Request(request_id=7, tokens=tok_b.copy(), max_new_tokens=6,
+                  priority=1)
+    eng.run([sac], max_steps=2)
+    slot = next(s for s in eng.batcher.slots if s.active)
+    held = eng.pager.phys[slot.index, eng.pager.valid[slot.index]].copy()
+    assert held.size == 3
+    eng.pager.pin(held)
+    eng._retire(slot)
+
+    # phase 2: the low-priority victim decodes mid-flight (3 more pages)
+    b = Request(request_id=0, tokens=tok_b, max_new_tokens=6, priority=1)
+    eng.run([b], max_steps=4)
+    assert eng.batcher.n_active == 1
+    free0 = eng.pager.counters()["free_pages"]
+
+    # phase 3: the high-priority prompt needs 3 pages but only 2 are
+    # free — the OLD allocator raised "page pool exhausted" here
+    c = Request(request_id=1, tokens=tok_c, max_new_tokens=4, priority=0)
+    assert free0 < -(-c.prompt_len // ecfg.page_tokens)
+    stats = eng.run([c])
+
+    np.testing.assert_array_equal(np.asarray(c.output),
+                                  np.asarray(ref_c.output))
+    np.testing.assert_array_equal(np.asarray(b.output),
+                                  np.asarray(ref_b.output))
+    assert stats.faults["preempts"] >= 1
+    assert stats.faults["spills"] >= 1
+    assert stats.faults["restores"] >= 1
+    assert stats.faults["reprefilled_tokens"] > 0
+    assert stats.faults["migrations_in"] == 0     # same-engine restore
+    # high-priority admission beat the victim's restore
+    assert c.admitted < b.finished
+
+    eng.pager.unpin(held)
+    p = eng.pager
+    assert sorted(p._free_phys) == list(range(p.n_phys))
+    assert (p.ref == 0).all() and p.pins == 0 and not eng.frozen
+
+
+def test_engine_fault_free_stats_empty():
+    """`ServeStats.faults` is {} on fault-free runs — the bench and CI
+    baselines never see the fault block unless something fired."""
+    cfg = _cfg()
+    ecfg = EngineConfig(n_slots=2, max_seq=32, prefill_buckets=(8,),
+                        page_tokens=4, hot_window=8, local_budget_frac=0.5,
+                        admission="greedy")
+    eng = ServingEngine.build(cfg, CTX, ecfg)
+    stats = eng.run(_burst(3, cfg.vocab_size, 8, 4, seed=3))
+    assert stats.faults == {}
+    assert "fault_preempts" not in stats.summary()
